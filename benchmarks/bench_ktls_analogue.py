@@ -1,0 +1,75 @@
+"""Paper Fig. 6c/6d (kTLS): encryption maps to KV-cache quantisation.
+
+"SW kTLS" = a separate quantise/dequantise pass over the gathered KV each
+step (the encrypt-and-copy the paper describes in B.1 — an extra full pass
+over the payload that no software trick can fuse away once the data has
+been gathered);
+"HW kTLS" = quantisation fused into the attention read of anchored pages
+(the NIC-inline analogue: zero extra passes).
+
+Expected (paper) shape: SW mode *hurts* the zero-copy datapath (fragmented
+payload + extra pass), HW mode unlocks it. We measure the decode-attention
+core under the three regimes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv, time_fn
+
+
+def _quant(x):
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True) + 1e-9
+    q = jnp.clip(jnp.round(x / amax * 127), -127, 127).astype(jnp.int8)
+    return q, amax
+
+
+def _dequant(q, amax):
+    return q.astype(jnp.float32) * amax / 127.0
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    B, Hq, Hkv, hd = 8, 12, 12, 64
+    for ctx in (256, 1024, 4096):
+        q = jnp.array(rng.standard_normal((B, Hq, hd)), jnp.float32)
+        kv = jnp.array(rng.standard_normal((B, ctx, 2, Hkv, hd)), jnp.float32)
+        kq, kamax = _quant(kv)
+
+        @jax.jit
+        def plain(q, kv):
+            k, v = kv[:, :, 0], kv[:, :, 1]
+            s = jnp.einsum("bhd,bthd->bht", q, k)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bht,bthd->bhd", p, v)
+
+        @jax.jit
+        def sw_mode(q, kq, kamax):
+            # separate pass: dequantise the WHOLE payload to a new buffer
+            # (the encrypt-and-copy), then attend
+            kv = _dequant(kq, kamax)
+            return plain(q, kv)
+
+        @jax.jit
+        def hw_mode(q, kq, kamax):
+            # fused: dequantise inside the attention contraction (inline)
+            k = _dequant(kq[:, :, 0], kamax[:, :, 0])
+            s = jnp.einsum("bhd,bthd->bht", q, k)
+            p = jax.nn.softmax(s, axis=-1)
+            v = _dequant(kq[:, :, 1], kamax[:, :, 1])
+            return jnp.einsum("bht,bthd->bhd", p, v)
+
+        t_plain = time_fn(lambda: plain(q, kv).block_until_ready(), iters=5)
+        t_sw = time_fn(lambda: sw_mode(q, kq, kamax).block_until_ready(), iters=5)
+        t_hw = time_fn(lambda: hw_mode(q, kq, kamax).block_until_ready(), iters=5)
+        csv(f"fig6c_ktls_ctx{ctx}_plain", t_plain * 1e6, "mode=plaintext")
+        csv(f"fig6c_ktls_ctx{ctx}_sw", t_sw * 1e6,
+            f"slowdown_vs_plain={t_sw/t_plain:.2f} (separate pass)")
+        csv(f"fig6c_ktls_ctx{ctx}_hw", t_hw * 1e6,
+            f"slowdown_vs_plain={t_hw/t_plain:.2f} (fused inline)")
+
+
+if __name__ == "__main__":
+    main()

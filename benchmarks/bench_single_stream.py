@@ -1,0 +1,29 @@
+"""Paper Fig. 6e: single-stream latency + host-work share.
+
+End-to-end latency is expected to be comparable (dominated by model
+compute, the network-propagation analogue); the win shows in host-boundary
+work per request — Libra's is metadata-sized, the standard stack scales
+with the payload."""
+from __future__ import annotations
+
+from benchmarks.common import csv, prompts_for, proxy_model, run_engine
+from repro.serving.engine import LibraEngine, StandardEngine
+
+
+def main() -> None:
+    cfg, model, params = proxy_model()
+    for ctx in (32, 128, 320):
+        prompts = prompts_for(cfg.vocab_size, 1, ctx)
+        libra, t_l = run_engine(LibraEngine, model, params, prompts, 8,
+                                max_batch=1, max_len=ctx + 16, page_size=8)
+        std, t_s = run_engine(StandardEngine, model, params, prompts, 8,
+                              max_batch=1, max_len=ctx + 16)
+        csv(f"fig6e_ctx{ctx}_latency", t_l * 1e6,
+            f"libra_s={t_l:.3f} std_s={t_s:.3f} ratio={t_l/t_s:.2f}")
+        csv(f"fig6e_ctx{ctx}_boundary_bytes", 0.0,
+            f"libra={libra.stats.d2h_bytes + libra.stats.h2d_bytes} "
+            f"std={std.stats.d2h_bytes + std.stats.h2d_bytes}")
+
+
+if __name__ == "__main__":
+    main()

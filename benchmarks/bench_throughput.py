@@ -1,0 +1,47 @@
+"""Paper Fig. 6a/6b: throughput and P99 latency vs payload size for the four
+stacks (Libra / Standard / Copier / Static-aka-F-Stack).
+
+Payload size maps to context length; the Static engine gets a fixed memory
+budget so its attainable concurrency collapses as payloads grow (the
+paper's F-Stack large-payload inversion)."""
+from __future__ import annotations
+
+from benchmarks.common import csv, prompts_for, proxy_model, run_engine
+from repro.serving.engine import (
+    CopierEngine,
+    LibraEngine,
+    StandardEngine,
+    StaticEngine,
+)
+
+CTX_SIZES = (16, 64, 160, 320)
+N_REQ = 8
+GEN = 8
+BUDGET = 26_000_000  # bytes: fits ~8 slots at ctx 64 but ~1 at ctx 320
+
+
+def main() -> None:
+    cfg, model, params = proxy_model()
+    for ctx in CTX_SIZES:
+        max_len = ctx + GEN + 8
+        prompts = prompts_for(cfg.vocab_size, N_REQ, ctx)
+        rows = {}
+        for name, cls, kw in (
+            ("libra", LibraEngine, dict(max_batch=8, page_size=8)),
+            ("standard", StandardEngine, dict(max_batch=8)),
+            ("copier", CopierEngine, dict(max_batch=8)),
+            ("static", StaticEngine, dict(memory_budget=BUDGET)),
+        ):
+            eng, dt = run_engine(cls, model, params, prompts, GEN,
+                                 max_len=max_len, **kw)
+            rows[name] = (eng.throughput_tokens() / dt, eng.p99_latency(),
+                          eng.max_batch)
+        base = rows["standard"][0]
+        for name, (tput, p99, b) in rows.items():
+            csv(f"fig6_ctx{ctx}_{name}", 1e6 / max(tput, 1e-9),
+                f"tok/s={tput:.1f} speedup={tput/base:.2f} "
+                f"p99_ms={p99*1000:.1f} batch={b}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.parser import TokenStreamParser
+from repro.models.registry import build_model
+
+
+def proxy_model(page_size: int = 8):
+    cfg = get_reduced("libra-proxy-125m")
+    model = build_model(cfg, page_size=page_size)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn(*args)
+    return (time.perf_counter() - t0) / iters
+
+
+def run_engine(cls, model, params, prompts, gen, **kw):
+    eng = cls(model, params, **kw)
+    for p in prompts:
+        eng.submit(p, max_new_tokens=gen)
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    return eng, dt
+
+
+def prompts_for(vocab: int, n: int, length: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab - 1, length) for _ in range(n)]
+
+
+def csv(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,72 @@
+"""Benchmark harness: one module per paper table/figure, plus the roofline
+summary derived from the dry-run artifacts.
+
+Prints ``name,us_per_call,derived`` CSV lines per benchmark.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+BENCHES = [
+    ("fig1_copy_overhead", "benchmarks.bench_copy_overhead"),
+    ("fig6_throughput_latency", "benchmarks.bench_throughput"),
+    ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
+    ("fig6e_single_stream", "benchmarks.bench_single_stream"),
+    ("fig8_vs_copier", "benchmarks.bench_sota"),
+    ("fig9_microarch", "benchmarks.bench_microarch"),
+]
+
+
+def roofline_summary() -> None:
+    """Collapse results/dryrun/*.json into the §Roofline table lines."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = sorted(glob.glob(os.path.join(here, "results", "dryrun", "*.json")))
+    if not files:
+        print("roofline_summary,0.0,no dryrun artifacts (run repro.launch.dryrun)")
+        return
+    for f in files:
+        r = json.load(open(f))
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r.get("skipped"):
+            print(f"roofline_{cell},0.0,SKIP ({r['reason'][:60]})")
+            continue
+        if not r.get("ok"):
+            print(f"roofline_{cell},0.0,FAIL {r.get('error','')[:80]}")
+            continue
+        t = r["roofline"]
+        step_s = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        print(f"roofline_{cell},{step_s*1e6:.1f},"
+              f"dom={t['dominant']} comp={t['compute_s']:.4f} "
+              f"mem={t['memory_s']:.4f} coll={t['collective_s']:.4f} "
+              f"useful={t['useful_ratio']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    import importlib
+
+    for name, mod in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            importlib.import_module(mod).main()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    if not args.only or "roofline" in (args.only or ""):
+        print("# --- roofline (from dry-run artifacts) ---")
+        roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""The paper's scenario, end to end: an L7-proxy-style router in front of
+backend models, with zero-copy payload forwarding.
+
+A router inspects ONLY each request's header tokens (selective copy) to
+pick a backend; the bulk payload context is anchored once and handed to
+the chosen backend by VPI — no payload bytes move, no re-prefill. The
+standard proxy re-processes (re-prefills) the payload at the backend.
+
+  PYTHONPATH=src python examples/proxy_serving.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.parser import TokenStreamParser
+from repro.models.registry import build_model
+from repro.serving.engine import LibraEngine
+
+HEADER = 4   # routing prefix tokens (the HTTP-header analogue)
+
+
+def main() -> None:
+    cfg = get_reduced("libra-proxy-125m")
+    model = build_model(cfg, page_size=8)
+    params = model.init_params(jax.random.PRNGKey(0))
+    parser = TokenStreamParser(header_len=HEADER)
+
+    # one engine instance = one shared anchored pool serving two logical
+    # backends (route 0 / route 1) behind the router
+    eng = LibraEngine(model, params, max_batch=4, max_len=96, page_size=8,
+                      parser=parser)
+    rng = np.random.default_rng(0)
+
+    n_req, fwd_bytes, hdr_bytes = 8, 0, 0
+    for i in range(n_req):
+        route_tag = i % 2
+        header = np.full(HEADER, 100 + route_tag)
+        payload = rng.integers(1, cfg.vocab_size - 1, 40)
+        prompt = np.concatenate([header, payload])
+
+        # --- router: reads ONLY the header (selective copy) ---
+        decision = int(header[0]) - 100
+        hdr_bytes += header.nbytes
+
+        # --- ingress: prefill anchors the payload KV, returns a handle ---
+        r = eng.submit(prompt, max_new_tokens=6)
+        while r.handle is None:   # admission may wait for a free slot
+            eng.step()
+
+        # --- zero-copy forwarding: backend takes ownership via VPI ---
+        if not r.done:
+            h = eng.forward_handle(r)
+            fwd_bytes += h.seq_len * eng._kv_bytes_per_token()
+            eng.pool.release(h)  # backend done with the shared context
+        print(f"req {r.rid}: route={decision} header={header[:2]}... "
+              f"anchored {len(r.handle.pages) if r.handle else 0} pages "
+              f"(vpi={r.handle.vpi & 0xffff:#x}...)" if r.handle else "")
+    eng.run()
+
+    s = eng.stats
+    print("\n--- proxy summary ---")
+    print(f"requests routed: {n_req}; header bytes inspected: {hdr_bytes}")
+    print(f"payload KV forwarded zero-copy: {s.zero_copy_bytes/1e6:.2f} MB")
+    print(f"payload bytes moved through the router: 0 (VPI handoff)")
+    print(f"standard proxy would re-prefill {s.anchored_bytes/1e6:.2f} MB "
+          f"of context at the backend")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Architecture config registry.
+
+One module per assigned architecture; each exports ``CONFIG`` (the exact
+published configuration) and ``reduced()`` (a small same-family config for
+CPU smoke tests). ``get_config(name)`` / ``get_reduced(name)`` look them up.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.common.types import ModelConfig
+
+_ARCH_MODULES = {
+    "phi3-mini-3.8b": "repro.configs.phi3_mini",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini",
+    "minicpm-2b": "repro.configs.minicpm",
+    "mistral-nemo-12b": "repro.configs.mistral_nemo",
+    "hymba-1.5b": "repro.configs.hymba",
+    "xlstm-350m": "repro.configs.xlstm",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "qwen3-moe-30b-a3b": "repro.configs.qwen3_moe",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe",
+    "internvl2-76b": "repro.configs.internvl2",
+    # the paper's own scenario: a tiny router/proxy LM used by the serving
+    # examples and benchmarks (not part of the 10-arch assignment)
+    "libra-proxy-125m": "repro.configs.libra_proxy",
+}
+
+ARCHS: List[str] = [k for k in _ARCH_MODULES if k != "libra-proxy-125m"]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCHS}

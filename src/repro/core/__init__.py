@@ -1,0 +1,40 @@
+"""Libra core: programmable selective data movement (the paper's contribution).
+
+Mechanism (this package) / policy (user parsers) split:
+
+* ``vpi``            — 64-bit opaque anchored-payload handles + registry
+* ``anchor_pool``    — paged, refcounted payload pool allocator + accounting
+* ``parser``         — programmable metadata-boundary policies (eBPF analogue)
+* ``state_machine``  — RX/TX lifecycle state machines (paper Figs. 4–5)
+* ``stream``         — connections + token payload pool (protocol testbed)
+* ``ingress``        — selective-copy recv path
+* ``egress``         — metadata-copy + zero-copy ownership-transfer send path
+"""
+from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
+from repro.core.egress import expire_teardowns, libra_close, libra_send
+from repro.core.ingress import libra_recv
+from repro.core.parser import (
+    BUILTIN_PARSERS,
+    ChunkedParser,
+    DelimiterParser,
+    LengthPrefixedParser,
+    TokenStreamParser,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+    kmp_find,
+)
+from repro.core.state_machine import RxStateMachine, St, TxStateMachine
+from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.vpi import VPI_BYTES, VpiEntry, VpiRegistry
+
+__all__ = [
+    "AnchorPool", "PageRef", "PoolExhausted",
+    "VpiRegistry", "VpiEntry", "VPI_BYTES",
+    "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
+    "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",
+    "build_message", "build_delimited_message", "build_chunked_message",
+    "RxStateMachine", "TxStateMachine", "St",
+    "Connection", "TokenPool", "CopyCounters",
+    "libra_recv", "libra_send", "libra_close", "expire_teardowns",
+]

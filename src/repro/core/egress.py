@@ -1,0 +1,117 @@
+"""Egress datapath — §3.4: payload reassembly with L7 state synchronisation.
+
+``libra_send`` wraps the instrumented sendmsg with the two-phase eBPF
+orchestration:
+
+  Pre-Send  : parse new metadata, extract + resolve the embedded VPI
+              (map hit -> FAST_PATH; miss -> FALLBACK_BYPASS)
+  Data plane: copy only the new metadata; transfer ownership of the
+              anchored pages into the egress stream (two-phase staging,
+              §A.2/§A.3 — no payload bytes move)
+  Post-Send : cumulative byte accounting (non-blocking partial sends);
+              on completion, delete the VPI entry, free pages (refcount,
+              §A.4) and reset BOTH state machines (cross-datapath cleanup)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.anchor_pool import PageRef
+from repro.core.ingress import reset_rx_from_tx
+from repro.core.state_machine import St
+from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.vpi import VpiRegistry
+
+
+def _extract_vpi(buf: np.ndarray, meta_len: int) -> Optional[int]:
+    """The VPI occupies the single int64 slot right after the metadata."""
+    if len(buf) < meta_len + 1:
+        return None
+    v = VpiRegistry.from_token(int(buf[meta_len]))
+    return v if v != 0 else None
+
+
+def libra_send(
+    src_conn: Connection,
+    dst_conn: Connection,
+    buf: np.ndarray,
+    pool: TokenPool,
+    registry: VpiRegistry,
+    counters: CopyCounters,
+    send_budget: Optional[int] = None,
+) -> int:
+    """Transmit the proxy's outgoing buffer [new_metadata..., VPI] on
+    ``dst_conn``. Returns the number of *logical* bytes accepted (like a
+    non-blocking send). ``send_budget`` models a constrained send buffer.
+    """
+    sm = dst_conn.tx_machine
+    decision = sm.pre_send(buf, _extract_vpi)
+
+    if decision.state in (St.DEFAULT, St.FALLBACK_BYPASS, St.METADATA_PARSED):
+        n = len(buf) if send_budget is None else min(len(buf), send_budget)
+        dst_conn.tx_stream.append(np.asarray(buf[:n]).copy())
+        counters.full_copied += n
+        if decision.state != St.DEFAULT:
+            done = sm.post_send(n)
+            if done:
+                reset_rx_from_tx(src_conn)
+        return n
+
+    assert decision.state == St.FAST_PATH
+    entry = registry.resolve(decision.vpi)
+    assert entry is not None
+    pages = [PageRef(*pg) for pg in entry.pages]
+
+    # data plane: selective copy of the new metadata only
+    meta = np.asarray(buf[: sm.meta_len]).copy()
+    counters.meta_copied += len(meta)
+
+    # §A.2 two-phase ownership transfer through the staging list
+    staged = pool.alloc.stage_transfer(pages)
+    owned = pool.alloc.commit_transfer(staged)
+
+    # zero-copy "transmission": the NIC consumes anchored pages in place.
+    payload = pool.read_payload(owned, entry.payload_len)
+    counters.zero_copied += entry.payload_len
+    out = np.concatenate([meta, payload])
+
+    logical = len(meta) + entry.payload_len
+    n = logical if send_budget is None else min(logical, send_budget)
+    dst_conn.tx_stream.append(out[:n])
+
+    done = sm.post_send(n)
+    if done:
+        # cross-datapath cleanup: VPI entry out of the global map, pages
+        # refcount-released, RX machine of the source connection reset.
+        if registry.release(decision.vpi):
+            pool.alloc.free_pages_list(owned)
+        src_conn.anchored.pop(decision.vpi, None)
+        reset_rx_from_tx(src_conn)
+    return n
+
+
+def libra_close(
+    conn: Connection,
+    pool: TokenPool,
+    registry: VpiRegistry,
+    now_tick: int,
+) -> int:
+    """§A.4 safe teardown: if payloads are still anchored when the socket
+    closes, defer the free by a grace period instead of dangling."""
+    conn.closed = True
+    deferred = 0
+    for vpi, (pages, _ln) in list(conn.anchored.items()):
+        if vpi in registry:
+            registry.begin_teardown(vpi, now_tick)
+            pool.alloc.defer_free(pages, now_tick + registry.grace_ticks)
+            deferred += 1
+        conn.anchored.pop(vpi, None)
+    return deferred
+
+
+def expire_teardowns(pool: TokenPool, registry: VpiRegistry, now_tick: int) -> int:
+    """Periodic tick: release grace-period-expired anchors (§A.4)."""
+    registry.expire_teardowns(now_tick)
+    return pool.alloc.expire_deferred(now_tick)

@@ -1,0 +1,127 @@
+"""Ingress datapath — §3.3: state-driven selective copy.
+
+``libra_recv`` is the instrumented recvmsg: the RX state machine (eBPF
+RX-Prog analogue) decides, per call, which data-plane action runs:
+
+  DEFAULT          -> native full copy (unparseable / short payload)
+  METADATA_PARSED  -> copy only metadata; defer VPI (no buffer space)
+  WRITE_VPI        -> copy remaining metadata, anchor payload, inject VPI
+  FAST_PATH        -> advance the logical read offset; copy nothing
+
+The returned length is the *logical* message length (metadata + anchored
+payload), capped at the requested size — recv transparency (§3.3 box 3).
+The RX machine stays in FAST_PATH until the egress path confirms full
+transmission and resets it (cross-datapath cleanup, §3.4 box 3).
+
+Pool exhaustion follows §A.1: the prefix that fits is anchored zero-copy;
+the remainder is served through the native full-copy path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.anchor_pool import PoolExhausted
+from repro.core.state_machine import St
+from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.vpi import VpiRegistry
+
+
+def libra_recv(
+    conn: Connection,
+    buf_len: int,
+    pool: TokenPool,
+    registry: VpiRegistry,
+    counters: CopyCounters,
+) -> Tuple[np.ndarray, int]:
+    """Returns (user_visible_buffer, logical_length).
+
+    On the selective-copy path the buffer contains [metadata..., VPI] while
+    the logical length covers metadata + anchored payload.
+    """
+    sm = conn.rx_machine
+
+    # §A.1 drain mode: a previous message overflowed the pool; the rest of
+    # its payload takes the native copy path.
+    drain = getattr(conn, "rx_drain_remaining", 0)
+    if drain > 0:
+        n = min(drain, conn.rx_available(), buf_len)
+        out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
+        conn.rx_advance(n)
+        counters.full_copied += n
+        conn.rx_drain_remaining = drain - n
+        if conn.rx_drain_remaining == 0:
+            sm.reset()
+        return out, n
+
+    window = conn.rx_window(sm.parser.lookahead)
+    if len(window) == 0:
+        return np.zeros((0,), np.int64), 0
+
+    decision = sm.on_recv(window, buf_len)
+
+    if decision.state == St.DEFAULT:
+        n = min(decision.full_copy, conn.rx_available(), buf_len)
+        out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
+        conn.rx_advance(n)
+        counters.full_copied += n
+        sm.reset()
+        return out, n
+
+    if decision.state == St.METADATA_PARSED:
+        n = decision.copy_meta
+        out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
+        conn.rx_advance(n)
+        counters.meta_copied += n
+        return out, n
+
+    if decision.state == St.WRITE_VPI:
+        meta = conn.rx_queue[
+            conn.rx_read_off : conn.rx_read_off + decision.copy_meta
+        ].copy()
+        conn.rx_advance(decision.copy_meta)
+        counters.meta_copied += len(meta)
+        payload_len = sm.payload_len
+        payload = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + payload_len]
+        try:
+            pages = pool.alloc.alloc_sequence(payload_len)
+        except PoolExhausted:
+            # anchor nothing; serve the whole payload via native copies
+            n = min(payload_len, buf_len - len(meta)) if buf_len > len(meta) else 0
+            out = np.concatenate([meta, payload[:n].copy()])
+            conn.rx_advance(n)
+            counters.full_copied += len(out)
+            conn.rx_drain_remaining = payload_len - n
+            if conn.rx_drain_remaining == 0:
+                sm.reset()
+            return out, len(out)
+        pool.write_payload(pages, payload)
+        counters.anchored += payload_len
+        counters.allocs += 1
+        conn.rx_advance(payload_len)
+        vpi = registry.register(
+            "token-pool",
+            [(p.shard, p.local_pid, p.base_pos) for p in pages],
+            payload_len,
+        )
+        conn.anchored[vpi] = (pages, payload_len)
+        out = np.concatenate([meta, np.array([VpiRegistry.to_token(vpi)], np.int64)])
+        counters.vpi_injected += 1
+        logical = min(len(meta) + payload_len, buf_len)
+        sm.on_payload_consumed(logical - len(meta))
+        return out, logical
+
+    if decision.state == St.FAST_PATH:
+        # remaining logical length, zero physical copies
+        n = min(decision.skip_payload, buf_len)
+        sm.on_payload_consumed(n)
+        return np.zeros((0,), np.int64), n
+
+    raise AssertionError(decision.state)
+
+
+def reset_rx_from_tx(conn: Connection) -> None:
+    """Cross-datapath cleanup: called by the egress path once the anchored
+    payload has been fully transmitted (§3.4 Post-Send)."""
+    conn.rx_machine.reset()

@@ -1,0 +1,101 @@
+"""Stream-level substrate for the Libra core: connections + token payload pool.
+
+This is the protocol-agnostic layer the paper's Figure 3(b) describes,
+expressed over int64 token streams (1 token = 8 bytes, so a VPI occupies
+exactly one stream slot). The serving engine reuses the same machinery with
+KV pages as the anchored payload; this layer anchors raw token payloads so
+the core can be tested and benchmarked in isolation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.anchor_pool import AnchorPool, PageRef
+from repro.core.parser import ParserPolicy
+from repro.core.state_machine import RxStateMachine, St, TxStateMachine
+from repro.core.vpi import VpiRegistry
+
+
+class TokenPool:
+    """Device-side payload pool stand-in: [n_shards * pages_per_shard, page]
+    int64 pages. Payload tokens are written once on ingress (DMA analogue)
+    and never moved again."""
+
+    def __init__(self, alloc: AnchorPool):
+        self.alloc = alloc
+        self.data = np.zeros((alloc.n_shards, alloc.pages_per_shard,
+                              alloc.page_size), np.int64)
+
+    def write_payload(self, pages: List[PageRef], payload: np.ndarray) -> None:
+        ps = self.alloc.page_size
+        for pg in pages:
+            lo = pg.base_pos
+            hi = min(lo + ps, len(payload))
+            if lo >= len(payload):
+                break
+            self.data[pg.shard, pg.local_pid, : hi - lo] = payload[lo:hi]
+
+    def read_payload(self, pages: List[PageRef], length: int) -> np.ndarray:
+        ps = self.alloc.page_size
+        out = np.zeros((length,), np.int64)
+        for pg in pages:
+            lo = pg.base_pos
+            hi = min(lo + ps, length)
+            if lo >= length:
+                break
+            out[lo:hi] = self.data[pg.shard, pg.local_pid, : hi - lo]
+        return out
+
+
+@dataclasses.dataclass
+class CopyCounters:
+    """Telemetry mirrored from the paper's Figure 9 categories."""
+    meta_copied: int = 0        # Meta Sel-Copy
+    full_copied: int = 0        # Std Copy (fallback/baseline path)
+    anchored: int = 0           # payload tokens anchored (written once)
+    zero_copied: int = 0        # Meta SKB-Trans: ownership-transferred tokens
+    vpi_injected: int = 0
+    allocs: int = 0             # Meta Alloc events
+
+    def total_user_copies(self) -> int:
+        return self.meta_copied + self.full_copied
+
+
+class Connection:
+    """One proxied connection pair (client<->proxy or proxy<->backend)."""
+
+    _next_id = 0
+
+    def __init__(self, parser: ParserPolicy, registry: VpiRegistry,
+                 min_payload: int = 1):
+        Connection._next_id += 1
+        self.conn_id = Connection._next_id
+        self.rx_queue = np.zeros((0,), np.int64)  # socket receive queue
+        self.rx_read_off = 0
+        self.rx_machine = RxStateMachine(parser, min_payload=min_payload)
+        self.tx_machine = TxStateMachine(parser, registry.resolve,
+                                         min_payload=min_payload)
+        self.tx_stream: List[np.ndarray] = []     # what actually went out
+        self.anchored: Dict[int, Tuple[List[PageRef], int]] = {}  # vpi -> (pages, len)
+        self.closed = False
+
+    # -- socket plumbing -----------------------------------------------------
+    def deliver(self, data: np.ndarray) -> None:
+        """Network delivers bytes into the receive queue (NIC DMA analogue)."""
+        self.rx_queue = np.concatenate([self.rx_queue, data.astype(np.int64)])
+
+    def rx_window(self, lookahead: int) -> np.ndarray:
+        return self.rx_queue[self.rx_read_off : self.rx_read_off + lookahead]
+
+    def rx_advance(self, n: int) -> None:
+        self.rx_read_off += n
+        # periodically compact the queue (kernel would free skbs)
+        if self.rx_read_off > 65536:
+            self.rx_queue = self.rx_queue[self.rx_read_off :]
+            self.rx_read_off = 0
+
+    def rx_available(self) -> int:
+        return len(self.rx_queue) - self.rx_read_off

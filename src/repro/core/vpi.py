@@ -1,0 +1,142 @@
+"""Virtual Payload Identifier (VPI) — §3.2 of the paper.
+
+A VPI is a 64-bit opaque, position-independent handle injected into the
+control-plane-visible stream in place of an anchored payload. Properties
+kept from the paper:
+
+* **Secure mapping** — the VPI is a keyed blake2b hash (never a raw pool
+  address), so control-plane code cannot learn pool layout (the KASLR
+  argument transfers: handles must not leak device memory structure).
+* **Position independence** — the handle survives arbitrary reshuffling of
+  the metadata stream (it is just 8 bytes of payload to the proxy).
+* **Admission policy** — payloads smaller than the VPI itself (or smaller
+  than ``min_payload``) are not anchored; they take the full-copy path.
+* **Refcounts + deferred teardown** (§A.4) — entries are refcounted (prefix
+  sharing / multi-forwarding) and freed through a grace period.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import struct
+from typing import Dict, List, Optional, Tuple
+
+VPI_BYTES = 8
+
+
+@dataclasses.dataclass
+class VpiEntry:
+    vpi: int
+    pool_id: str
+    # pages: list of (shard, local_page_id, base_position)
+    pages: List[Tuple[int, int, int]]
+    payload_len: int           # logical payload length (tokens)
+    refcount: int = 1
+    state: str = "ANCHORED"    # ANCHORED | TEARDOWN
+    teardown_deadline: Optional[int] = None  # engine tick for deferred free
+    meta: Optional[dict] = None
+
+
+class VpiRegistry:
+    """The global <VPI, anchored-payload> map (the paper's global eBPF map)."""
+
+    def __init__(self, secret: Optional[bytes] = None, grace_ticks: int = 5):
+        self._secret = secret if secret is not None else os.urandom(16)
+        self._entries: Dict[int, VpiEntry] = {}
+        self._counter = 0
+        self.grace_ticks = grace_ticks
+        # telemetry (used by benchmarks & tests)
+        self.stats = {"registered": 0, "hits": 0, "misses": 0, "released": 0,
+                      "deferred": 0, "collisions": 0}
+
+    # -- handle generation ------------------------------------------------
+    def _make_vpi(self) -> int:
+        while True:
+            self._counter += 1
+            h = hashlib.blake2b(
+                struct.pack("<Q", self._counter), key=self._secret, digest_size=8
+            ).digest()
+            vpi = struct.unpack("<Q", h)[0]
+            # never hand out 0 (reserved as "no VPI")
+            if vpi != 0 and vpi not in self._entries:
+                return vpi
+            self.stats["collisions"] += 1
+
+    # -- registry ops ------------------------------------------------------
+    def register(self, pool_id: str, pages, payload_len: int, meta=None) -> int:
+        vpi = self._make_vpi()
+        self._entries[vpi] = VpiEntry(vpi, pool_id, list(pages), payload_len,
+                                      meta=meta)
+        self.stats["registered"] += 1
+        return vpi
+
+    def resolve(self, vpi: int) -> Optional[VpiEntry]:
+        e = self._entries.get(vpi)
+        if e is None or e.state == "TEARDOWN":
+            self.stats["misses"] += 1
+            return None
+        self.stats["hits"] += 1
+        return e
+
+    def retain(self, vpi: int) -> None:
+        self._entries[vpi].refcount += 1
+
+    def release(self, vpi: int) -> bool:
+        """Drop a reference; returns True when the entry is fully gone."""
+        e = self._entries.get(vpi)
+        if e is None:
+            return True
+        e.refcount -= 1
+        if e.refcount <= 0:
+            del self._entries[vpi]
+            self.stats["released"] += 1
+            return True
+        return False
+
+    # -- deferred teardown (§A.4) -----------------------------------------
+    def begin_teardown(self, vpi: int, now_tick: int) -> None:
+        """Socket closed while payload still anchored: keep the anchor alive
+        for a grace period instead of dangling."""
+        e = self._entries.get(vpi)
+        if e is not None:
+            e.state = "TEARDOWN"
+            e.teardown_deadline = now_tick + self.grace_ticks
+            self.stats["deferred"] += 1
+
+    def expire_teardowns(self, now_tick: int) -> List[VpiEntry]:
+        """Returns entries whose grace period elapsed; caller frees pages."""
+        out = []
+        for vpi in list(self._entries):
+            e = self._entries[vpi]
+            if e.state == "TEARDOWN" and e.teardown_deadline is not None \
+                    and now_tick >= e.teardown_deadline:
+                out.append(e)
+                del self._entries[vpi]
+        return out
+
+    # -- stream encoding ----------------------------------------------------
+    @staticmethod
+    def encode(vpi: int) -> bytes:
+        return struct.pack("<Q", vpi)
+
+    @staticmethod
+    def decode(buf: bytes) -> int:
+        assert len(buf) >= VPI_BYTES
+        return struct.unpack("<Q", buf[:VPI_BYTES])[0]
+
+    @staticmethod
+    def to_token(vpi: int) -> int:
+        """Bit-reinterpret the uint64 VPI into an int64 stream token (the
+        8-byte slot it occupies in the user-visible byte stream)."""
+        return struct.unpack("<q", struct.pack("<Q", vpi))[0]
+
+    @staticmethod
+    def from_token(tok: int) -> int:
+        return struct.unpack("<Q", struct.pack("<q", int(tok)))[0]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, vpi: int) -> bool:
+        return vpi in self._entries

@@ -1,0 +1,126 @@
+"""Flash attention Pallas TPU kernel (training / prefill).
+
+Blockwise online-softmax attention with GQA, causal and sliding-window
+masking. TPU-native design:
+
+  * q/k/v blocks are tiled (block_q × head_dim) / (block_k × head_dim) with
+    head_dim padded to the 128-lane boundary by the caller;
+  * scores live entirely in VMEM scratch — the [Sq, Skv] matrix never
+    touches HBM (this removes the memory-roofline term the pure-XLA
+    blockwise path pays; see EXPERIMENTS.md §Perf);
+  * the kv grid dimension is 'arbitrary' (sequential) so the running
+    (m, l, acc) scratch carries across kv blocks; causal block skipping is
+    done with @pl.when so skipped tiles issue no MXU work.
+
+Layout: q [B, Hq, Sq, hd], k/v [B, Hkv, Skv, hd] -> out [B, Hq, Sq, hd].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, nkv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal block skipping: tiles entirely above the diagonal do nothing
+    q_start = i * block_q
+    k_start = j * block_k
+    run = True
+    if causal:
+        run = (k_start <= q_start + block_q - 1)
+    if window > 0:
+        run = run & (q_start - (k_start + block_k - 1) < window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = q @ k.T                                        # [bq, bk]
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            ok = ok & (rows >= cols)
+        if window > 0:
+            ok = ok & (rows - cols < window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(ok, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(
+    q: jax.Array,   # [B, Hq, Sq, hd]
+    k: jax.Array,   # [B, Hkv, Skv, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    nq, nkv = sq // block_q, skv // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nkv=nkv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h, i, j: (b_, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b_, h, i, j: (b_, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd), lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, hd), q.dtype),
+        scratch_shapes=[
+            # m, l, acc persist across the sequential kv dimension
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")) if not interpret else None,
+    )(q, k, v)

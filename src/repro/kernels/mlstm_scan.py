@@ -1,0 +1,106 @@
+"""Chunkwise-parallel mLSTM Pallas TPU kernel (xlstm / long-context decode).
+
+TPU adaptation of the fused recurrent GPU kernels in the xLSTM paper: the
+matrix memory C [dh, dh] lives in VMEM scratch and is carried across the
+sequential chunk dimension; within a chunk the recurrence is evaluated in
+its stabilised chunkwise-parallel form (intra-chunk [c, c] gate matrix +
+inter-chunk state application) so the MXU does all the work. Matches
+kernels.ref.mlstm_scan_ref (sequential oracle) to fp32 tolerance.
+
+Layout: q/k/v [B, H, S, dh]; gates log_i/log_f [B, H, S] (log_f already
+log-sigmoided). Output h [B, H, S, dh].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                  C_s, n_s, m_s, *, chunk: int, nchunks: int, dh: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        C_s[...] = jnp.zeros_like(C_s)
+        n_s[...] = jnp.zeros_like(n_s)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+
+    scale = 1.0 / math.sqrt(dh)
+    q = q_ref[0, 0].astype(jnp.float32)            # [c, dh]
+    k = k_ref[0, 0].astype(jnp.float32) * scale
+    v = v_ref[0, 0].astype(jnp.float32)
+    li = li_ref[0, 0].astype(jnp.float32)          # [c]
+    lf = lf_ref[0, 0].astype(jnp.float32)
+
+    A = jnp.cumsum(lf)                             # [c] inclusive
+    m_prev = m_s[0, 0]
+    # intra-chunk log weights W[t, s] = A_t - A_s + li_s for s <= t
+    W = A[:, None] - A[None, :] + li[None, :]
+    tmask = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    W = jnp.where(tmask, W, NEG_INF)
+    binter = A + m_prev                            # [c]
+    m_loc = jnp.maximum(jnp.max(W, axis=1), binter)
+    S_intra = jnp.exp(W - m_loc[:, None])
+    qk = (q @ k.T)                                 # [c, c]
+    num = (S_intra * qk) @ v                       # [c, dh]
+    num = num + jnp.exp(binter - m_loc)[:, None] * (q @ C_s[...])
+    den = jnp.sum(S_intra * qk, axis=1)
+    den = den + jnp.exp(binter - m_loc) * (q @ n_s[...][:, 0])
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))[:, None]
+    o_ref[0, 0] = h.astype(o_ref.dtype)
+
+    # ---- carry state to the end of the chunk ----
+    A_T = A[chunk - 1]
+    w_end = A_T - A + li                           # [c]
+    m_new = jnp.maximum(A_T + m_prev, jnp.max(w_end))
+    decay = jnp.exp(A_T + m_prev - m_new)
+    kw = k * jnp.exp(w_end - m_new)[:, None]       # [c, dh]
+    C_s[...] = decay * C_s[...] + kw.T @ v
+    n_s[...] = decay * n_s[...] + jnp.sum(kw, axis=0)[:, None]
+    m_s[0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_scan(
+    q: jax.Array,      # [B, H, S, dh]
+    k: jax.Array,
+    v: jax.Array,
+    log_i: jax.Array,  # [B, H, S]
+    log_f: jax.Array,  # [B, H, S] (log-sigmoid applied)
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    b, h, s, dh = q.shape
+    assert s % chunk == 0, (s, chunk)
+    nchunks = s // chunk
+
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk, nchunks=nchunks,
+                               dh=dh)
+    qspec = pl.BlockSpec((1, 1, chunk, dh), lambda bh, j: (bh // h, bh % h, j, 0))
+    gspec = pl.BlockSpec((1, 1, chunk), lambda bh, j: (bh // h, bh % h, j))
+    return pl.pallas_call(
+        kernel,
+        grid=(b * h, nchunks),
+        in_specs=[qspec, qspec, qspec, gspec, gspec],
+        out_specs=qspec,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+        if not interpret else None,
+    )(q, k, v, log_i, log_f)

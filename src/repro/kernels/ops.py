@@ -1,0 +1,68 @@
+"""Public jit'd wrappers for the Pallas kernels with backend dispatch.
+
+``impl='auto'`` picks the Pallas kernel on TPU and the pure-jnp oracle on
+CPU (the dry-run and tests run on CPU; interpret=True executes the kernel
+body in Python for correctness validation). The serving/training layers
+call these wrappers so the kernel/oracle switch is one flag.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
+from repro.kernels.paged_attention import paged_attention as _paged_pallas
+from repro.kernels.selective_copy import selective_copy as _selcopy_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl != "auto":
+        return impl
+    return "pallas" if _on_tpu() else "ref"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, impl="auto",
+                    block_q=512, block_k=512):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    return _flash_pallas(q, k, v, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k,
+                         interpret=(impl == "interpret"))
+
+
+def paged_attention(q, pool, tables, page_pos, seq_lens, *, window=0,
+                    impl="auto"):
+    """Per-chip partial (acc, m, l) over owned anchored pages."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.paged_attention_ref(q, pool, tables, page_pos, seq_lens,
+                                        window=window)
+    return _paged_pallas(q, pool, tables, page_pos, seq_lens, window=window,
+                         interpret=(impl == "interpret"))
+
+
+def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
+                   impl="auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.selective_copy_ref(stream, meta_len, total_len, pool,
+                                       tables, meta_max=meta_max)
+    return _selcopy_pallas(stream, meta_len, total_len, pool, tables,
+                           meta_max=meta_max, interpret=(impl == "interpret"))
+
+
+def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.mlstm_scan_ref(q, k, v, log_i, log_f)
+    return _mlstm_pallas(q, k, v, log_i, log_f, chunk=chunk,
+                         interpret=(impl == "interpret"))

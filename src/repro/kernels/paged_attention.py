@@ -1,0 +1,135 @@
+"""Paged decode attention Pallas TPU kernel — the Libra fast path.
+
+The block table (VPI-resolved page metadata) rides in SMEM via scalar
+prefetch: page addresses are known *before* each DMA issues, which is the
+kernel-level expression of the paper's parse-then-move structure (RX-Prog
+decides, the data plane moves). Anchored KV pages stream HBM→VMEM in place —
+no gather materialisation, no contiguous copy.
+
+Per chip the kernel produces partial softmax statistics (acc, m, l) over the
+pages this chip owns; the serving layer psum-combines them across the
+combine axes (flash-decode). Semantics match kernels.ref.paged_attention_ref.
+
+Layout: q [B, Hq, hd]; pool [P, page, 2, Hkv, hd]; tables/page_pos [B, pps].
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, ppos_ref, slens_ref,  # scalar prefetch (SMEM)
+                  q_ref, pool_ref,                   # VMEM blocks
+                  acc_out, m_out, l_out,             # outputs
+                  m_s, l_s, acc_s,                   # scratch
+                  *, scale: float, window: int, pps: int, page: int,
+                  hkv: int, g: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    pid = tables_ref[b, j]
+    base = ppos_ref[b, j]
+    slen = slens_ref[b]
+
+    @pl.when(pid >= 0)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale           # [Hq, hd]
+        kv = pool_ref[0].astype(jnp.float32)               # [page, 2, Hkv, hd]
+        k = kv[:, 0]                                       # [page, Hkv, hd]
+        v = kv[:, 1]
+        qg = q.reshape(hkv, g, q.shape[-1])                # [Hkv, G, hd]
+        # scores per kv head: [Hkv, G, page]
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)            # [Hkv, G, page]
+        off = base + jax.lax.broadcasted_iota(jnp.int32, (1, 1, page), 2)
+        ok = off <= slen
+        if window > 0:
+            ok = ok & (slen - off < window)
+        s = jnp.where(ok, s, NEG_INF)
+        sm = s.reshape(hkv * g, page)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(sm, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sm - m_new[:, None])
+        p = jnp.where(ok.reshape(1, page), p, 0.0)
+        l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(hkv, g, page), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)            # [Hkv, G, hd]
+        acc_s[...] = acc_s[...] * alpha[:, None] + pv.reshape(hkv * g, -1)
+        m_s[...] = m_new
+
+    @pl.when(j == pps - 1)
+    def _finalize():
+        acc_out[0] = acc_s[...].astype(acc_out.dtype)
+        m_out[0] = m_s[...].astype(m_out.dtype)
+        l_out[0] = l_s[...].astype(l_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(
+    q: jax.Array,        # [B, Hq, hd]
+    pool: jax.Array,     # [P, page, 2, Hkv, hd]
+    tables: jax.Array,   # [B, pps] int32 local page ids (-1 invalid)
+    page_pos: jax.Array, # [B, pps] int32 base positions
+    seq_lens: jax.Array, # [B] int32 highest valid position (inclusive)
+    *,
+    window: int = 0,
+    interpret: bool = False,
+):
+    """Returns partial (acc [B,Hq,hd] f32, m [B,Hq] f32, l [B,Hq] f32)."""
+    b, hq, hd = q.shape
+    p_, page, _, hkv, _ = pool.shape
+    pps = tables.shape[1]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               pps=pps, page=page, hkv=hkv, g=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, pps),
+        in_specs=[
+            pl.BlockSpec((1, hq, hd), lambda b_, j, tbl, pp, sl: (b_, 0, 0)),
+            pl.BlockSpec((1, page, 2, hkv, hd),
+                         lambda b_, j, tbl, pp, sl: (
+                             jnp.maximum(tbl[b_, j], 0), 0, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, hq, hd), lambda b_, j, tbl, pp, sl: (b_, 0, 0)),
+            pl.BlockSpec((1, hq), lambda b_, j, tbl, pp, sl: (b_, 0)),
+            pl.BlockSpec((1, hq), lambda b_, j, tbl, pp, sl: (b_, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((hq,), jnp.float32),
+            pltpu.VMEM((hq,), jnp.float32),
+            pltpu.VMEM((hq, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+        if not interpret else None,
+    )(tables, page_pos, seq_lens, q, pool)

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function defines the exact semantics its kernel must reproduce; tests
+sweep shapes/dtypes and assert allclose between kernel (interpret=True on
+CPU) and these references.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,   # [B, Hq, Sq, hd]
+    k: jax.Array,   # [B, Hkv, Skv, hd]
+    v: jax.Array,   # [B, Hkv, Skv, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jax.Array:
+    b, hq, sq, hd = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    iq = jnp.arange(sq)[:, None]
+    ik = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok = ok & (iq >= ik)
+    if window > 0:
+        ok = ok & (iq - ik < window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, hd).astype(q.dtype)
+
+
+def paged_attention_ref(
+    q: jax.Array,        # [B, Hq, hd]
+    pool: jax.Array,     # [P, page, 2, Hkv, hd]
+    tables: jax.Array,   # [B, pps] local page ids, -1 invalid
+    page_pos: jax.Array, # [B, pps] base position per page
+    seq_lens: jax.Array, # [B] highest valid position (inclusive)
+    *,
+    window: int = 0,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Partial-softmax attention over owned pages. Returns (acc [B,Hq,hd],
+    m [B,Hq], l [B,Hq]) — partial stats, combinable across shards."""
+    b, hq, hd = q.shape
+    p_, page, _, hkv, _ = pool.shape
+    pps = tables.shape[1]
+    g = hq // hkv
+    pages = pool[jnp.clip(tables, 0)]                    # [B, pps, page, 2, Hkv, hd]
+    kk = pages[:, :, :, 0].reshape(b, pps * page, hkv, hd)
+    vv = pages[:, :, :, 1].reshape(b, pps * page, hkv, hd)
+    pos = page_pos[:, :, None] + jnp.arange(page)[None, None, :]
+    valid = (tables[:, :, None] >= 0) & (pos <= seq_lens[:, None, None])
+    if window > 0:
+        valid = valid & (seq_lens[:, None, None] - pos < window)
+    valid = valid.reshape(b, pps * page)
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32) / math.sqrt(hd)
+    s = jnp.einsum("bhgd,bthd->bhgt", qg, kk.astype(jnp.float32))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgt,bthd->bhgd", p, vv.astype(jnp.float32))
+    return (acc.reshape(b, hq, hd), m.reshape(b, hq), l.reshape(b, hq))
+
+
+def selective_copy_ref(
+    stream: jax.Array,    # [B, S] int32 token stream
+    meta_len: jax.Array,  # [B] metadata boundary from the parser policy
+    total_len: jax.Array, # [B] message length in the stream
+    pool: jax.Array,      # [P, page] anchored payload pages
+    tables: jax.Array,    # [B, pps] destination page ids (-1 unused)
+    *,
+    meta_max: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """RX-Prog data plane: compact metadata into [B, meta_max] (selective
+    copy) and scatter the payload into anchored pages (single placement).
+    Returns (meta_buf, new_pool)."""
+    b, s = stream.shape
+    p_, page = pool.shape
+    pps = tables.shape[1]
+    idx = jnp.arange(meta_max)
+    meta_buf = jnp.where(idx[None, :] < meta_len[:, None],
+                         jnp.take_along_axis(
+                             stream, jnp.minimum(idx[None, :], s - 1), axis=1),
+                         0)
+    # payload token t (global stream position meta_len + t) -> page t//page
+    t = jnp.arange(s)
+    rel = t[None, :] - meta_len[:, None]                  # payload-relative pos
+    valid = (rel >= 0) & (t[None, :] < total_len[:, None])
+    pg = jnp.clip(rel // page, 0, pps - 1)
+    dest_page = jnp.take_along_axis(tables, pg, axis=1)   # [B, S]
+    dest_off = rel % page
+    flat_dest = jnp.where(valid & (dest_page >= 0),
+                          dest_page * page + dest_off, p_ * page)
+    new_pool = pool.reshape(-1).at[flat_dest.reshape(-1)].set(
+        stream.reshape(-1).astype(pool.dtype), mode="drop").reshape(p_, page)
+    return meta_buf, new_pool
+
+
+def mlstm_scan_ref(q, k, v, log_i, log_f):
+    """Sequential mLSTM oracle. q/k/v [B, H, S, dh]; gates [B, H, S].
+    Returns h [B, H, S, dh]."""
+    from repro.models.ssm import mlstm_cell_sequential
+
+    h, _ = mlstm_cell_sequential(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), log_i.transpose(0, 2, 1),
+        log_f.transpose(0, 2, 1))
+    return h.transpose(0, 2, 1, 3)

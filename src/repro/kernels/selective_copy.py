@@ -1,0 +1,106 @@
+"""Selective-copy ingress Pallas TPU kernel (RX-Prog data plane).
+
+One kernel performs both halves of the paper's ingress action:
+  * **selective copy** — the metadata prefix (boundary supplied by the
+    parser policy, scalar-prefetched) is compacted into a small [B, M]
+    buffer (the only bytes that cross to the control plane);
+  * **payload anchoring** — payload tokens are placed page-by-page into the
+    anchored pool, addressed through the block table. The destination page
+    index is known before the DMA issues (SMEM metadata), so the payload is
+    written exactly once and never touched again.
+
+Pool updates are in-place via input_output_aliasing (the anchored payload
+is donated, like the kernel socket buffer it models).
+
+Layout: stream [B, S] int32; pool [P, page] int32; tables [B, pps].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _meta_kernel(mlen_ref, tlen_ref, stream_ref, meta_ref, *, meta_max: int):
+    b = pl.program_id(0)
+    mlen = mlen_ref[b]
+    idx = jax.lax.broadcasted_iota(jnp.int32, (1, meta_max), 1)
+    window = stream_ref[0, :meta_max]
+    meta_ref[0, :] = jnp.where(idx[0] < mlen, window, 0)
+
+
+def _payload_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, pool_in_ref,
+                    pool_ref, *, page: int, s: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    mlen = mlen_ref[b]
+    tlen = tlen_ref[b]
+    pid = tables_ref[b, j]
+    start = jnp.minimum(mlen + j * page, s - page)  # in-bounds (caller pads S)
+    toks = pl.load(stream_ref, (0, pl.dslice(start, page)))
+    rel = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = (pid >= 0) & (rel + mlen < tlen)
+    # always write the block: invalid lanes / skipped pages pass the original
+    # page content through (the out block is revisited via the clamped index)
+    cur = pool_in_ref[0, :]
+    pool_ref[0, :] = jnp.where(valid, toks, cur)
+
+
+@functools.partial(jax.jit, static_argnames=("meta_max", "interpret"))
+def selective_copy(
+    stream: jax.Array,    # [B, S] int32
+    meta_len: jax.Array,  # [B] int32
+    total_len: jax.Array, # [B] int32
+    pool: jax.Array,      # [P, page] int32 (donated)
+    tables: jax.Array,    # [B, pps] int32
+    *,
+    meta_max: int,
+    interpret: bool = False,
+):
+    """Returns (meta_buf [B, meta_max], new_pool). Matches
+    kernels.ref.selective_copy_ref."""
+    b, s = stream.shape
+    p_, page = pool.shape
+    pps = tables.shape[1]
+    assert s % page == 0, (s, page)
+
+    meta = pl.pallas_call(
+        functools.partial(_meta_kernel, meta_max=meta_max),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b,),
+            in_specs=[pl.BlockSpec((1, s), lambda b_, ml, tl: (b_, 0))],
+            out_specs=pl.BlockSpec((1, meta_max), lambda b_, ml, tl: (b_, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, meta_max), stream.dtype),
+        interpret=interpret,
+    )(meta_len, total_len, stream)
+
+    # invalid table entries (-1) are routed to a dummy page row so no real
+    # page is ever revisited by a non-owner grid step
+    pool_ext = jnp.concatenate(
+        [pool, jnp.zeros((1, page), pool.dtype)], axis=0)
+    new_pool = pl.pallas_call(
+        functools.partial(_payload_kernel, page=page, s=s),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, pps),
+            in_specs=[
+                pl.BlockSpec((1, s), lambda b_, j, ml, tl, tbl: (b_, 0)),
+                pl.BlockSpec((1, page),
+                             lambda b_, j, ml, tl, tbl: (
+                                 jnp.where(tbl[b_, j] < 0, p_, tbl[b_, j]), 0)),
+            ],
+            out_specs=pl.BlockSpec((1, page),
+                                   lambda b_, j, ml, tl, tbl: (
+                                       jnp.where(tbl[b_, j] < 0, p_,
+                                                 tbl[b_, j]), 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((p_ + 1, page), pool.dtype),
+        input_output_aliases={4: 0},  # pool donated -> in-place anchoring
+        interpret=interpret,
+    )(meta_len, total_len, tables, stream, pool_ext)
+    return meta, new_pool[:p_]

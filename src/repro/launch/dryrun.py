@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture × input shape × mesh) cell this lowers AND compiles
+the real step function (train_step for train shapes, prefill/serve_step for
+serving shapes) against ShapeDtypeStruct inputs — no allocation — on the
+production meshes: single-pod (16×16 = 256 chips) and multi-pod
+(2×16×16 = 512 chips). It records memory_analysis + cost_analysis + the
+trip-count-corrected HLO roofline terms into one JSON per cell.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod both]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.common.sharding import spec_for, tree_shardings
+from repro.common.types import SHAPES_BY_NAME, MeshSpec, ModelConfig, ShapeSpec
+from repro.configs import ARCHS, get_config
+from repro.models.attention import plan_decode_sharding
+from repro.models.registry import build_model, decode_layout, input_specs
+from repro.roofline.analysis import model_flops, roofline_terms
+from repro.roofline.hlo_analysis import analyze_hlo_text
+from repro.training.optimizer import AdamWConfig, abstract_adamw, adamw_update
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    if shape.name == "long_500k" and cfg.has_full_attention:
+        return ("full-attention architecture: long_500k requires sub-quadratic "
+                "attention (skip recorded per assignment; see DESIGN.md)")
+    return None
+
+
+def _batch_shardings(specs: Dict[str, Any], mesh, batch_axis,
+                     rules=None) -> Dict[str, Any]:
+    """Sharding tree for a dry-run input-spec dict (batch dim 0 unless pool)."""
+    all_axes = tuple(mesh.axis_names)
+
+    def batch_spec(sds):
+        if rules is not None:
+            return NamedSharding(mesh, spec_for(
+                sds.shape, ("batch",) + (None,) * (len(sds.shape) - 1), mesh,
+                rules))
+        return NamedSharding(mesh, P(batch_axis, *([None] * (len(sds.shape) - 1))))
+
+    def shard_one(key, sds):
+        if key == "pool":
+            return NamedSharding(mesh, P(None, all_axes))
+        if key == "cross_kv":  # layer-stacked [L, B, ...]: batch is dim 1
+            return NamedSharding(mesh, P(None, batch_axis,
+                                         *([None] * (len(sds.shape) - 2))))
+        if key in ("state", "ssm_state"):  # handled a level up
+            return None
+        return batch_spec(sds)
+
+    out = {}
+    for k, v in specs.items():
+        if isinstance(v, dict):
+            out[k] = {kk: NamedSharding(mesh, P(None, batch_axis,
+                                                *([None] * (len(vv.shape) - 2))))
+                      for kk, vv in v.items()}
+        else:
+            out[k] = shard_one(k, v)
+    return out
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Tuple:
+    """Returns (fn, args tuple, in_shardings tuple, donate_argnums)."""
+    model = build_model(cfg)
+    mesh_spec = MeshSpec(tuple(mesh.devices.shape), tuple(mesh.axis_names))
+    tp = mesh_spec.axis_size("model")
+    specs = input_specs(cfg, shape, mesh_spec)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_axis = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    if shape.kind == "train":
+        from repro.common.sharding import STRATEGIES
+
+        # fsdp2d needs >= 1 sample per chip (else the model axis replicates
+        # the batch); MoE needs the model axis for expert parallelism.
+        fits_2d = shape.global_batch % mesh.devices.size == 0
+        default = "fsdp_tp" if (cfg.family == "moe" or not fits_2d) else "fsdp2d"
+        strategy = os.environ.get("REPRO_SHARDING", default)
+        rules = STRATEGIES[strategy]()
+        abs_params = model.abstract_params(jnp.float32)
+        p_sh = tree_shardings(abs_params, model.param_axes(), mesh, rules=rules)
+        opt = abstract_adamw(abs_params)
+        o_sh = type(opt)(NamedSharding(mesh, P()),
+                         jax.tree.map(lambda s: s, p_sh),
+                         jax.tree.map(lambda s: s, p_sh))
+        b_sh = _batch_shardings(specs, mesh, batch_axis, rules=rules)
+        opt_cfg = AdamWConfig(schedule=cfg.lr_schedule)
+
+        remat = os.environ.get("REPRO_REMAT", "full")  # §Perf hillclimb knob
+
+        def train_step(params, opt_state, batch):
+            def lf(p):
+                return model.loss_fn(p, batch, remat=remat, tp_size=tp)
+            (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            new_p, new_o, om = adamw_update(opt_cfg, params, grads, opt_state)
+            return new_p, new_o, {"loss": loss, **om}
+
+        return (train_step, (abs_params, opt, specs), (p_sh, o_sh, b_sh), (0, 1))
+
+    # serving cells use bf16 params with pure tensor-parallel sharding:
+    # FSDP weight all-gathers are amortised over a whole batch in training
+    # but are pure overhead per decode step (hillclimb #2, EXPERIMENTS §Perf)
+    from repro.common.sharding import DEFAULT_RULES
+
+    serve_rules = dict(DEFAULT_RULES)
+    serve_rules["fsdp"] = ()
+    abs_params = model.abstract_params(jnp.bfloat16)
+    p_sh = tree_shardings(abs_params, model.param_axes(), mesh,
+                          rules=serve_rules)
+    b_axis, combine = plan_decode_sharding(shape.global_batch, mesh)
+    sh = _batch_shardings(specs, mesh, b_axis)
+
+    if cfg.family == "ssm":
+        if shape.kind == "prefill":
+            def fn(params, tokens, seq_lens):
+                return model.prefill(params, tokens, seq_lens)
+            args = (abs_params, specs["tokens"], specs["seq_lens"])
+            return (fn, args, (p_sh, sh["tokens"], sh["seq_lens"]), ())
+
+        def fn(params, tokens, seq_lens, state):
+            return model.decode_step(params, tokens, seq_lens, state)
+        args = (abs_params, specs["tokens"], specs["seq_lens"], specs["state"])
+        return (fn, args, (p_sh, sh["tokens"], sh["seq_lens"], sh["state"]), (3,))
+
+    if shape.kind == "prefill":
+        names = ["tokens", "seq_lens", "pool", "tables", "token_shard",
+                 "token_slot", "token_off", "token_valid"]
+        extra = []
+        if cfg.family == "vlm":
+            extra = ["img_embeds"]
+        if cfg.family == "encdec":
+            extra = ["frames"]
+
+        def fn(params, *a):
+            kw = dict(zip(names + extra, a))
+            if cfg.family == "vlm":
+                return model.prefill(params, kw["tokens"], kw["seq_lens"],
+                                     kw["pool"], kw["tables"], kw["token_shard"],
+                                     kw["token_slot"], kw["token_off"],
+                                     kw["token_valid"], mesh=mesh,
+                                     batch_axis=b_axis, combine_axes=combine,
+                                     img_embeds=kw["img_embeds"], tp_size=tp)
+            if cfg.family == "encdec":
+                return model.prefill(params, kw["tokens"], kw["seq_lens"],
+                                     kw["pool"], kw["tables"], kw["token_shard"],
+                                     kw["token_slot"], kw["token_off"],
+                                     kw["token_valid"], kw["frames"], mesh=mesh,
+                                     batch_axis=b_axis, combine_axes=combine,
+                                     tp_size=tp)
+            return model.prefill(params, kw["tokens"], kw["seq_lens"],
+                                 kw["pool"], kw["tables"], kw["token_shard"],
+                                 kw["token_slot"], kw["token_off"],
+                                 kw["token_valid"], mesh=mesh,
+                                 batch_axis=b_axis, combine_axes=combine,
+                                 tp_size=tp)
+
+        args = (abs_params,) + tuple(specs[n] for n in names + extra)
+        shards = (p_sh,) + tuple(sh[n] for n in names + extra)
+        return (fn, args, shards, (3,))  # donate pool
+
+    # decode
+    if cfg.family == "encdec":
+        def fn(params, tokens, seq_lens, pool, tables, page_pos, wsh, wsl,
+               cross_kv):
+            return model.decode_step(params, tokens, seq_lens, pool, tables,
+                                     page_pos, wsh, wsl, cross_kv, mesh=mesh,
+                                     batch_axis=b_axis, combine_axes=combine)
+        names = ["tokens", "seq_lens", "pool", "tables", "page_pos",
+                 "write_shard", "write_slot", "cross_kv"]
+        args = (abs_params,) + tuple(specs[n] for n in names)
+        shards = (p_sh,) + tuple(sh[n] for n in names)
+        return (fn, args, shards, (3,))
+
+    if cfg.family == "hybrid":
+        def fn(params, tokens, seq_lens, pool, tables, page_pos, wsh, wsl,
+               ssm_state):
+            return model.decode_step(params, tokens, seq_lens, pool, tables,
+                                     page_pos, wsh, wsl, mesh=mesh,
+                                     batch_axis=b_axis, combine_axes=combine,
+                                     ssm_state=ssm_state)
+        names = ["tokens", "seq_lens", "pool", "tables", "page_pos",
+                 "write_shard", "write_slot", "ssm_state"]
+        args = (abs_params,) + tuple(specs[n] for n in names)
+        shards = (p_sh,) + tuple(sh[n] for n in names)
+        return (fn, args, shards, (3, 8))
+
+    def fn(params, tokens, seq_lens, pool, tables, page_pos, wsh, wsl):
+        return model.decode_step(params, tokens, seq_lens, pool, tables,
+                                 page_pos, wsh, wsl, mesh=mesh,
+                                 batch_axis=b_axis, combine_axes=combine)
+    names = ["tokens", "seq_lens", "pool", "tables", "page_pos",
+             "write_shard", "write_slot"]
+    args = (abs_params,) + tuple(specs[n] for n in names)
+    shards = (p_sh,) + tuple(sh[n] for n in names)
+    return (fn, args, shards, (3,))
+
+
+def build_dense_baseline(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Tuple:
+    """The paper's 'standard stack' at production scale: contiguous KV
+    [L, B, Smax, 2, Hkv, hd] re-materialised every step (undonated) + full
+    logits shipped to the host. Sharded (batch->data, seq->model) — the
+    best the dense layout can do; batch-only sharding would need 43 GB/chip
+    for nemo@32k and not even fit."""
+    from repro.common.sharding import DEFAULT_RULES
+
+    model = build_model(cfg)
+    serve_rules = dict(DEFAULT_RULES)
+    serve_rules["fsdp"] = ()
+    abs_params = model.abstract_params(jnp.bfloat16)
+    p_sh = tree_shardings(abs_params, model.param_axes(), mesh,
+                          rules=serve_rules)
+    b, s = shape.global_batch, shape.seq_len
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    batch_axis = data_axes if len(data_axes) > 1 else data_axes[0]
+    cache = jax.ShapeDtypeStruct(
+        (cfg.num_layers, b, s + 128, 2, cfg.num_kv_heads, cfg.head_dim),
+        jnp.bfloat16)
+    cache_sh = NamedSharding(mesh, P(None, batch_axis, "model"))
+    tok_sh = NamedSharding(mesh, P(batch_axis))
+
+    def fn(params, tokens, seq_lens, kv_cache):
+        logits, new_cache = model.decode_step_dense(params, tokens, seq_lens,
+                                                    kv_cache)
+        return logits, new_cache  # undonated: the copy tax
+
+    args = (abs_params, jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32), cache)
+    return (fn, args, (p_sh, tok_sh, tok_sh, cache_sh), ())
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = RESULTS_DIR, dense_baseline: bool = False) -> Dict:
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    pod = "multipod" if multi_pod else "singlepod"
+    cell = f"{arch}__{shape_name}__{pod}"
+    if dense_baseline:
+        cell += "__dense-baseline"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, cell + ".json")
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name, "mesh": pod,
+                           "ok": False}
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec.update({"ok": True, "skipped": True, "reason": reason})
+        json.dump(rec, open(out_path, "w"), indent=1)
+        return rec
+
+    try:
+        from repro.common.sharding import STRATEGIES, use_rules
+
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fits_2d = shape.global_batch % mesh.devices.size == 0
+        default = "fsdp_tp" if (cfg.family == "moe" or not fits_2d) \
+            else "fsdp2d"
+        strategy = os.environ.get("REPRO_SHARDING", default) \
+            if shape.kind == "train" else "fsdp_tp"
+        with mesh, use_rules(STRATEGIES[strategy]()):
+            if dense_baseline:
+                fn, args, shards, donate = build_dense_baseline(cfg, shape, mesh)
+            else:
+                fn, args, shards, donate = build_cell(cfg, shape, mesh)
+            t0 = time.time()
+            jfn = jax.jit(fn, in_shardings=shards, donate_argnums=donate)
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        rec["sharding_strategy"] = strategy
+        rec["remat"] = os.environ.get("REPRO_REMAT", "full") \
+            if shape.kind == "train" else None
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        costs = analyze_hlo_text(txt)
+        mf = model_flops(cfg, shape)
+        n_chips = mesh.devices.size
+        terms = roofline_terms(costs, mf, n_chips)
+        rec.update({
+            "ok": True,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "n_chips": int(n_chips),
+            "memory": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "peak_estimate_bytes": ma.argument_size_in_bytes
+                + ma.output_size_in_bytes + ma.temp_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            "cost_analysis": {"flops_body_once": ca.get("flops", 0.0),
+                              "bytes_body_once": ca.get("bytes accessed", 0.0)},
+            "hlo": {
+                "flops_per_device": costs.flops,
+                "hbm_bytes_per_device": costs.hbm_bytes,
+                "collective_bytes_naive": costs.collective_naive,
+                "collective_bytes_ring": costs.collective_ring,
+                "collective_breakdown": costs.collective_breakdown,
+                "collective_count": costs.collective_count,
+                "scan_trip_counts": costs.trip_counts[:16],
+            },
+            "roofline": terms.as_dict(),
+        })
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    json.dump(rec, open(out_path, "w"), indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCHS + ["all"],
+                    help="architecture id")
+    ap.add_argument("--shape", default="all",
+                    choices=list(SHAPES_BY_NAME) + ["all"])
+    ap.add_argument("--multipod", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--dense-baseline", action="store_true",
+                    help="lower the standard-stack dense decode instead")
+    args = ap.parse_args()
+
+    archs = ARCHS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if args.shape == "all" else [args.shape]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[args.multipod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                cell = f"{arch}__{shape}__{'multipod' if mp else 'singlepod'}"
+                path = os.path.join(args.out, cell + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    prev = json.load(open(path))
+                    if prev.get("ok"):
+                        print(f"[skip] {cell}")
+                        continue
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, args.out,
+                               dense_baseline=args.dense_baseline)
+                status = "SKIP" if rec.get("skipped") else (
+                    "OK" if rec["ok"] else "FAIL")
+                extra = ""
+                if rec.get("roofline"):
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} comp={r['compute_s']:.4f}s"
+                             f" mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s"
+                             f" useful={r['useful_ratio']:.2f}")
+                if not rec["ok"]:
+                    failures += 1
+                    extra = " " + rec.get("error", "")[:160]
+                print(f"[{status}] {cell} ({time.time()-t0:.0f}s){extra}",
+                      flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

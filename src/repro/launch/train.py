@@ -1,0 +1,71 @@
+"""Training launcher.
+
+Local run (reduced config, CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --reduced \
+      --steps 100 --batch 8 --seq 128 --ckpt /tmp/ckpt
+
+Production flags (--mesh single|multi) build the 256/512-chip mesh; on this
+CPU container they are exercised through launch/dryrun.py instead (no
+allocation). On a real fleet the same entrypoint runs under the cluster
+launcher with one process per host; resume is automatic from --ckpt.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import ARCHS, get_config, get_reduced
+from repro.data.pipeline import DataPipeline, SyntheticCorpus
+from repro.models.registry import build_model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="libra-proxy-125m",
+                    choices=ARCHS + ["libra-proxy-125m"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log", default=None, help="write history JSON here")
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={model.param_count()/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    corpus = SyntheticCorpus(cfg.vocab_size, seed=0)
+    pipe = DataPipeline(corpus, batch=args.batch, seq_len=args.seq)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps,
+                      schedule=cfg.lr_schedule)
+    trainer = Trainer(model, opt, pipe, checkpoint_dir=args.ckpt,
+                      checkpoint_every=args.ckpt_every, remat=args.remat)
+    trainer.install_signal_handlers()
+    if args.resume and trainer.resume():
+        print(f"resumed from step {trainer.step}")
+
+    hist = trainer.train(args.steps - trainer.step)
+    for h in hist[:: max(len(hist) // 20, 1)]:
+        print(f"step {h['step']:5d} loss {h['loss']:.4f} lr {h['lr']:.2e} "
+              f"({h['time']*1000:.0f} ms)")
+    if hist:
+        print(f"final loss {hist[-1]['loss']:.4f}; "
+              f"stragglers flagged: {trainer.straggler_events}")
+    if args.log:
+        json.dump(hist, open(args.log, "w"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,335 @@
+"""Whisper-style encoder-decoder backbone (whisper-medium).
+
+The conv/audio frontend is a stub per the assignment: ``input_specs``
+supplies precomputed frame embeddings [B, enc_frames, D]. The Libra analogue
+is at its cleanest here: the encoder output — projected once per layer into
+cross-attention K/V — is the bulk payload, anchored on device; the decoder
+consumes it in place via the anchored handle. Decoder self-attention uses
+the same paged pool as the decoder-only models.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.common.sharding import constrain
+from repro.common.types import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    ParamSpec,
+    abstract_params,
+    apply_rope,
+    count_template_params,
+    init_params,
+    layer_norm,
+    mlp_apply,
+    mlp_template,
+    param_axes,
+    rms_norm,
+    sinusoidal_positions,
+)
+from repro.models.transformer import REMAT_POLICIES, stack_template
+
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, page_size: int = 64):
+        self.cfg = cfg
+        self.page_size = page_size
+
+    # -- params -----------------------------------------------------------
+    def _attn_tmpl(self, kv: bool = True) -> Dict:
+        c = self.cfg
+        t = {
+            "wq": ParamSpec((c.d_model, c.q_dim), ("fsdp", "tensor")),
+            "wo": ParamSpec((c.q_dim, c.d_model), ("tensor", "fsdp")),
+        }
+        if kv:
+            t["wk"] = ParamSpec((c.d_model, c.kv_dim), ("fsdp", "tensor"))
+            t["wv"] = ParamSpec((c.d_model, c.kv_dim), ("fsdp", "tensor"))
+        return t
+
+    def enc_layer_template(self) -> Dict:
+        c = self.cfg
+        return {
+            "ln1": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "attn": self._attn_tmpl(),
+            "ln2": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "mlp": mlp_template(c.d_model, c.d_ff, "gelu"),
+        }
+
+    def dec_layer_template(self) -> Dict:
+        c = self.cfg
+        return {
+            "ln1": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "self_attn": self._attn_tmpl(),
+            "ln_x": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "cross_attn": self._attn_tmpl(),
+            "ln2": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "mlp": mlp_template(c.d_model, c.d_ff, "gelu"),
+        }
+
+    def template(self) -> Dict:
+        c = self.cfg
+        return {
+            "embed": ParamSpec((c.vocab_size, c.d_model), ("tensor", None),
+                               fan_in_dims=(1,)),
+            "enc_final_norm": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "dec_final_norm": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "enc_layers": stack_template(self.enc_layer_template(), c.enc_layers),
+            "dec_layers": stack_template(self.dec_layer_template(), c.num_layers),
+        }
+
+    def init_params(self, key, dtype=jnp.float32):
+        return init_params(key, self.template(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_params(self.template(), dtype)
+
+    def param_axes(self):
+        return param_axes(self.template())
+
+    def param_count(self) -> int:
+        return count_template_params(self.template())
+
+    # -- attention helper ----------------------------------------------------
+    def _mha(self, p, hq, hkv, pos_q, pos_kv, causal, head_sharded):
+        c = self.cfg
+        b, sq, _ = hq.shape
+        skv = hkv.shape[1]
+        q = (hq @ p["wq"]).reshape(b, sq, c.num_heads, c.head_dim)
+        k = (hkv @ p["wk"]).reshape(b, skv, c.num_kv_heads, c.head_dim)
+        v = (hkv @ p["wv"]).reshape(b, skv, c.num_kv_heads, c.head_dim)
+        if head_sharded:
+            q = constrain(q, ("batch", None, "act_heads", None))
+            k = constrain(k, ("batch", None, "act_heads", None))
+            v = constrain(v, ("batch", None, "act_heads", None))
+        if max(sq, skv) <= 1024:
+            out = attn.dense_attention(q, k, v, pos_q, pos_kv, causal=causal)
+        else:
+            out = attn.blockwise_attention(q, k, v, pos_q, pos_kv, causal=causal)
+        return out.reshape(b, sq, c.q_dim) @ p["wo"]
+
+    # -- encode ----------------------------------------------------------------
+    def encode(self, params, frames: jax.Array, *, remat: str = "full",
+               head_sharded: bool = True) -> jax.Array:
+        """frames [B, F, D] (precomputed frontend embeddings) -> enc out."""
+        c = self.cfg
+        b, f, _ = frames.shape
+        pe = sinusoidal_positions(f, c.d_model).astype(frames.dtype)
+        x = constrain(frames + pe[None], ("batch", None, "embed"))
+        pos = jnp.broadcast_to(jnp.arange(f), (b, f))
+        policy = REMAT_POLICIES["none" if remat == "none" else remat]
+
+        def body(x, lp):
+            def f_(xx):
+                h = rms_norm(xx, lp["ln1"], c.norm_eps)
+                xx = xx + self._mha(lp["attn"], h, h, pos, pos, False,
+                                    head_sharded)
+                h2 = rms_norm(xx, lp["ln2"], c.norm_eps)
+                return xx + mlp_apply(lp["mlp"], h2, "gelu")
+            if remat != "none":
+                f_ = jax.checkpoint(f_, policy=policy)
+            return f_(x), None
+
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rms_norm(x, params["enc_final_norm"], c.norm_eps)
+
+    # -- decode (teacher forcing / prefill) ----------------------------------
+    def decode_stack(self, params, tokens, enc_out, *, remat: str = "full",
+                     head_sharded: bool = True) -> jax.Array:
+        c = self.cfg
+        b, s = tokens.shape
+        f = enc_out.shape[1]
+        pe = sinusoidal_positions(s, c.d_model)
+        x = jnp.take(params["embed"], tokens, axis=0) + pe[None].astype(
+            params["embed"].dtype)
+        x = constrain(x, ("batch", None, "embed"))
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        pos_f = jnp.broadcast_to(jnp.arange(f), (b, f))
+        policy = REMAT_POLICIES["none" if remat == "none" else remat]
+
+        def body(x, lp):
+            def f_(xx):
+                h = rms_norm(xx, lp["ln1"], c.norm_eps)
+                xx = xx + self._mha(lp["self_attn"], h, h, pos, pos, True,
+                                    head_sharded)
+                hx = rms_norm(xx, lp["ln_x"], c.norm_eps)
+                xx = xx + self._mha(lp["cross_attn"], hx, enc_out, pos, pos_f,
+                                    False, head_sharded)
+                h2 = rms_norm(xx, lp["ln2"], c.norm_eps)
+                return xx + mlp_apply(lp["mlp"], h2, "gelu")
+            if remat != "none":
+                f_ = jax.checkpoint(f_, policy=policy)
+            return f_(x), None
+
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        return rms_norm(x, params["dec_final_norm"], c.norm_eps)
+
+    def forward(self, params, tokens, frames=None, *, compute_dtype=jnp.bfloat16,
+                remat: str = "full", tp_size: int = 1, **_unused):
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        head_sharded = c.num_heads % max(tp_size, 1) == 0
+        enc_out = self.encode(params, frames.astype(compute_dtype), remat=remat,
+                              head_sharded=head_sharded)
+        x = self.decode_stack(params, tokens, enc_out, remat=remat,
+                              head_sharded=head_sharded)
+        return x, jnp.zeros((), jnp.float32)
+
+    def logits(self, params, hidden, compute_dtype=jnp.bfloat16):
+        out = hidden @ params["embed"].astype(compute_dtype).T
+        return constrain(out, ("batch", None, "vocab"))
+
+    def loss_fn(self, params, batch, *, remat: str = "full", tp_size: int = 1,
+                rngs=None):
+        hidden, _ = self.forward(params, batch["tokens"], batch["frames"],
+                                 remat=remat, tp_size=tp_size)
+        logits = self.logits(jax.tree.map(lambda a: a, params), hidden
+                             ).astype(jnp.float32)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                                   axis=-1)[..., 0]
+        ntok = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum((lse - gold) * mask) / ntok
+        return loss, {"loss": loss, "ntok": ntok}
+
+    # -- serving ------------------------------------------------------------
+    def kv_pool_shape(self, total_pages: int) -> Tuple[int, ...]:
+        c = self.cfg
+        return (c.num_layers, total_pages, self.page_size, 2, c.num_kv_heads,
+                c.head_dim)
+
+    def cross_kv_shape(self, batch: int) -> Tuple[int, ...]:
+        c = self.cfg
+        return (c.num_layers, batch, c.enc_frames, 2, c.num_kv_heads, c.head_dim)
+
+    def encode_anchor(self, params, frames, *, compute_dtype=jnp.bfloat16,
+                      tp_size: int = 1):
+        """Ingress for the audio payload: encode once, project cross K/V per
+        decoder layer, anchor [L, B, F, 2, Hkv, hd] on device."""
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        head_sharded = c.num_heads % max(tp_size, 1) == 0
+        enc_out = self.encode(params, frames.astype(compute_dtype), remat="none",
+                              head_sharded=head_sharded)
+        b, f, _ = enc_out.shape
+
+        def per_layer(carry, lp):
+            k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, f, c.num_kv_heads,
+                                                           c.head_dim)
+            v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, f, c.num_kv_heads,
+                                                           c.head_dim)
+            return carry, jnp.stack([k, v], axis=2)  # [B, F, 2, Hkv, hd]
+
+        _, cross_kv = jax.lax.scan(per_layer, 0, params["dec_layers"])
+        return cross_kv
+
+    def prefill(self, params, tokens, seq_lens, pool, tables, token_shard,
+                token_slot, token_off, token_valid, frames, *, mesh: Mesh,
+                batch_axis, combine_axes, compute_dtype=jnp.bfloat16,
+                tp_size: int = 1, **_unused):
+        """Ingress: anchor the audio payload (cross K/V) and the decoder
+        prompt's self-attention KV pages; return (first_tokens, pool,
+        cross_kv)."""
+        c = self.cfg
+        cross_kv = self.encode_anchor(params, frames,
+                                      compute_dtype=compute_dtype,
+                                      tp_size=tp_size)
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        head_sharded = c.num_heads % max(tp_size, 1) == 0
+        b, s = tokens.shape
+        f = c.enc_frames
+        pe = sinusoidal_positions(s, c.d_model)
+        x = jnp.take(params["embed"], tokens, axis=0) + pe[None].astype(
+            params["embed"].dtype)
+        x = constrain(x, ("batch", None, "embed"))
+        pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+        pos_f = jnp.broadcast_to(jnp.arange(f), (b, f))
+
+        def body(x, xs):
+            lp, pool_l, ckv_l = xs
+            h = rms_norm(x, lp["ln1"], c.norm_eps)
+            q = (h @ lp["self_attn"]["wq"]).reshape(b, s, c.num_heads, c.head_dim)
+            k = (h @ lp["self_attn"]["wk"]).reshape(b, s, c.num_kv_heads,
+                                                    c.head_dim)
+            v = (h @ lp["self_attn"]["wv"]).reshape(b, s, c.num_kv_heads,
+                                                    c.head_dim)
+            pool_l = attn.prefill_write_pages(
+                k, v, pool_l, tables, token_shard, token_slot, token_off,
+                token_valid, mesh=mesh, batch_axis=batch_axis,
+                combine_axes=combine_axes)
+            if s <= 1024:
+                out = attn.dense_attention(q, k, v, pos, pos, causal=True)
+            else:
+                out = attn.blockwise_attention(q, k, v, pos, pos, causal=True)
+            x = x + out.reshape(b, s, c.q_dim) @ lp["self_attn"]["wo"]
+            hx = rms_norm(x, lp["ln_x"], c.norm_eps)
+            kk, vv = ckv_l[:, :, 0], ckv_l[:, :, 1]
+            qx = (hx @ lp["cross_attn"]["wq"]).reshape(b, s, c.num_heads,
+                                                       c.head_dim)
+            if max(s, f) <= 1024:
+                ox = attn.dense_attention(qx, kk, vv, pos, pos_f, causal=False)
+            else:
+                ox = attn.blockwise_attention(qx, kk, vv, pos, pos_f,
+                                              causal=False)
+            x = x + ox.reshape(b, s, c.q_dim) @ lp["cross_attn"]["wo"]
+            h2 = rms_norm(x, lp["ln2"], c.norm_eps)
+            x = x + mlp_apply(lp["mlp"], h2, "gelu")
+            return x, pool_l
+
+        x, new_pool = jax.lax.scan(body, x, (params["dec_layers"], pool,
+                                             cross_kv))
+        x = rms_norm(x, params["dec_final_norm"], c.norm_eps)
+        idx = jnp.maximum(seq_lens - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self.logits(params, last, compute_dtype)[:, 0]
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, new_pool, cross_kv
+
+    def decode_step(self, params, tokens, seq_lens, pool, tables, page_pos,
+                    write_shard, write_slot, cross_kv, *, mesh: Mesh,
+                    batch_axis, combine_axes, compute_dtype=jnp.bfloat16):
+        """One decoder token: paged self-attention + anchored cross-attention.
+        Returns (next_tokens [B], new self-KV pool)."""
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        b = tokens.shape[0]
+        pe = sinusoidal_positions(2 ** 20, c.d_model)  # static table, sliced
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = x + pe[seq_lens].astype(x.dtype)
+
+        def layer_step(x, xs):
+            lp, pool_l, ckv_l = xs
+            h = rms_norm(x, lp["ln1"], c.norm_eps)
+            q = (h @ lp["self_attn"]["wq"]).reshape(b, c.num_heads, c.head_dim)
+            k = (h @ lp["self_attn"]["wk"]).reshape(b, c.num_kv_heads, c.head_dim)
+            v = (h @ lp["self_attn"]["wv"]).reshape(b, c.num_kv_heads, c.head_dim)
+            out, pool_l = attn.paged_decode_attention(
+                q, k, v, pool_l, tables, page_pos, seq_lens, write_shard,
+                write_slot, mesh=mesh, batch_axis=batch_axis,
+                combine_axes=combine_axes)
+            x = x + out.reshape(b, c.q_dim) @ lp["self_attn"]["wo"]
+            # cross-attention over the anchored encoder payload (in place)
+            hx = rms_norm(x, lp["ln_x"], c.norm_eps)
+            qx = (hx @ lp["cross_attn"]["wq"]).reshape(b, 1, c.num_heads,
+                                                       c.head_dim)
+            kk, vv = ckv_l[:, :, 0], ckv_l[:, :, 1]
+            f = kk.shape[1]
+            pos_f = jnp.broadcast_to(jnp.arange(f), (b, f))
+            ox = attn.dense_attention(qx, kk, vv, seq_lens[:, None], pos_f,
+                                      causal=False)[:, 0]
+            x = x + ox.reshape(b, c.q_dim) @ lp["cross_attn"]["wo"]
+            h2 = rms_norm(x, lp["ln2"], c.norm_eps)
+            x = x + mlp_apply(lp["mlp"], h2, "gelu")
+            return x, pool_l
+
+        x, new_pool = jax.lax.scan(layer_step, x,
+                                   (params["dec_layers"], pool, cross_kv))
+        x = rms_norm(x, params["dec_final_norm"], c.norm_eps)
+        logits = self.logits(params, x[:, None])[:, 0]
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_pool

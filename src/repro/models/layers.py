@@ -1,0 +1,200 @@
+"""Shared model primitives: param templates, norms, RoPE, MLPs.
+
+A ``ParamSpec`` template is the single source of truth per architecture:
+``init_params`` (real arrays, smoke tests), ``abstract_params``
+(ShapeDtypeStruct, dry-run — never allocates) and ``param_axes`` (logical
+sharding names) are all derived from it, so they cannot diverge.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # pytree of arrays
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 1.0    # stddev multiplier for 'normal' (fan-in scaled)
+    fan_in_dims: Tuple[int, ...] = ()  # dims whose product is fan-in; () -> second-to-last
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Template = Dict[str, Any]  # nested dict of ParamSpec
+
+
+def _fan_in(spec: ParamSpec) -> int:
+    if spec.init != "normal":
+        return 1
+    if spec.fan_in_dims:
+        f = 1
+        for d in spec.fan_in_dims:
+            f *= spec.shape[d]
+        return f
+    if len(spec.shape) >= 2:
+        return spec.shape[-2]
+    return spec.shape[-1]
+
+
+def init_params(key: jax.Array, template: Template, dtype=jnp.float32) -> Params:
+    leaves, treedef = jax.tree.flatten(
+        template, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, spec in zip(keys, leaves):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            std = spec.scale / math.sqrt(_fan_in(spec))
+            out.append((jax.random.normal(k, spec.shape) * std).astype(dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(template: Template, dtype=jnp.float32) -> Params:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        template,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_axes(template: Template) -> Params:
+    return jax.tree.map(
+        lambda s: s.axes, template, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def count_template_params(template: Template) -> int:
+    leaves = jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, ParamSpec))
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x: jax.Array, w: jax.Array, num_groups: int, eps: float = 1e-5) -> jax.Array:
+    """Per-head group norm used by xLSTM cells. x [..., H*dh] grouped by H."""
+    dt = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, num_groups, d // num_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x.reshape(*lead, d) * w.astype(jnp.float32)).astype(dt)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [..., seq, heads, head_dim]; positions broadcastable to [..., seq]."""
+    dt = x.dtype
+    freqs = rope_freqs(x.shape[-1], theta)  # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(ang)[..., None, :]  # [..., seq, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d_model, 2, dtype=jnp.float32) * (-math.log(10000.0) / d_model))
+    pe = jnp.zeros((length, d_model), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# MLP blocks
+# ---------------------------------------------------------------------------
+
+def mlp_template(d_model: int, d_ff: int, act: str) -> Template:
+    if act == "swiglu":
+        return {
+            "w_gate": ParamSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "w_up": ParamSpec((d_model, d_ff), ("fsdp", "tensor")),
+            "w_down": ParamSpec((d_ff, d_model), ("tensor", "fsdp")),
+        }
+    return {
+        "w_up": ParamSpec((d_model, d_ff), ("fsdp", "tensor")),
+        "b_up": ParamSpec((d_ff,), ("tensor",), init="zeros"),
+        "w_down": ParamSpec((d_ff, d_model), ("tensor", "fsdp")),
+        "b_down": ParamSpec((d_model,), (None,), init="zeros"),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str) -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x [B, S, C], w [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4); unrolled adds are cheap and fusible
+        out = out + pad[:, i : i + x.shape[1], :] * w[i]
+    if b is not None:
+        out = out + b
+    return out
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step of the causal conv. conv_state [B, K-1, C]."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # [B, K, C]
+    out = jnp.einsum("bkc,kc->bc", window, w)
+    if b is not None:
+        out = out + b
+    return out, window[:, 1:, :]

@@ -1,0 +1,136 @@
+"""Model registry: config -> model instance, plus the dry-run input contract.
+
+``input_specs(model, shape, mesh)`` returns ShapeDtypeStruct stand-ins for
+every input of the step function a cell lowers — weak-type-correct,
+shardable, zero allocation (the multi-pod dry-run requirement).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.types import MeshSpec, ModelConfig, ShapeSpec
+
+PAGE_SIZE = 64  # tokens per anchored KV page (A.5 granularity matching)
+
+
+def build_model(cfg: ModelConfig, page_size: int = PAGE_SIZE):
+    if cfg.family == "ssm":
+        from repro.models.xlstm_model import XLSTMModel
+
+        return XLSTMModel(cfg, page_size)
+    if cfg.family == "encdec":
+        from repro.models.encdec import EncDecModel
+
+        return EncDecModel(cfg, page_size)
+    from repro.models.transformer import TransformerLM
+
+    return TransformerLM(cfg, page_size)
+
+
+def count_params_from_config(cfg: ModelConfig, active_only: bool = False) -> int:
+    model = build_model(cfg)
+    total = model.param_count()
+    if active_only and cfg.family == "moe":
+        per_expert = 3 * cfg.d_model * cfg.expert_d_ff
+        inactive = (cfg.padded_experts - cfg.top_k) * per_expert * cfg.num_layers
+        total -= inactive
+    return total
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def decode_layout(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshSpec,
+                  page_size: int = PAGE_SIZE) -> Dict[str, int]:
+    """Static paged-pool geometry for a decode cell."""
+    data = mesh.axis_size("pod") * mesh.axis_size("data")
+    model_ax = mesh.axis_size("model")
+    if shape.global_batch % max(data, 1) == 0 and data > 1:
+        n_shards = model_ax
+    else:
+        n_shards = mesh.num_devices
+    pages_per_seq = -(-shape.seq_len // page_size) + 1  # +1 for the new token
+    pps = -(-pages_per_seq // n_shards)
+    total_pages = shape.global_batch * n_shards * pps
+    # round up so every chip gets an equal slice
+    total_pages = -(-total_pages // mesh.num_devices) * mesh.num_devices
+    return {"n_shards": n_shards, "pps": pps, "total_pages": total_pages,
+            "page_size": page_size}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: MeshSpec,
+                page_size: int = PAGE_SIZE) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the step function of (cfg, shape)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32, f32, bf16 = jnp.int32, jnp.float32, jnp.bfloat16
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            st = s - cfg.img_tokens
+            return {"tokens": _sds((b, st), i32), "labels": _sds((b, st), i32),
+                    "img_embeds": _sds((b, cfg.img_tokens, cfg.d_model), bf16)}
+        if cfg.family == "encdec":
+            return {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32),
+                    "frames": _sds((b, cfg.enc_frames, cfg.d_model), bf16)}
+        return {"tokens": _sds((b, s), i32), "labels": _sds((b, s), i32)}
+
+    model = build_model(cfg, page_size)
+
+    if cfg.family == "ssm":
+        state = {k: _sds(v, f32)
+                 for k, v in model.decode_state_shapes(b).items()}
+        if shape.kind == "prefill":
+            return {"tokens": _sds((b, s), i32), "seq_lens": _sds((b,), i32)}
+        return {"tokens": _sds((b,), i32), "seq_lens": _sds((b,), i32),
+                "state": state}
+
+    lay = decode_layout(cfg, shape, mesh, page_size)
+    nsh, pps, total = lay["n_shards"], lay["pps"], lay["total_pages"]
+    pool = _sds(model.kv_pool_shape(total), bf16)
+    tables = _sds((b, nsh, pps), i32)
+
+    if shape.kind == "prefill":
+        specs = {
+            "tokens": _sds((b, s if cfg.family != "vlm" else s - cfg.img_tokens), i32),
+            "seq_lens": _sds((b,), i32),
+            "pool": pool,
+            "tables": tables,
+            "token_shard": _sds((b, s), i32),
+            "token_slot": _sds((b, s), i32),
+            "token_off": _sds((b, s), i32),
+            "token_valid": _sds((b, s), jnp.bool_),
+        }
+        if cfg.family == "vlm":
+            specs["img_embeds"] = _sds((b, cfg.img_tokens, cfg.d_model), bf16)
+        if cfg.family == "encdec":
+            specs["frames"] = _sds((b, cfg.enc_frames, cfg.d_model), bf16)
+        return specs
+
+    # decode
+    specs = {
+        "tokens": _sds((b,), i32),
+        "seq_lens": _sds((b,), i32),
+        "pool": pool,
+        "tables": tables,
+        "page_pos": _sds((b, nsh, pps), i32),
+        "write_shard": _sds((b,), i32),
+        "write_slot": _sds((b,), i32),
+    }
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        specs["ssm_state"] = {
+            "ssm": _sds((cfg.num_layers, b, d_inner, cfg.ssm_state), f32),
+            "conv": _sds((cfg.num_layers, b, cfg.ssm_conv - 1, d_inner), f32),
+        }
+    if cfg.family == "encdec":
+        specs["cross_kv"] = _sds(model.cross_kv_shape(b), bf16)
+    return specs

@@ -1,0 +1,406 @@
+"""State-space / recurrent mixers: Mamba (hymba), mLSTM + sLSTM (xlstm).
+
+TPU adaptation notes (see DESIGN.md §2): GPU mamba relies on a fused
+selective-scan CUDA kernel; the TPU-native form is *chunked*: a
+``lax.scan`` over fixed-size chunks with an associative scan inside each
+chunk. This bounds the materialised state tensor to [B, chunk, d, n]
+(sharded over 'model' on d) instead of [B, S, d, n], and maps onto the
+MXU/VPU instead of emulating warp-level scans.
+
+Decode steps are O(1)-state recurrences; the state lives in the Libra
+anchor pool (fixed-size anchored payload — see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import constrain
+from repro.models.layers import (
+    ParamSpec,
+    causal_conv1d,
+    conv1d_step,
+    gelu,
+    group_norm,
+    rms_norm,
+)
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — used by hymba's parallel SSM heads
+# ---------------------------------------------------------------------------
+
+def mamba_template(d_model: int, ssm_state: int, conv: int, expand: int) -> Dict:
+    d_inner = expand * d_model
+    dt_rank = -(-d_model // 16)
+    return {
+        "in_proj": ParamSpec((d_model, 2 * d_inner), ("fsdp", "tensor")),
+        "conv_w": ParamSpec((conv, d_inner), ("conv", "tensor")),
+        "conv_b": ParamSpec((d_inner,), ("tensor",), init="zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * ssm_state), ("tensor", None)),
+        "dt_proj": ParamSpec((dt_rank, d_inner), (None, "tensor")),
+        "dt_bias": ParamSpec((d_inner,), ("tensor",), init="zeros"),
+        "A_log": ParamSpec((d_inner, ssm_state), ("tensor", "state"), init="zeros"),
+        "D": ParamSpec((d_inner,), ("tensor",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d_model), ("tensor", "fsdp")),
+    }
+
+
+def _mamba_gates(p, u):
+    """u [B,*,d_inner] -> (dt [B,*,d_inner], Bc [B,*,n], Cc [B,*,n])."""
+    n = p["A_log"].shape[1]
+    dt_rank = p["x_proj"].shape[1] - 2 * n
+    proj = u @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    Bc = proj[..., dt_rank : dt_rank + n]
+    Cc = proj[..., dt_rank + n :]
+    return dt, Bc, Cc
+
+
+def selective_scan_chunked(
+    u: jax.Array,   # [B, S, d]
+    dt: jax.Array,  # [B, S, d]
+    Bc: jax.Array,  # [B, S, n]
+    Cc: jax.Array,  # [B, S, n]
+    A: jax.Array,   # [d, n]  (negative)
+    h0: Optional[jax.Array] = None,
+    chunk: int = 128,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B,S,d], h_final [B,d,n])."""
+    b, s, d = u.shape
+    n = A.shape[1]
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    uc = u.reshape(b, nchunks, chunk, d).swapaxes(0, 1)
+    dtc = dt.reshape(b, nchunks, chunk, d).swapaxes(0, 1)
+    bc = Bc.reshape(b, nchunks, chunk, n).swapaxes(0, 1)
+    cc = Cc.reshape(b, nchunks, chunk, n).swapaxes(0, 1)
+
+    def body(h, xs):
+        u_c, dt_c, b_c, c_c = xs
+        a = jnp.exp(dt_c[..., None] * A)                       # [B,c,d,n]
+        x_in = (dt_c * u_c)[..., None] * b_c[:, :, None, :]    # [B,c,d,n]
+
+        def comb(x, y):
+            return (y[0] * x[0], y[0] * x[1] + y[1])
+
+        a_s, b_s = jax.lax.associative_scan(comb, (a, x_in), axis=1)
+        hs = a_s * h[:, None] + b_s                            # [B,c,d,n]
+        y = jnp.einsum("bcdn,bcn->bcd", hs, c_c)
+        return hs[:, -1], y
+
+    h = h0 if h0 is not None else jnp.zeros((b, d, n), u.dtype)
+    h, ys = jax.lax.scan(body, h, (uc, dtc, bc, cc))
+    y = ys.swapaxes(0, 1).reshape(b, nchunks * chunk, d)[:, :s]
+    return y, h
+
+
+def mamba_forward(p, x: jax.Array, *, chunk: int = 128) -> jax.Array:
+    """Full-sequence mamba mixer. x [B, S, D] -> [B, S, D]."""
+    d_inner = p["conv_w"].shape[1]
+    ug = x @ p["in_proj"]
+    u, z = ug[..., :d_inner], ug[..., d_inner:]
+    u = jax.nn.silu(causal_conv1d(u, p["conv_w"], p["conv_b"]))
+    u = constrain(u, ("batch", None, "act_ff"))  # shard d_inner over 'model'
+    dt, Bc, Cc = _mamba_gates(p, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = selective_scan_chunked(
+        u.astype(jnp.float32), dt.astype(jnp.float32),
+        Bc.astype(jnp.float32), Cc.astype(jnp.float32), A, chunk=chunk)
+    y = y.astype(x.dtype) + u * p["D"]
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+def mamba_state_shape(cfg_d_model: int, ssm_state: int, conv: int, expand: int):
+    d_inner = expand * cfg_d_model
+    return {
+        "ssm": (d_inner, ssm_state),
+        "conv": (conv - 1, d_inner),
+    }
+
+
+def mamba_step(p, x_t: jax.Array, state: Dict[str, jax.Array]):
+    """One decode step. x_t [B, D]; state {'ssm' [B,d,n], 'conv' [B,K-1,d]}."""
+    d_inner = p["conv_w"].shape[1]
+    ug = x_t @ p["in_proj"]
+    u, z = ug[..., :d_inner], ug[..., d_inner:]
+    u, conv_state = conv1d_step(u, state["conv"], p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u).astype(x_t.dtype)
+    dt, Bc, Cc = _mamba_gates(p, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt[..., None].astype(jnp.float32) * A)  # [B,d,n]
+    h = a * state["ssm"] + ((dt * u)[..., None] * Bc[:, None, :]).astype(jnp.float32)
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32)).astype(x_t.dtype) \
+        + u * p["D"]
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"ssm": h.astype(state["ssm"].dtype),
+                 "conv": conv_state.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM — matrix-memory LSTM (xLSTM), chunkwise-parallel + O(1) decode step
+# ---------------------------------------------------------------------------
+
+def mlstm_block_template(d_model: int, num_heads: int, conv: int, expand: int) -> Dict:
+    ud = expand * d_model
+    return {
+        "ln_w": ParamSpec((d_model,), (None,), init="zeros"),
+        "up_proj": ParamSpec((d_model, 2 * ud), ("fsdp", "tensor")),
+        "conv_w": ParamSpec((conv, ud), ("conv", "tensor")),
+        "conv_b": ParamSpec((ud,), ("tensor",), init="zeros"),
+        "wq": ParamSpec((ud, ud), ("fsdp", "tensor")),
+        "wk": ParamSpec((ud, ud), ("fsdp", "tensor")),
+        "wv": ParamSpec((ud, ud), ("fsdp", "tensor")),
+        "w_gates": ParamSpec((d_model, 2 * num_heads), ("fsdp", None)),
+        "b_gates": ParamSpec((2 * num_heads,), (None,), init="zeros"),
+        "gn_w": ParamSpec((ud,), ("tensor",), init="ones"),
+        "down_proj": ParamSpec((ud, d_model), ("tensor", "fsdp")),
+    }
+
+
+def mlstm_cell_sequential(q, k, v, log_i, log_f, state=None):
+    """Sequential oracle. q/k/v [B,S,H,dh]; log_i/log_f [B,S,H].
+
+    Returns (h [B,S,H,dh], state (C [B,H,dh,dh], n [B,H,dh], m [B,H])).
+    """
+    b, s, h, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    if state is None:
+        C = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n = jnp.zeros((b, h, dh), jnp.float32)
+        m = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C, n, m = state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs  # [B,H,dh], [B,H]
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)[..., None]
+        ig = jnp.exp(li - m_new)[..., None]
+        C = fg[..., None] * C + ig[..., None] * (kt[..., None] * vt[..., None, :]) * scale
+        n = fg * n + ig * kt * scale
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        hout = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), hout
+
+    xs = (q.swapaxes(0, 1).astype(jnp.float32), k.swapaxes(0, 1).astype(jnp.float32),
+          v.swapaxes(0, 1).astype(jnp.float32), log_i.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    (C, n, m), hs = jax.lax.scan(step, (C, n, m), xs)
+    return hs.swapaxes(0, 1).astype(q.dtype), (C, n, m)
+
+
+def mlstm_cell_chunked(q, k, v, log_i, log_f, state=None, chunk: int = 64):
+    """Chunkwise-parallel mLSTM (TFLA-style) — the TPU-native form.
+
+    Matches ``mlstm_cell_sequential`` to fp32 tolerance; validated in tests
+    and mirrored by the Pallas kernel in repro.kernels.mlstm_scan.
+    """
+    b, s, h, dh = q.shape
+    scale = 1.0 / math.sqrt(dh)
+    nchunks = -(-s // chunk)
+    pad = nchunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def resh(x, extra=()):
+        return x.reshape((b, nchunks, chunk) + extra).swapaxes(0, 1)
+
+    qs, ks, vs = (resh(x.astype(jnp.float32), (h, dh)) for x in (q, k, v))
+    lis, lfs = resh(log_i, (h,)), resh(log_f, (h,))
+
+    def body(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, li, lf = xs  # [B,c,H,dh], [B,c,H]
+        A = jnp.cumsum(lf, axis=1)                       # [B,c,H] inclusive
+        # intra-chunk log weights W[t,s] = A_t - A_s + li_s  (s <= t)
+        W = A[:, :, None, :] - A[:, None, :, :] + li[:, None, :, :]
+        tmask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        W = jnp.where(tmask, W, -1e30)
+        # inter-chunk log factor for the carried state
+        binter = A + m[:, None, :]                       # [B,c,H]
+        m_loc = jnp.maximum(jnp.max(W, axis=2), binter)  # [B,c,H]
+        S_intra = jnp.exp(W - m_loc[:, :, None, :])      # [B,c,c,H]
+        qk = jnp.einsum("bthd,bshd->btsh", qc, kc) * scale
+        num = jnp.einsum("btsh,btsh,bshe->bthe", S_intra, qk, vc)
+        num = num + jnp.exp(binter - m_loc)[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C)
+        den = jnp.einsum("btsh,btsh->bth", S_intra, qk)
+        den = den + jnp.exp(binter - m_loc) * jnp.einsum("bthd,bhd->bth", qc, n)
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))[..., None]
+        # ---- state update to end of chunk ----
+        A_T = A[:, -1, :]                                # [B,H]
+        w_end = A_T[:, None, :] - A + li                 # [B,c,H]
+        m_new = jnp.maximum(A_T + m, jnp.max(w_end, axis=1))
+        kv = jnp.einsum("bshd,bsh,bshe->bhde", kc * scale, jnp.exp(w_end - m_new[:, None, :]), vc)
+        ksum = jnp.einsum("bshd,bsh->bhd", kc * scale, jnp.exp(w_end - m_new[:, None, :]))
+        decay = jnp.exp(A_T + m - m_new)
+        C = decay[..., None, None] * C + kv
+        n = decay[..., None] * n + ksum
+        return (C, n, m_new), hout
+
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), (qs, ks, vs, lis, lfs))
+    hs = hs.swapaxes(0, 1).reshape(b, nchunks * chunk, h, dh)[:, :s]
+    return hs.astype(q.dtype), (C, n, m)
+
+
+def mlstm_cell_step(qt, kt, vt, li, lf, state):
+    """One decode step. qt/kt/vt [B,H,dh]; li/lf [B,H]; state (C,n,m)."""
+    C, n, m = state
+    dh = qt.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    qt, kt, vt = (x.astype(jnp.float32) for x in (qt, kt, vt))
+    m_new = jnp.maximum(lf + m, li)
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(li - m_new)
+    C = fg[..., None, None] * C + ig[..., None, None] * (kt[..., None] * vt[..., None, :]) * scale
+    n = fg[..., None] * n + ig[..., None] * kt * scale
+    num = jnp.einsum("bhd,bhde->bhe", qt, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+    h = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return h, (C, n, m_new)
+
+
+def mlstm_block_forward(p, x, cfg, *, chunk: int = 64, state=None, return_state=False):
+    """Full mLSTM residual block. x [B,S,D]."""
+    h = rms_norm(x, p["ln_w"], 1e-5)
+    ud = p["conv_w"].shape[1]
+    H = cfg.num_heads
+    upg = h @ p["up_proj"]
+    u, z = upg[..., :ud], upg[..., ud:]
+    cu = jax.nn.silu(causal_conv1d(u, p["conv_w"], p["conv_b"]))
+    b, s, _ = x.shape
+    q = (cu @ p["wq"]).reshape(b, s, H, ud // H)
+    k = (cu @ p["wk"]).reshape(b, s, H, ud // H)
+    v = (u @ p["wv"]).reshape(b, s, H, ud // H)
+    gates = (h @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    hout, st = mlstm_cell_chunked(q, k, v, log_i, log_f, state=state, chunk=chunk)
+    hout = group_norm(hout.reshape(b, s, ud), p["gn_w"], H)
+    out = (hout * jax.nn.silu(z)) @ p["down_proj"]
+    if return_state:
+        return x + out, st
+    return x + out
+
+
+def mlstm_block_step(p, x_t, cfg, state):
+    """Decode step. x_t [B,D]; state {'C','n','m','conv'}."""
+    h = rms_norm(x_t, p["ln_w"], 1e-5)
+    ud = p["conv_w"].shape[1]
+    H = cfg.num_heads
+    upg = h @ p["up_proj"]
+    u, z = upg[..., :ud], upg[..., ud:]
+    cu, conv_state = conv1d_step(u, state["conv"], p["conv_w"], p["conv_b"])
+    cu = jax.nn.silu(cu)
+    b = x_t.shape[0]
+    q = (cu @ p["wq"]).reshape(b, H, ud // H)
+    k = (cu @ p["wk"]).reshape(b, H, ud // H)
+    v = (u @ p["wv"]).reshape(b, H, ud // H)
+    gates = (h @ p["w_gates"] + p["b_gates"]).astype(jnp.float32)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+    hc, (C, n, m) = mlstm_cell_step(q, k, v, log_i, log_f,
+                                    (state["C"], state["n"], state["m"]))
+    hc = group_norm(hc.reshape(b, ud), p["gn_w"], H)
+    out = (hc.astype(x_t.dtype) * jax.nn.silu(z)) @ p["down_proj"]
+    return x_t + out, {"C": C, "n": n, "m": m, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar-memory LSTM with recurrent weights (inherently sequential)
+# ---------------------------------------------------------------------------
+
+def slstm_block_template(d_model: int, num_heads: int) -> Dict:
+    dh = d_model // num_heads
+    pf = -(-4 * d_model // 3)  # post-FFN projection factor 4/3
+    return {
+        "ln_w": ParamSpec((d_model,), (None,), init="zeros"),
+        "w_in": ParamSpec((d_model, 4 * d_model), ("fsdp", "tensor")),
+        "b_in": ParamSpec((4 * d_model,), ("tensor",), init="zeros"),
+        "r_rec": ParamSpec((4, num_heads, dh, dh), (None, "heads", None, None), scale=0.5),
+        "gn_w": ParamSpec((d_model,), ("tensor",), init="ones"),
+        "ffn_ln_w": ParamSpec((d_model,), (None,), init="zeros"),
+        "ffn_up": ParamSpec((d_model, 2 * pf), ("fsdp", "tensor")),
+        "ffn_down": ParamSpec((pf, d_model), ("tensor", "fsdp")),
+    }
+
+
+def _slstm_scan(p, hx, num_heads: int, state):
+    """hx [B,S,4*D] precomputed input projections; sequential over S."""
+    b, s, d4 = hx.shape
+    d = d4 // 4
+    dh = d // num_heads
+    c0, n0, m0, h0 = state
+    c0, n0, m0 = (t.astype(jnp.float32) for t in (c0, n0, m0))
+    h0 = h0.astype(hx.dtype)
+
+    def step(carry, xt):
+        c, n, m, h_prev = carry  # [B,H,dh] except m [B,H,dh]
+        zi = xt.reshape(b, 4, num_heads, dh)
+        rec = jnp.einsum("bhd,khde->kbhe", h_prev, p["r_rec"])
+        z_t = jnp.tanh(zi[:, 0] + rec[0])
+        li = (zi[:, 1] + rec[1]).astype(jnp.float32)
+        lf = jax.nn.log_sigmoid((zi[:, 2] + rec[2]).astype(jnp.float32))
+        o = jax.nn.sigmoid(zi[:, 3] + rec[3])
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(li - m_new)
+        c_new = fg * c + ig * z_t.astype(jnp.float32)
+        n_new = fg * n + ig
+        h = (o.astype(jnp.float32)
+             * (c_new / jnp.maximum(n_new, 1e-6))).astype(hx.dtype)
+        return (c_new, n_new, m_new, h), h
+
+    (c, n, m, h), hs = jax.lax.scan(step, (c0, n0, m0, h0), hx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).reshape(b, s, d), (c, n, m, h)
+
+
+def slstm_init_state(b: int, num_heads: int, d_model: int):
+    dh = d_model // num_heads
+    z = jnp.zeros((b, num_heads, dh), jnp.float32)
+    return (z, z, jnp.full((b, num_heads, dh), -1e30, jnp.float32), z.astype(jnp.bfloat16) * 0)
+
+
+def slstm_block_forward(p, x, cfg, *, state=None, return_state=False):
+    b, s, d = x.shape
+    H = cfg.num_heads
+    h = rms_norm(x, p["ln_w"], 1e-5)
+    hx = h @ p["w_in"] + p["b_in"]
+    if state is None:
+        state = slstm_init_state(b, H, d)
+        state = (state[0], state[1], state[2], jnp.zeros((b, H, d // H), x.dtype))
+    hs, st = _slstm_scan(p, hx, H, state)
+    hs = group_norm(hs, p["gn_w"], H)
+    y = x + hs
+    # gated FFN (4/3 projection factor)
+    f = rms_norm(y, p["ffn_ln_w"], 1e-5)
+    pf = p["ffn_down"].shape[0]
+    up = f @ p["ffn_up"]
+    f = gelu(up[..., :pf]) * up[..., pf:]
+    out = y + f @ p["ffn_down"]
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_block_step(p, x_t, cfg, state):
+    out, st = slstm_block_forward(p, x_t[:, None, :], cfg,
+                                  state=(state["c"], state["n"], state["m"], state["h"]),
+                                  return_state=True)
+    return out[:, 0, :], {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}

@@ -1,0 +1,557 @@
+"""Unified decoder-only LM: dense / MoE / hybrid(attn+SSM) / VLM families.
+
+One implementation serves phi3, phi4, minicpm, mistral-nemo, hymba, qwen3-moe,
+qwen2-moe, internvl2 and the libra-proxy model. Layers are scanned
+(``lax.scan``) in homogeneous *groups* (hymba's per-layer attention windows
+split the scan into segments) so 80-layer × 512-device dry-runs compile in
+seconds. Per-layer remat policy is configurable.
+
+Serving follows the Libra datapath: ``prefill`` anchors KV into pool pages
+in place (ingress), ``decode_step`` reads them via block-table metadata and
+returns *only sampled token ids* to the host (selective copy). The
+contiguous-KV baseline (``decode_step_dense``) implements the standard-stack
+comparison: it re-gathers the full KV every step and ships full logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.common.sharding import constrain
+from repro.common.types import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    ParamSpec,
+    abstract_params,
+    apply_rope,
+    count_template_params,
+    init_params,
+    mlp_apply,
+    mlp_template,
+    param_axes,
+    rms_norm,
+)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def stack_template(tmpl: Dict, n: int) -> Dict:
+    """Prepend a scanned 'layers' dim to every ParamSpec in a template."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale,
+                            tuple(d + 1 for d in s.fan_in_dims)),
+        tmpl,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerGroup:
+    start: int
+    end: int
+    window: int  # 0 = global attention
+
+
+def layer_groups(cfg: ModelConfig) -> List[LayerGroup]:
+    if cfg.family != "hybrid" or not cfg.global_attn_layers:
+        return [LayerGroup(0, cfg.num_layers, cfg.window if cfg.family == "hybrid" else 0)]
+    groups: List[LayerGroup] = []
+    cur = 0
+    for g in sorted(cfg.global_attn_layers):
+        if g > cur:
+            groups.append(LayerGroup(cur, g, cfg.window))
+        groups.append(LayerGroup(g, g + 1, 0))
+        cur = g + 1
+    if cur < cfg.num_layers:
+        groups.append(LayerGroup(cur, cfg.num_layers, cfg.window))
+    return groups
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig, page_size: int = 64):
+        self.cfg = cfg
+        self.page_size = page_size
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def layer_template(self) -> Dict:
+        c = self.cfg
+        t: Dict[str, Any] = {
+            "ln1": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "wq": ParamSpec((c.d_model, c.q_dim), ("fsdp", "tensor")),
+            "wk": ParamSpec((c.d_model, c.kv_dim), ("fsdp", "tensor")),
+            "wv": ParamSpec((c.d_model, c.kv_dim), ("fsdp", "tensor")),
+            "wo": ParamSpec((c.q_dim, c.d_model), ("tensor", "fsdp")),
+            "ln2": ParamSpec((c.d_model,), (None,), init="zeros"),
+        }
+        if c.qk_norm:
+            t["q_norm"] = ParamSpec((c.head_dim,), (None,), init="zeros")
+            t["k_norm"] = ParamSpec((c.head_dim,), (None,), init="zeros")
+        if c.family == "moe":
+            t["moe"] = moe_lib.moe_template(c)
+        else:
+            t["mlp"] = mlp_template(c.d_model, c.d_ff, c.act)
+        if c.family == "hybrid":
+            t["ssm"] = ssm_lib.mamba_template(c.d_model, c.ssm_state, c.ssm_conv,
+                                              c.ssm_expand)
+            t["attn_branch_norm"] = ParamSpec((c.d_model,), (None,), init="zeros")
+            t["ssm_branch_norm"] = ParamSpec((c.d_model,), (None,), init="zeros")
+        return t
+
+    def template(self) -> Dict:
+        c = self.cfg
+        t: Dict[str, Any] = {
+            "embed": ParamSpec((c.vocab_size, c.d_model), ("tensor", None), scale=1.0,
+                               fan_in_dims=(1,)),
+            "final_norm": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "layers": stack_template(self.layer_template(), c.num_layers),
+        }
+        if not c.tie_embeddings:
+            t["lm_head"] = ParamSpec((c.d_model, c.vocab_size), ("fsdp", "tensor"))
+        if c.family == "vlm":
+            # projection stub applied to precomputed patch embeddings
+            t["img_proj"] = ParamSpec((c.d_model, c.d_model), ("fsdp", "tensor"))
+        return t
+
+    def init_params(self, key, dtype=jnp.float32):
+        return init_params(key, self.template(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_params(self.template(), dtype)
+
+    def param_axes(self):
+        return param_axes(self.template())
+
+    def param_count(self) -> int:
+        return count_template_params(self.template())
+
+    # ------------------------------------------------------------------
+    # layer forward (training / prefill)
+    # ------------------------------------------------------------------
+    def _attention_block(self, p, h, positions, window: int, head_sharded: bool,
+                         kv_writer=None):
+        """h = normed input [B,S,D]. Returns (attn_out [B,S,D-proj], (k, v))."""
+        c = self.cfg
+        b, s, _ = h.shape
+        q = (h @ p["wq"]).reshape(b, s, c.num_heads, c.head_dim)
+        k = (h @ p["wk"]).reshape(b, s, c.num_kv_heads, c.head_dim)
+        v = (h @ p["wv"]).reshape(b, s, c.num_kv_heads, c.head_dim)
+        if c.qk_norm:
+            q = rms_norm(q, p["q_norm"], c.norm_eps)
+            k = rms_norm(k, p["k_norm"], c.norm_eps)
+        q = apply_rope(q, positions, c.rope_theta)
+        k = apply_rope(k, positions, c.rope_theta)
+        if head_sharded:
+            q = constrain(q, ("batch", None, "act_heads", None))
+            k = constrain(k, ("batch", None, "act_heads", None))
+            v = constrain(v, ("batch", None, "act_heads", None))
+        else:  # sequence-parallel attention (head count not divisible)
+            q = constrain(q, ("batch", "seq", None, None))
+        if kv_writer is not None:
+            kv_writer(k, v)
+        if s <= 1024:
+            out = attn.dense_attention(q, k, v, positions, positions,
+                                       causal=True, window=window)
+        else:
+            out = attn.blockwise_attention(q, k, v, positions, positions,
+                                           causal=True, window=window)
+        out = out.reshape(b, s, c.q_dim)
+        if head_sharded:
+            out = constrain(out, ("batch", None, "act_ff"))
+        return out @ p["wo"]
+
+    def _layer(self, p, x, positions, window: int, head_sharded: bool,
+               kv_writer=None, capacity_factor: float = 1.25):
+        """One transformer block. Returns (x, aux_loss)."""
+        c = self.cfg
+        b, s, _ = x.shape
+        h = rms_norm(x, p["ln1"], c.norm_eps)
+        attn_out = self._attention_block(p, h, positions, window, head_sharded,
+                                         kv_writer)
+        if c.family == "hybrid":
+            ssm_out = ssm_lib.mamba_forward(p["ssm"], h)
+            mixed = 0.5 * (rms_norm(attn_out, p["attn_branch_norm"], c.norm_eps)
+                           + rms_norm(ssm_out, p["ssm_branch_norm"], c.norm_eps))
+            x = x + mixed * c.residual_scale
+        else:
+            x = x + attn_out * c.residual_scale
+        h2 = rms_norm(x, p["ln2"], c.norm_eps)
+        aux = jnp.zeros((), jnp.float32)
+        if c.family == "moe":
+            flat, aux = moe_lib.moe_ffn(p["moe"], h2.reshape(b * s, c.d_model), c,
+                                        capacity_factor=capacity_factor,
+                                        return_aux=True)
+            mlp_out = flat.reshape(b, s, c.d_model)
+        else:
+            mlp_out = mlp_apply(p["mlp"], h2, c.act)
+        x = x + mlp_out * c.residual_scale
+        x = constrain(x, ("batch", None, "embed"))
+        return x, aux
+
+    # ------------------------------------------------------------------
+    # full forward
+    # ------------------------------------------------------------------
+    def embed(self, params, tokens, img_embeds=None):
+        c = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if c.family == "vlm":
+            assert img_embeds is not None, "vlm needs patch embeddings"
+            img = img_embeds @ params["img_proj"]
+            x = jnp.concatenate([img.astype(x.dtype), x], axis=1)
+        return x
+
+    def forward(
+        self,
+        params,
+        tokens: jax.Array,                 # [B, S_text]
+        img_embeds: Optional[jax.Array] = None,
+        positions: Optional[jax.Array] = None,
+        *,
+        compute_dtype=jnp.bfloat16,
+        remat: str = "full",
+        head_sharded: Optional[bool] = None,
+        tp_size: int = 1,
+        capacity_factor: float = 1.25,
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (final hidden [B, S, D], total aux loss)."""
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        x = self.embed(params, tokens, img_embeds)
+        b, s, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        if head_sharded is None:
+            head_sharded = (c.num_heads % max(tp_size, 1) == 0)
+        x = constrain(x, ("batch", None, "embed"))
+
+        policy = REMAT_POLICIES["none" if remat == "none" else remat]
+        aux_total = jnp.zeros((), jnp.float32)
+        for grp in layer_groups(c):
+            gp = jax.tree.map(lambda a: a[grp.start : grp.end], params["layers"])
+
+            def body(x, lp, _window=grp.window):
+                f = lambda xx: self._layer(lp, xx, positions, _window,
+                                           head_sharded, None, capacity_factor)
+                if remat != "none":
+                    f = jax.checkpoint(f, policy=policy)
+                return f(x)
+
+            x, auxs = jax.lax.scan(body, x, gp)
+            aux_total = aux_total + jnp.sum(auxs)
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        return x, aux_total
+
+    def logits(self, params, hidden, compute_dtype=jnp.bfloat16):
+        c = self.cfg
+        if c.tie_embeddings:
+            w = params["embed"].astype(compute_dtype).T
+        else:
+            w = params["lm_head"].astype(compute_dtype)
+        out = hidden @ w
+        if c.embed_scale != 1.0:
+            out = out * c.embed_scale
+        if c.logit_soft_cap > 0:
+            out = jnp.tanh(out / c.logit_soft_cap) * c.logit_soft_cap
+        return constrain(out, ("batch", None, "vocab"))
+
+    def loss_fn(self, params, batch: Dict[str, jax.Array], *, remat: str = "full",
+                tp_size: int = 1, rngs=None) -> Tuple[jax.Array, Dict]:
+        """batch: tokens [B,S], labels [B,S] (-1 = masked), optional
+        img_embeds [B,Timg,D]."""
+        c = self.cfg
+        hidden, aux = self.forward(params, batch["tokens"],
+                                   img_embeds=batch.get("img_embeds"),
+                                   remat=remat, tp_size=tp_size)
+        labels = batch["labels"]
+        if c.family == "vlm":  # img prefix carries no loss
+            t_img = hidden.shape[1] - labels.shape[1]
+            hidden = hidden[:, t_img:]
+        logits = self.logits(params, hidden).astype(jnp.float32)
+        mask = (labels >= 0).astype(jnp.float32)
+        safe_labels = jnp.maximum(labels, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe_labels[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        ntok = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(nll) / ntok
+        zloss = 1e-4 * jnp.sum(jnp.square(lse) * mask) / ntok
+        total = loss + zloss + c.router_aux_coef * aux
+        return total, {"loss": loss, "zloss": zloss, "aux": aux,
+                       "ntok": ntok}
+
+    # ------------------------------------------------------------------
+    # serving: Libra fast path (paged, anchored)
+    # ------------------------------------------------------------------
+    def kv_pool_shape(self, total_pages: int) -> Tuple[int, ...]:
+        c = self.cfg
+        return (c.num_layers, total_pages, self.page_size, 2, c.num_kv_heads,
+                c.head_dim)
+
+    def decode_step(
+        self,
+        params,
+        tokens: jax.Array,       # [B] current token ids
+        seq_lens: jax.Array,     # [B] position of the incoming token
+        pool: jax.Array,         # [L, P, page, 2, Hkv, hd]
+        tables: jax.Array,       # [B, nsh, pps]
+        page_pos: jax.Array,     # [B, nsh, pps]
+        write_shard: jax.Array,  # [B]
+        write_slot: jax.Array,   # [B]
+        *,
+        mesh: Mesh,
+        batch_axis,
+        combine_axes,
+        ssm_state: Optional[Dict[str, jax.Array]] = None,  # hybrid only
+        compute_dtype=jnp.bfloat16,
+    ):
+        """One Libra decode step. Returns (next_tokens [B] int32, pool, ssm_state).
+
+        Host↔device traffic: token ids + O(pages) int32 metadata in; token
+        ids out. The KV payload never leaves the pool (selective copy)."""
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        x = jnp.take(params["embed"], tokens, axis=0)  # [B, D]
+        positions = seq_lens
+
+        groups = layer_groups(c)
+        windows = [0] * c.num_layers
+        for grp in groups:
+            for li in range(grp.start, grp.end):
+                windows[li] = grp.window
+        window_arr = jnp.array(windows, jnp.int32)
+
+        def layer_step(carry, xs):
+            x = carry
+            if c.family == "hybrid":
+                lp, pool_l, window, ssm_l, conv_l = xs
+            else:
+                lp, pool_l, window = xs
+                ssm_l = conv_l = None
+            b = x.shape[0]
+            h = rms_norm(x, lp["ln1"], c.norm_eps)
+            q = (h @ lp["wq"]).reshape(b, c.num_heads, c.head_dim)
+            k = (h @ lp["wk"]).reshape(b, c.num_kv_heads, c.head_dim)
+            v = (h @ lp["wv"]).reshape(b, c.num_kv_heads, c.head_dim)
+            if c.qk_norm:
+                q = rms_norm(q, lp["q_norm"], c.norm_eps)
+                k = rms_norm(k, lp["k_norm"], c.norm_eps)
+            q = apply_rope(q[:, None], positions[:, None], c.rope_theta)[:, 0]
+            k = apply_rope(k[:, None], positions[:, None], c.rope_theta)[:, 0]
+            out, pool_l = attn.paged_decode_attention(
+                q, k, v, pool_l, tables, page_pos, seq_lens, write_shard,
+                write_slot, mesh=mesh, batch_axis=batch_axis,
+                combine_axes=combine_axes, window=window)
+            attn_out = out.reshape(b, c.q_dim) @ lp["wo"]
+            new_ssm = new_conv = None
+            if c.family == "hybrid":
+                ssm_out, st = ssm_lib.mamba_step(lp["ssm"], h,
+                                                 {"ssm": ssm_l, "conv": conv_l})
+                new_ssm, new_conv = st["ssm"], st["conv"]
+                mixed = 0.5 * (rms_norm(attn_out, lp["attn_branch_norm"], c.norm_eps)
+                               + rms_norm(ssm_out, lp["ssm_branch_norm"], c.norm_eps))
+                x = x + mixed * c.residual_scale
+            else:
+                x = x + attn_out * c.residual_scale
+            h2 = rms_norm(x, lp["ln2"], c.norm_eps)
+            if c.family == "moe":
+                mlp_out = moe_lib.moe_ffn(lp["moe"], h2, c, capacity_factor=2.0)
+            else:
+                mlp_out = mlp_apply(lp["mlp"], h2, c.act)
+            x = x + mlp_out * c.residual_scale
+            if c.family == "hybrid":
+                return x, (pool_l, new_ssm, new_conv)
+            return x, (pool_l,)
+
+        if c.family == "hybrid":
+            xs = (params["layers"], pool, window_arr, ssm_state["ssm"],
+                  ssm_state["conv"])
+        else:
+            xs = (params["layers"], pool, window_arr)
+        x, ys = jax.lax.scan(layer_step, x, xs)
+        new_pool = ys[0]
+        new_ssm_state = None
+        if c.family == "hybrid":
+            new_ssm_state = {"ssm": ys[1], "conv": ys[2]}
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = self.logits(params, x[:, None])[:, 0]
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_pool, new_ssm_state
+
+    def prefill(
+        self,
+        params,
+        tokens: jax.Array,       # [B, S]
+        seq_lens: jax.Array,     # [B]
+        pool: jax.Array,         # [L, P, page, 2, Hkv, hd]
+        tables: jax.Array,
+        token_shard: jax.Array,  # [B, S]
+        token_slot: jax.Array,
+        token_off: jax.Array,
+        token_valid: jax.Array,
+        *,
+        mesh: Mesh,
+        batch_axis,
+        combine_axes,
+        img_embeds: Optional[jax.Array] = None,
+        compute_dtype=jnp.bfloat16,
+        tp_size: int = 1,
+    ):
+        """Ingress: run the prompt, anchor its KV into pool pages in place,
+        return (first sampled tokens [B], updated pool). Only metadata
+        (token ids) ever surfaces to the host. Layers are scanned per group
+        with the pool slice threaded as scan xs/ys."""
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        x = self.embed(params, tokens, img_embeds)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        head_sharded = (c.num_heads % max(tp_size, 1) == 0)
+        x = constrain(x, ("batch", None, "embed"))
+
+        def writer_for(pool_l):
+            box = {}
+
+            def write(k, v):
+                box["pool"] = attn.prefill_write_pages(
+                    k, v, pool_l, tables, token_shard, token_slot,
+                    token_off, token_valid, mesh=mesh,
+                    batch_axis=batch_axis, combine_axes=combine_axes)
+            return write, box
+
+        new_pool_groups = []
+        for grp in layer_groups(c):
+            gp = jax.tree.map(lambda a: a[grp.start : grp.end], params["layers"])
+            pool_g = pool[grp.start : grp.end]
+
+            def body(x, xs, _window=grp.window):
+                lp, pool_l = xs
+                write, box = writer_for(pool_l)
+                x, _aux = self._layer(lp, x, positions, _window, head_sharded,
+                                      write, 2.0)
+                return x, box["pool"]
+
+            x, pool_g_new = jax.lax.scan(body, x, (gp, pool_g))
+            new_pool_groups.append(pool_g_new)
+        new_pool = jnp.concatenate(new_pool_groups, axis=0) \
+            if len(new_pool_groups) > 1 else new_pool_groups[0]
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        # sample the first output token from the last valid position
+        idx = jnp.maximum(seq_lens - 1, 0)
+        if c.family == "vlm":
+            idx = idx + (x.shape[1] - tokens.shape[1])
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self.logits(params, last, compute_dtype)[:, 0]
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, new_pool
+
+    # ------------------------------------------------------------------
+    # serving baseline: the "standard stack" contiguous-copy datapath
+    # ------------------------------------------------------------------
+    def prefill_dense(self, params, tokens, seq_lens, max_len: int,
+                      *, compute_dtype=jnp.bfloat16):
+        """Baseline prefill: returns (first_tokens [B], kv_cache
+        [L, B, max_len, 2, Hkv, hd]) — the contiguous cache the standard
+        stack re-copies every step."""
+        c = self.cfg
+        params_c = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        b, s = tokens.shape
+        x = jnp.take(params_c["embed"], tokens, axis=0)
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+        def body(x, lp):
+            h = rms_norm(x, lp["ln1"], c.norm_eps)
+            q = (h @ lp["wq"]).reshape(b, s, c.num_heads, c.head_dim)
+            k = (h @ lp["wk"]).reshape(b, s, c.num_kv_heads, c.head_dim)
+            v = (h @ lp["wv"]).reshape(b, s, c.num_kv_heads, c.head_dim)
+            if c.qk_norm:
+                q = rms_norm(q, lp["q_norm"], c.norm_eps)
+                k = rms_norm(k, lp["k_norm"], c.norm_eps)
+            q = apply_rope(q, positions, c.rope_theta)
+            k = apply_rope(k, positions, c.rope_theta)
+            out = attn.dense_attention(q, k, v, positions, positions,
+                                       causal=True) if s <= 1024 else \
+                attn.blockwise_attention(q, k, v, positions, positions,
+                                         causal=True)
+            x = x + out.reshape(b, s, c.q_dim) @ lp["wo"] * c.residual_scale
+            h2 = rms_norm(x, lp["ln2"], c.norm_eps)
+            if c.family == "moe":
+                mlp_out = moe_lib.moe_ffn(lp["moe"], h2.reshape(b * s, -1), c,
+                                          capacity_factor=2.0
+                                          ).reshape(b, s, c.d_model)
+            else:
+                mlp_out = mlp_apply(lp["mlp"], h2, c.act)
+            x = x + mlp_out * c.residual_scale
+            kv = jnp.stack([k, v], axis=2)            # [B, S, 2, Hkv, hd]
+            kv = jnp.pad(kv, ((0, 0), (0, max_len - s), (0, 0), (0, 0), (0, 0)))
+            return x, kv
+
+        x, cache = jax.lax.scan(body, x, params_c["layers"])
+        x = rms_norm(x, params_c["final_norm"], c.norm_eps)
+        idx = jnp.maximum(seq_lens - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self.logits(params_c, last, compute_dtype)[:, 0]
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, cache
+
+    def decode_step_dense(self, params, tokens, seq_lens, kv_cache,
+                          *, compute_dtype=jnp.bfloat16):
+        """Standard-stack analogue: contiguous KV [L, B, Smax, 2, Hkv, hd];
+        every step concatenates/gathers the full cache (the copy tax) and
+        returns FULL logits (shipped to the host in the baseline engine).
+        """
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        positions = seq_lens
+
+        def layer_step(x, xs):
+            lp, cache_l = xs  # cache_l [B, Smax, 2, Hkv, hd]
+            b = x.shape[0]
+            h = rms_norm(x, lp["ln1"], c.norm_eps)
+            q = (h @ lp["wq"]).reshape(b, c.num_heads, c.head_dim)
+            k = (h @ lp["wk"]).reshape(b, c.num_kv_heads, c.head_dim)
+            v = (h @ lp["wv"]).reshape(b, c.num_kv_heads, c.head_dim)
+            if c.qk_norm:
+                q = rms_norm(q, lp["q_norm"], c.norm_eps)
+                k = rms_norm(k, lp["k_norm"], c.norm_eps)
+            q = apply_rope(q[:, None], positions[:, None], c.rope_theta)[:, 0]
+            k = apply_rope(k[:, None], positions[:, None], c.rope_theta)[:, 0]
+            # the "copy": rebuild the contiguous KV with the new token placed
+            kv_new = jnp.stack([k, v], axis=1)[:, None]        # [B,1,2,Hkv,hd]
+            cache_l = jax.vmap(
+                lambda cl, sl, kvn: jax.lax.dynamic_update_slice_in_dim(
+                    cl, kvn.astype(cl.dtype), sl, 0)
+            )(cache_l, seq_lens, kv_new[:, 0][:, None])
+            kk, vv = cache_l[:, :, 0], cache_l[:, :, 1]
+            pos_kv = jnp.broadcast_to(jnp.arange(kk.shape[1]), (b, kk.shape[1]))
+            valid = pos_kv <= seq_lens[:, None]
+            out = attn.dense_attention(q[:, None], kk.astype(compute_dtype),
+                                       vv.astype(compute_dtype),
+                                       positions[:, None], pos_kv,
+                                       causal=False, kv_valid=valid)[:, 0]
+            x = x + out.reshape(b, c.q_dim) @ lp["wo"] * c.residual_scale
+            h2 = rms_norm(x, lp["ln2"], c.norm_eps)
+            if c.family == "moe":
+                mlp_out = moe_lib.moe_ffn(lp["moe"], h2, c, capacity_factor=2.0)
+            else:
+                mlp_out = mlp_apply(lp["mlp"], h2, c.act)
+            x = x + mlp_out * c.residual_scale
+            return x, cache_l
+
+        x, new_cache = jax.lax.scan(layer_step, x, (params["layers"], kv_cache))
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = self.logits(params, x[:, None])[:, 0]
+        return logits, new_cache

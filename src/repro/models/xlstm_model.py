@@ -1,0 +1,262 @@
+"""xLSTM language model (xlstm-350m): alternating mLSTM / sLSTM blocks.
+
+Attention-free: the Libra anchored payload is the *recurrent state* (matrix
+memory C per mLSTM block, scalar cells per sLSTM block) living in fixed-size
+anchor-pool slots — selective copy degenerates to state-handle passing (see
+DESIGN.md §Arch-applicability). Decode cost is O(1) in context length, which
+is why long_500k runs here and not on the full-attention archs.
+
+Blocks are stacked in two homogeneous groups (mLSTM stack + sLSTM stack) and
+executed in position order via per-group scans over contiguous runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import constrain
+from repro.common.types import ModelConfig
+from repro.models.layers import (
+    ParamSpec,
+    abstract_params,
+    count_template_params,
+    init_params,
+    param_axes,
+    rms_norm,
+)
+from repro.models.ssm import (
+    mlstm_block_forward,
+    mlstm_block_step,
+    mlstm_block_template,
+    slstm_block_forward,
+    slstm_block_step,
+    slstm_block_template,
+    slstm_init_state,
+)
+from repro.models.transformer import REMAT_POLICIES, stack_template
+
+
+def block_kinds(cfg: ModelConfig) -> List[str]:
+    """Position i is sLSTM iff (i + 1) % slstm_every == 0 (xLSTM[7:1])."""
+    k = []
+    for i in range(cfg.num_layers):
+        if cfg.slstm_every and (i + 1) % cfg.slstm_every == 0:
+            k.append("slstm")
+        else:
+            k.append("mlstm")
+    return k
+
+
+def runs(kinds: List[str]) -> List[Tuple[str, int, int]]:
+    """Contiguous (kind, start_within_kind_stack, length) runs in order."""
+    out = []
+    idx = {"mlstm": 0, "slstm": 0}
+    i = 0
+    while i < len(kinds):
+        j = i
+        while j < len(kinds) and kinds[j] == kinds[i]:
+            j += 1
+        out.append((kinds[i], idx[kinds[i]], j - i))
+        idx[kinds[i]] += j - i
+        i = j
+    return out
+
+
+class XLSTMModel:
+    def __init__(self, cfg: ModelConfig, page_size: int = 64):
+        self.cfg = cfg
+        self.page_size = page_size  # unused (no KV); kept for API parity
+        self.kinds = block_kinds(cfg)
+        self.n_mlstm = self.kinds.count("mlstm")
+        self.n_slstm = self.kinds.count("slstm")
+
+    # -- params -----------------------------------------------------------
+    def template(self) -> Dict:
+        c = self.cfg
+        t = {
+            "embed": ParamSpec((c.vocab_size, c.d_model), ("tensor", None),
+                               fan_in_dims=(1,)),
+            "final_norm": ParamSpec((c.d_model,), (None,), init="zeros"),
+            "lm_head": ParamSpec((c.d_model, c.vocab_size), ("fsdp", "tensor")),
+            "mlstm": stack_template(
+                mlstm_block_template(c.d_model, c.num_heads, c.ssm_conv,
+                                     c.ssm_expand), self.n_mlstm),
+        }
+        if self.n_slstm:
+            t["slstm"] = stack_template(
+                slstm_block_template(c.d_model, c.num_heads), self.n_slstm)
+        return t
+
+    def init_params(self, key, dtype=jnp.float32):
+        return init_params(key, self.template(), dtype)
+
+    def abstract_params(self, dtype=jnp.float32):
+        return abstract_params(self.template(), dtype)
+
+    def param_axes(self):
+        return param_axes(self.template())
+
+    def param_count(self) -> int:
+        return count_template_params(self.template())
+
+    # -- forward -----------------------------------------------------------
+    def forward(self, params, tokens, *, compute_dtype=jnp.bfloat16,
+                remat: str = "full", **_unused):
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        x = constrain(x, ("batch", None, "embed"))
+        policy = REMAT_POLICIES["none" if remat == "none" else remat]
+
+        for kind, start, length in runs(self.kinds):
+            gp = jax.tree.map(lambda a: a[start : start + length], params[kind])
+
+            def body(x, lp, _kind=kind):
+                if _kind == "mlstm":
+                    f = lambda xx: mlstm_block_forward(lp, xx, c)
+                else:
+                    f = lambda xx: slstm_block_forward(lp, xx, c)
+                if remat != "none":
+                    f = jax.checkpoint(f, policy=policy)
+                return f(x), jnp.zeros((), jnp.float32)
+
+            x, _ = jax.lax.scan(body, x, gp)
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        return x, jnp.zeros((), jnp.float32)
+
+    def logits(self, params, hidden, compute_dtype=jnp.bfloat16):
+        out = hidden @ params["lm_head"].astype(compute_dtype)
+        return constrain(out, ("batch", None, "vocab"))
+
+    def loss_fn(self, params, batch, *, remat: str = "full", tp_size: int = 1,
+                rngs=None):
+        hidden, _ = self.forward(params, batch["tokens"], remat=remat)
+        logits = self.logits(params, hidden).astype(jnp.float32)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                                   axis=-1)[..., 0]
+        ntok = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum((lse - gold) * mask) / ntok
+        return loss, {"loss": loss, "ntok": ntok}
+
+    # -- serving -----------------------------------------------------------
+    def decode_state_shapes(self, batch: int) -> Dict[str, Tuple[int, ...]]:
+        c = self.cfg
+        ud = c.ssm_expand * c.d_model
+        dh_m = ud // c.num_heads
+        dh_s = c.d_model // c.num_heads
+        shapes = {
+            "m_C": (self.n_mlstm, batch, c.num_heads, dh_m, dh_m),
+            "m_n": (self.n_mlstm, batch, c.num_heads, dh_m),
+            "m_m": (self.n_mlstm, batch, c.num_heads),
+            "m_conv": (self.n_mlstm, batch, c.ssm_conv - 1, ud),
+        }
+        if self.n_slstm:
+            shapes.update({
+                "s_c": (self.n_slstm, batch, c.num_heads, dh_s),
+                "s_n": (self.n_slstm, batch, c.num_heads, dh_s),
+                "s_m": (self.n_slstm, batch, c.num_heads, dh_s),
+                "s_h": (self.n_slstm, batch, c.num_heads, dh_s),
+            })
+        return shapes
+
+    def init_decode_state(self, batch: int, dtype=jnp.float32):
+        shapes = self.decode_state_shapes(batch)
+        st = {k: jnp.zeros(s, dtype) for k, s in shapes.items()}
+        st["m_m"] = jnp.full(shapes["m_m"], -1e30, dtype)
+        if self.n_slstm:
+            st["s_m"] = jnp.full(shapes["s_m"], -1e30, dtype)
+        return st
+
+    def decode_step(self, params, tokens, seq_lens, state,
+                    *, compute_dtype=jnp.bfloat16, **_unused):
+        """O(1) decode: anchored recurrent state in, token ids out."""
+        c = self.cfg
+        params = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        x = jnp.take(params["embed"], tokens, axis=0)
+        new_state = dict(state)
+
+        for kind, start, length in runs(self.kinds):
+            gp = jax.tree.map(lambda a: a[start : start + length], params[kind])
+            if kind == "mlstm":
+                xs = (gp, state["m_C"][start : start + length],
+                      state["m_n"][start : start + length],
+                      state["m_m"][start : start + length],
+                      state["m_conv"][start : start + length])
+
+                def body(x, s):
+                    lp, C, n, m, conv = s
+                    x, st = mlstm_block_step(lp, x, c,
+                                             {"C": C, "n": n, "m": m, "conv": conv})
+                    return x, (st["C"], st["n"], st["m"], st["conv"])
+
+                x, ys = jax.lax.scan(body, x, xs)
+                for key, val in zip(("m_C", "m_n", "m_m", "m_conv"), ys):
+                    new_state[key] = new_state[key].at[start : start + length].set(
+                        val.astype(new_state[key].dtype))
+            else:
+                xs = (gp, state["s_c"][start : start + length],
+                      state["s_n"][start : start + length],
+                      state["s_m"][start : start + length],
+                      state["s_h"][start : start + length])
+
+                def body(x, s):
+                    lp, cc, nn, mm, hh = s
+                    x, st = slstm_block_step(lp, x, c,
+                                             {"c": cc, "n": nn, "m": mm, "h": hh})
+                    return x, (st["c"], st["n"], st["m"], st["h"])
+
+                x, ys = jax.lax.scan(body, x, xs)
+                for key, val in zip(("s_c", "s_n", "s_m", "s_h"), ys):
+                    new_state[key] = new_state[key].at[start : start + length].set(
+                        val.astype(new_state[key].dtype))
+
+        x = rms_norm(x, params["final_norm"], c.norm_eps)
+        logits = self.logits(params, x[:, None])[:, 0]
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_state
+
+    def prefill(self, params, tokens, seq_lens, *, compute_dtype=jnp.bfloat16,
+                **_unused):
+        """Anchor the prompt's recurrent state (run the full forward once,
+        keeping final states). Returns (first_tokens, decode_state)."""
+        c = self.cfg
+        params_c = jax.tree.map(lambda a: a.astype(compute_dtype), params)
+        b = tokens.shape[0]
+        x = jnp.take(params_c["embed"], tokens, axis=0)
+        state = self.init_decode_state(b)
+
+        mi = si = 0
+        for kind, start, length in runs(self.kinds):
+            gp = jax.tree.map(lambda a: a[start : start + length], params_c[kind])
+            for off in range(length):
+                lp = jax.tree.map(lambda a: a[off], gp)
+                if kind == "mlstm":
+                    x2 = x
+                    x, st = mlstm_block_forward(lp, x2, c, return_state=True)
+                    C, n, m = st
+                    state["m_C"] = state["m_C"].at[start + off].set(C)
+                    state["m_n"] = state["m_n"].at[start + off].set(n)
+                    state["m_m"] = state["m_m"].at[start + off].set(m)
+                    # conv state: last K-1 inputs of the up-projected stream
+                    ud = lp["conv_w"].shape[1]
+                    u = (rms_norm(x2, lp["ln_w"], 1e-5) @ lp["up_proj"])[..., :ud]
+                    state["m_conv"] = state["m_conv"].at[start + off].set(
+                        u[:, -(c.ssm_conv - 1):, :].astype(jnp.float32))
+                else:
+                    x, st = slstm_block_forward(lp, x, c, return_state=True)
+                    state["s_c"] = state["s_c"].at[start + off].set(st[0])
+                    state["s_n"] = state["s_n"].at[start + off].set(st[1])
+                    state["s_m"] = state["s_m"].at[start + off].set(st[2])
+                    state["s_h"] = state["s_h"].at[start + off].set(
+                        st[3].astype(jnp.float32))
+        x = rms_norm(x, params_c["final_norm"], c.norm_eps)
+        idx = jnp.maximum(seq_lens - 1, 0)
+        last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self.logits(params_c, last, compute_dtype)[:, 0]
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, state

@@ -1,0 +1,379 @@
+"""Static analyzer for compiled (post-SPMD, post-fusion) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's cost analysis counts a while
+body ONCE, so any scan-over-layers program (every production model) has its
+FLOPs understated by ~num_layers. This walker:
+
+  * builds the computation call graph (entry -> while bodies x trip count,
+    fusions, calls, conditionals),
+  * recovers scan trip counts from while-condition compare constants,
+  * counts dot FLOPs from operand/result shapes x multiplicity,
+  * estimates HBM traffic as bytes crossing fusion boundaries (operands +
+    results of top-level instructions — the standard post-fusion roofline
+    estimate),
+  * sums collective bytes per device with ring-algorithm link-traffic
+    adjustment (all-gather/reduce-scatter (N-1)/N, all-reduce 2(N-1)/N).
+
+All quantities are PER DEVICE (HLO is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _numel(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string (handles tuples by summing)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        total += _DTYPE_BYTES.get(dt, 4) * _numel(dims)
+    return total
+
+
+def first_array_shape(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape_str: str
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    by_name: Dict[str, Instruction]
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?%?([\w.\-]+)(?:\.clone)? \(.*\) -> .* \{")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT )?%?([\w.\-]+) = ((?:\([^)]*\))|(?:[\w\[\],]+(?:\{[\d,]*\})?))\s+"
+    r"([\w\-]+)\((.*)$")
+_OPERAND = re.compile(r"%([\w.\-]+)")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and ("->" in line) and line.rstrip().endswith("{"):
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if m:
+            name, shape_str, opcode, rest = m.groups()
+            # operands: %refs before the first '),' attribute boundary
+            paren = rest.split("),")[0] if ")," in rest else rest
+            ops = _OPERAND.findall(paren)
+            inst = Instruction(name, shape_str, opcode, ops, line)
+            cur.instructions.append(inst)
+            cur.by_name[name] = inst
+    return comps
+
+
+def _attr(raw: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=([^,\s]+)", raw)
+    return m.group(1) if m else None
+
+
+def _called_comps(inst: Instruction) -> List[str]:
+    """Computations invoked by this instruction (fusion/call/map/reduce...)."""
+    names = []
+    for key in ("calls", "to_apply", "body", "condition", "true_computation",
+                "false_computation", "branch_computations"):
+        m = re.search(key + r"=\{?%?([\w.\-]+(?:, ?%?[\w.\-]+)*)\}?", inst.raw)
+        if m:
+            for n in m.group(1).split(","):
+                names.append(n.strip().lstrip("%"))
+    return names
+
+
+def while_trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Scan-generated while conds compare an s32 induction var to a constant."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for inst in cond.instructions:
+        if inst.opcode == "constant" and inst.shape_str.startswith("s32"):
+            m = re.search(r"constant\((-?\d+)\)", inst.raw)
+            if m:
+                consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def dot_flops(inst: Instruction, comp: Computation,
+              shapes: Dict[str, str]) -> int:
+    out = first_array_shape(inst.shape_str)
+    if out is None:
+        return 0
+    _, out_dims = out
+    lhs_name = inst.operands[0] if inst.operands else None
+    lhs_shape_str = shapes.get(lhs_name)
+    if lhs_shape_str is None:
+        return 0
+    lhs = first_array_shape(lhs_shape_str)
+    if lhs is None:
+        return 0
+    _, lhs_dims = lhs
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.raw)
+    contracted = 1
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            contracted *= lhs_dims[int(d)]
+    return 2 * _numel(",".join(map(str, out_dims))) * contracted
+
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(inst: Instruction) -> Tuple[str, int, int]:
+    """Returns (kind, naive_operand_bytes, ring_link_bytes) per device."""
+    kind = inst.opcode
+    if kind.endswith("-start"):
+        kind = kind[: -len("-start")]
+    result_bytes = shape_bytes(inst.shape_str)
+    # group size N from replica_groups=[G,N]<= or explicit {{...},{...}}
+    n = 1
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", inst.raw)
+    if m:
+        n = int(m.group(2))
+    else:
+        m = re.search(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)\}", inst.raw)
+        if m:
+            first = m.group(1).split("},")[0].strip("{}")
+            n = len([x for x in first.split(",") if x.strip() != ""])
+    n = max(n, 1)
+    if kind == "all-gather":
+        naive = result_bytes // n
+        ring = result_bytes * (n - 1) // n
+    elif kind == "all-reduce":
+        naive = result_bytes
+        ring = 2 * result_bytes * (n - 1) // n
+    elif kind == "reduce-scatter":
+        naive = result_bytes * n
+        ring = result_bytes * (n - 1)
+    elif kind == "all-to-all":
+        naive = result_bytes
+        ring = result_bytes * (n - 1) // n
+    else:  # collective-permute
+        naive = result_bytes
+        ring = result_bytes
+    return kind, naive, ring
+
+
+_SKIP_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id", "replica-id",
+    "iota",
+}
+
+_SLICING_OPS = {"dynamic-slice", "gather", "slice"}
+_INPLACE_OPS = {"dynamic-update-slice", "scatter"}
+
+
+def _operand_traffic(op_shape_str: str, users_ops: List[Tuple[str, str]]) -> int:
+    """Bytes actually read from an operand given its user instructions.
+
+    If every user is a slicing op, only the slices' outputs are read; an
+    in-place update (DUS/scatter) reads just the updated region (charged on
+    the output side instead)."""
+    full = shape_bytes(op_shape_str)
+    if not users_ops:
+        return full
+    if all(op in _SLICING_OPS or op in _INPLACE_OPS for op, _ in users_ops):
+        sliced = sum(shape_bytes(s) for op, s in users_ops if op in _SLICING_OPS)
+        return min(full, sliced)
+    return full
+
+
+def instruction_traffic(inst: Instruction, shapes: Dict[str, str],
+                        comps: Dict[str, "Computation"]) -> int:
+    """HBM bytes for one top-level (fusion-boundary) instruction."""
+    op = inst.opcode
+    if op in _SKIP_TRAFFIC or op.endswith("-done"):
+        return 0
+    if op == "dynamic-slice" or op == "slice":
+        return 2 * shape_bytes(inst.shape_str)
+    if op == "gather":
+        return 2 * shape_bytes(inst.shape_str)
+    if op == "dynamic-update-slice":
+        # in-place: read+write the updated region (operand 1)
+        upd = shapes.get(inst.operands[1], "") if len(inst.operands) > 1 else ""
+        return 2 * shape_bytes(upd)
+    if op == "scatter":
+        upd = shapes.get(inst.operands[-1], "") if inst.operands else ""
+        return 2 * shape_bytes(upd)
+    if op == "fusion":
+        called = _called_comps(inst)
+        fused = comps.get(called[0]) if called else None
+        if fused is None:
+            return shape_bytes(inst.shape_str) + sum(
+                shape_bytes(shapes.get(o, "")) for o in inst.operands)
+        # map fusion operands -> parameter users inside the fused computation
+        params: Dict[int, str] = {}
+        users: Dict[str, List[Tuple[str, str]]] = {}
+        for fi in fused.instructions:
+            if fi.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.raw)
+                if m:
+                    params[int(m.group(1))] = fi.name
+        for fi in fused.instructions:
+            for o in fi.operands:
+                users.setdefault(o, []).append((fi.opcode, fi.shape_str))
+        total = 0
+        for idx, oname in enumerate(inst.operands):
+            pname = params.get(idx)
+            total += _operand_traffic(shapes.get(oname, ""),
+                                      users.get(pname, []) if pname else [])
+        # output side: in-place DUS roots write only the update region
+        dus_bytes = 0
+        dus_full = 0
+        for fi in fused.instructions:
+            if fi.opcode == "dynamic-update-slice":
+                upd = fi.operands[1] if len(fi.operands) > 1 else None
+                upd_shape = next((x.shape_str for x in fused.instructions
+                                  if x.name == upd), "")
+                dus_bytes += 2 * shape_bytes(upd_shape)
+                dus_full += shape_bytes(fi.shape_str)
+        out_bytes = shape_bytes(inst.shape_str)
+        total += dus_bytes + max(0, out_bytes - dus_full)
+        return total
+    return shape_bytes(inst.shape_str) + sum(
+        shape_bytes(shapes.get(o, "")) for o in inst.operands)
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: int = 0
+    hbm_bytes: int = 0
+    collective_naive: int = 0
+    collective_ring: int = 0
+    collective_breakdown: Dict[str, int] = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    trip_counts: List[int] = dataclasses.field(default_factory=list)
+
+    def merge_scaled(self, other: "HloCosts", k: int) -> None:
+        self.flops += other.flops * k
+        self.hbm_bytes += other.hbm_bytes * k
+        self.collective_naive += other.collective_naive * k
+        self.collective_ring += other.collective_ring * k
+        self.collective_count += other.collective_count * k
+        for kk, v in other.collective_breakdown.items():
+            self.collective_breakdown[kk] = (
+                self.collective_breakdown.get(kk, 0) + v * k)
+
+
+def analyze_computation(
+    comps: Dict[str, Computation], name: str,
+    memo: Dict[str, HloCosts], top_level: bool,
+) -> HloCosts:
+    key = f"{name}@{top_level}"
+    if key in memo:
+        return memo[key]
+    comp = comps.get(name)
+    costs = HloCosts()
+    if comp is None:
+        memo[key] = costs
+        return costs
+    shapes = {i.name: i.shape_str for i in comp.instructions}
+    for inst in comp.instructions:
+        op = inst.opcode
+        if op in ("dot", "dot-general"):
+            costs.flops += dot_flops(inst, comp, shapes)
+            if top_level:
+                costs.hbm_bytes += instruction_traffic(inst, shapes, comps)
+        elif op.rstrip("-start").rstrip("-done") in _COLLECTIVES or \
+                any(op.startswith(c) for c in _COLLECTIVES):
+            if op.endswith("-done"):
+                continue
+            kind, naive, ring = collective_bytes(inst)
+            costs.collective_naive += naive
+            costs.collective_ring += ring
+            costs.collective_count += 1
+            costs.collective_breakdown[kind] = (
+                costs.collective_breakdown.get(kind, 0) + ring)
+            if top_level:
+                costs.hbm_bytes += shape_bytes(inst.shape_str)
+        elif op == "while":
+            body = _attr(inst.raw, "body")
+            cond = _attr(inst.raw, "condition")
+            body = body.lstrip("%") if body else None
+            cond = cond.lstrip("%") if cond else None
+            trip = while_trip_count(comps, cond) if cond else 1
+            costs.trip_counts.append(trip)
+            if body:
+                sub = analyze_computation(comps, body, memo, True)
+                costs.merge_scaled(sub, trip)
+                costs.trip_counts.extend([t for t in sub.trip_counts])
+        elif op == "fusion":
+            for c in _called_comps(inst):
+                sub = analyze_computation(comps, c, memo, False)
+                # fused interior: only flops count; traffic is the fusion IO
+                costs.flops += sub.flops
+            if top_level:
+                costs.hbm_bytes += instruction_traffic(inst, shapes, comps)
+        elif op in ("call", "conditional", "custom-call", "map", "reduce",
+                    "sort", "scatter", "reduce-window", "select-and-scatter"):
+            for c in _called_comps(inst):
+                sub = analyze_computation(comps, c, memo,
+                                          op in ("call", "conditional"))
+                costs.merge_scaled(sub, 1)
+            if top_level and op not in ("call", "conditional"):
+                costs.hbm_bytes += instruction_traffic(inst, shapes, comps)
+        else:
+            if top_level and op not in _SKIP_TRAFFIC:
+                costs.hbm_bytes += instruction_traffic(inst, shapes, comps)
+    memo[key] = costs
+    return costs
+
+
+def find_entry(comps: Dict[str, Computation], text: str) -> str:
+    m = re.search(r"^ENTRY %?([\w.\-]+)", text, re.M)
+    if m:
+        return m.group(1)
+    return next(iter(comps))
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    comps = parse_hlo(text)
+    entry = find_entry(comps, text)
+    return analyze_computation(comps, entry, {}, True)

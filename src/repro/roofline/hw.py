@@ -1,0 +1,14 @@
+"""TPU v5e hardware constants for the roofline model (per chip)."""
+
+PEAK_FLOPS_BF16 = 197e12       # 197 TFLOP/s bf16
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9                 # 819 GB/s
+ICI_LINK_BW = 50e9             # ~50 GB/s per ICI link (per direction)
+HBM_BYTES = 16 * 2 ** 30       # 16 GiB HBM per chip
+VMEM_BYTES = 128 * 2 ** 20     # ~128 MiB VMEM
+DCI_BW = 12.5e9                # inter-pod (data-center interconnect) per chip, est.
+
+MXU_TILE = (128, 128)          # systolic array tile
+LANE = 128
+SUBLANE_F32 = 8
+SUBLANE_BF16 = 16

@@ -1,0 +1,65 @@
+"""Render the §Roofline markdown table from dry-run artifacts.
+
+  PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = [
+    "phi3-mini-3.8b", "phi4-mini-3.8b", "minicpm-2b", "mistral-nemo-12b",
+    "hymba-1.5b", "xlstm-350m", "whisper-medium", "qwen3-moe-30b-a3b",
+    "qwen2-moe-a2.7b", "internvl2-76b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str) -> List[Dict]:
+    return [json.load(open(f)) for f in sorted(glob.glob(os.path.join(dir_, "*.json")))]
+
+
+def fmt_row(r: Dict) -> str:
+    cell = f"{r['arch']} | {r['shape']} | {r['mesh']}"
+    if r.get("skipped"):
+        return f"| {cell} | — | — | — | — | — | skip (full attention) |"
+    if not r.get("ok"):
+        return f"| {cell} | — | — | — | — | — | FAIL |"
+    t = r["roofline"]
+    h = r["hlo"]
+    dom = t["dominant"]
+    peak = r["memory"]["peak_estimate_bytes"] / 2 ** 30
+    return (f"| {cell} | {t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | **{dom}** | {t['useful_ratio']:.2f} | "
+            f"{peak:.1f} GiB |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    here = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    ap.add_argument("--dir", default=os.path.join(here, "results", "dryrun"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    by_key = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+    print("| arch | shape | mesh | compute s | memory s | collective s "
+          "| dominant | useful | peak/chip |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("singlepod", "multipod"):
+                r = by_key.get((arch, shape, mesh))
+                if r:
+                    print(fmt_row(r))
+    # coverage summary
+    ok = sum(1 for r in recs if r.get("ok") and not r.get("skipped"))
+    skip = sum(1 for r in recs if r.get("skipped"))
+    fail = sum(1 for r in recs if not r.get("ok"))
+    print(f"\ncells: {ok} compiled OK, {skip} assignment skips, {fail} failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Device KV pool + host allocator glue for the serving engines.
+
+``PagedKVPool`` pairs the device-resident anchored pool tensor with the
+host-side AnchorPool allocator and produces the int32 metadata arrays
+(block tables, page positions, write coordinates) that the device
+mechanisms consume — the control-plane half of the Libra datapath.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
+from repro.core.vpi import VpiRegistry
+
+
+@dataclasses.dataclass
+class SeqHandle:
+    """Anchored-payload handle for one active sequence (VPI-backed)."""
+    vpi: int
+    pages: List[PageRef]
+    seq_len: int          # tokens currently anchored
+    header_len: int
+
+
+class PagedKVPool:
+    def __init__(self, model, n_shards: int, pages_per_shard: int,
+                 page_size: int = 16, registry: Optional[VpiRegistry] = None,
+                 max_pages_per_seq: int = 0, dtype=jnp.float32):
+        self.model = model
+        self.page_size = page_size
+        self.alloc = AnchorPool(n_shards, pages_per_shard, page_size,
+                                max_pages_per_seq=max_pages_per_seq)
+        self.registry = registry or VpiRegistry()
+        total = n_shards * pages_per_shard
+        self.pool = jnp.zeros(model.kv_pool_shape(total), dtype)
+        self.n_shards = n_shards
+
+    # -- sequence lifecycle -------------------------------------------------
+    def anchor_sequence(self, prompt_len: int, header_len: int,
+                        reserve: int = 0) -> SeqHandle:
+        pages = self.alloc.alloc_sequence(prompt_len + reserve)
+        vpi = self.registry.register(
+            "kv-pool", [(p.shard, p.local_pid, p.base_pos) for p in pages],
+            prompt_len, meta={"header_len": header_len})
+        return SeqHandle(vpi, pages, prompt_len, header_len)
+
+    def extend(self, h: SeqHandle, new_len: int) -> None:
+        """Grow the anchored region (decode appends)."""
+        have = len(h.pages) * self.page_size
+        while have < new_len:
+            shard = (len(h.pages)) % self.n_shards
+            h.pages.append(self.alloc.alloc_page(
+                len(h.pages) * self.page_size, shard))
+            have += self.page_size
+        h.seq_len = new_len
+
+    def release(self, h: SeqHandle) -> None:
+        if self.registry.release(h.vpi):
+            self.alloc.free_pages_list(h.pages)
+
+    def share(self, h: SeqHandle) -> SeqHandle:
+        """Prefix sharing / zero-copy forwarding: bump refcounts, same pages."""
+        self.registry.retain(h.vpi)
+        self.alloc.retain(h.pages)
+        return SeqHandle(h.vpi, list(h.pages), h.seq_len, h.header_len)
+
+    # -- device metadata ------------------------------------------------------
+    def batch_tables(self, handles: Sequence[SeqHandle],
+                     pps: Optional[int] = None) -> Tuple[np.ndarray, np.ndarray]:
+        return self.alloc.tables_for([h.pages for h in handles], pps)
+
+    def write_coords(self, handles: Sequence[SeqHandle],
+                     positions: Sequence[int]) -> Tuple[np.ndarray, np.ndarray]:
+        return AnchorPool.write_coords([h.pages for h in handles], positions,
+                                       self.n_shards, self.page_size)
+
+    def token_coords(self, handles: Sequence[SeqHandle], seq_len: int):
+        return self.alloc.token_coords([h.pages for h in handles], seq_len)

@@ -1,0 +1,136 @@
+"""Optimizers & LR schedules (pure JAX, no optax dependency).
+
+AdamW with decoupled weight decay and global-norm clipping; LR schedules
+include cosine and MiniCPM's warmup-stable-decay (WSD). Optimizer states are
+fp32 and inherit the parameter sharding (ZeRO-1 via FSDP param sharding).
+
+``compressed_allreduce`` implements int8 gradient compression with error
+feedback for cross-pod gradient reduction (distributed-optimization trick;
+see repro.distributed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # scalar int32
+    mu: Any              # first moment (pytree, f32)
+    nu: Any              # second moment (pytree, f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"     # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    # WSD: fraction of total steps spent in the final decay phase
+    wsd_decay_frac: float = 0.1
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((s - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "cosine":
+        return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    if cfg.schedule == "wsd":
+        # warmup -> stable plateau -> sqrt-style decay tail (MiniCPM)
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        tail = jnp.clip((t - decay_start) / cfg.wsd_decay_frac, 0.0, 1.0)
+        return cfg.lr * warm * jnp.where(t < decay_start, 1.0, 1.0 - tail)
+    raise ValueError(cfg.schedule)
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def abstract_adamw(abstract_params) -> AdamWState:
+    zeros = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), abstract_params)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), zeros,
+                      jax.tree.map(lambda x: x, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    cfg: AdamWConfig, params, grads, state: AdamWState
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_mu, new_nu), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback int8) — cross-pod reduction trick
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x)) + 1e-12
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, axis_name: str, error_state):
+    """int8 all-reduce with error feedback: the quantisation residual is
+    carried into the next step, so the compressed reduction is unbiased in
+    the long run. Used for the cross-pod ('pod' axis) gradient reduction,
+    where DCI bandwidth — not ICI — is the bottleneck."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(g)
+        deq_sum = jax.lax.psum(dequantize_int8(q, scale), axis_name)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        mean = deq_sum / n
+        new_e = g - dequantize_int8(q, scale)  # local residual
+        return mean, new_e
+
+    out = jax.tree.map(one, grads, error_state)
+    red = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return red, err

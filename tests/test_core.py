@@ -1,0 +1,267 @@
+"""Libra core: parser policies, state machines, VPI registry, anchor pool,
+end-to-end ingress/egress — unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AnchorPool,
+    ChunkedParser,
+    Connection,
+    CopyCounters,
+    DelimiterParser,
+    LengthPrefixedParser,
+    PoolExhausted,
+    St,
+    TokenPool,
+    VpiRegistry,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+    expire_teardowns,
+    kmp_find,
+    libra_close,
+    libra_recv,
+    libra_send,
+)
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# parsers
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=0, max_size=200),
+       st.lists(st.integers(0, 50), min_size=1, max_size=5))
+def test_kmp_matches_naive(hay, pat):
+    hay = np.array(hay, np.int64)
+    want = -1
+    for i in range(len(hay) - len(pat) + 1):
+        if list(hay[i : i + len(pat)]) == pat:
+            want = i
+            break
+    assert kmp_find(hay, pat) == want
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 40), st.integers(0, 300))
+def test_length_prefixed_roundtrip(meta_n, payload_n):
+    meta = RNG.integers(100, 200, meta_n)
+    payload = RNG.integers(1000, 2000, payload_n)
+    msg = build_message(meta, payload)
+    res = LengthPrefixedParser().parse(msg)
+    assert res.ok
+    assert res.meta_len == 3 + meta_n
+    assert res.payload_len == payload_n
+
+
+def test_delimiter_parser():
+    meta = RNG.integers(100, 200, 7)
+    payload = RNG.integers(1000, 2000, 40)
+    msg = build_delimited_message(meta, payload)
+    res = DelimiterParser().parse(msg)
+    assert res.ok and res.payload_len == 40
+    assert res.meta_len == 7 + 4 + 1  # meta + delim + length slot
+
+
+def test_chunked_parser():
+    chunks = [RNG.integers(0, 9, n) for n in (10, 3, 25)]
+    msg = build_chunked_message(chunks)
+    p = ChunkedParser()
+    off = 0
+    seen = []
+    while True:
+        res = p.parse(msg[off:])
+        assert res.ok
+        if res.payload_len == 0:
+            break
+        seen.append(res.payload_len)
+        off += res.consumed + res.payload_len
+    assert seen == [10, 3, 25]
+
+
+def test_parser_incomplete_window():
+    assert LengthPrefixedParser().parse(np.array([17], np.int64)).need_more
+    assert not LengthPrefixedParser().parse(np.array([99, 1, 2], np.int64)).ok
+
+
+# ---------------------------------------------------------------------------
+# VPI registry
+# ---------------------------------------------------------------------------
+
+def test_vpi_opacity_and_roundtrip():
+    reg = VpiRegistry(secret=b"k")
+    v = reg.register("p", [(0, 1, 0)], 100)
+    assert v != 0
+    tok = VpiRegistry.to_token(v)
+    assert VpiRegistry.from_token(tok) == v
+    # secure mapping: handles from different registries/secrets differ
+    reg2 = VpiRegistry(secret=b"other")
+    assert reg2.register("p", [(0, 1, 0)], 100) != v
+
+
+def test_vpi_refcount_and_teardown():
+    reg = VpiRegistry(secret=b"k", grace_ticks=3)
+    v = reg.register("p", [(0, 0, 0)], 50)
+    reg.retain(v)
+    assert not reg.release(v)
+    assert v in reg
+    reg.begin_teardown(v, now_tick=0)
+    assert reg.resolve(v) is None           # teardown entries don't resolve
+    assert reg.expire_teardowns(2) == []    # grace not elapsed
+    assert len(reg.expire_teardowns(3)) == 1
+    assert v not in reg
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 200))
+def test_vpi_unique(n):
+    reg = VpiRegistry(secret=b"k")
+    vs = [reg.register("p", [], 10) for _ in range(n)]
+    assert len(set(vs)) == n
+
+
+# ---------------------------------------------------------------------------
+# anchor pool
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 300), min_size=1, max_size=20))
+def test_pool_alloc_free_invariants(lengths):
+    pool = AnchorPool(n_shards=4, pages_per_shard=32, page_size=16)
+    seqs = []
+    for ln in lengths:
+        try:
+            seqs.append(pool.alloc_sequence(ln))
+        except PoolExhausted:
+            break
+    # no page is double-allocated
+    all_pages = [(p.shard, p.local_pid) for s in seqs for p in s]
+    assert len(all_pages) == len(set(all_pages))
+    for s in seqs:
+        pool.free_pages_list(s)
+    assert pool.free_pages == pool.total_pages
+    assert pool.accounted_pages == 0
+
+
+def test_pool_admission_cap():
+    pool = AnchorPool(n_shards=1, pages_per_shard=64, page_size=16,
+                      max_pages_per_seq=4)
+    with pytest.raises(PoolExhausted):
+        pool.alloc_sequence(16 * 10)  # exceeds the §A.1 cap
+    assert pool.stats["fallbacks"] == 1
+
+
+def test_pool_two_phase_transfer_accounting():
+    pool = AnchorPool(n_shards=2, pages_per_shard=8, page_size=16)
+    pages = pool.alloc_sequence(100)
+    staged = pool.stage_transfer(pages)
+    assert pool._budget_raise == len(staged)  # §A.3 temporary raise
+    owned = pool.commit_transfer(staged)
+    assert pool._budget_raise == 0
+    pool.free_pages_list(owned)
+    assert pool.free_pages == pool.total_pages
+
+
+def test_pool_refcount_prefix_sharing():
+    pool = AnchorPool(n_shards=1, pages_per_shard=8, page_size=16)
+    pages = pool.alloc_sequence(60)
+    pool.retain(pages)
+    pool.free_pages_list(pages)
+    assert pool.free_pages < pool.total_pages  # still held
+    pool.free_pages_list(pages)
+    assert pool.free_pages == pool.total_pages
+
+
+# ---------------------------------------------------------------------------
+# end-to-end ingress/egress (paper Fig. 3b flow)
+# ---------------------------------------------------------------------------
+
+def _setup(min_payload=8):
+    alloc = AnchorPool(n_shards=4, pages_per_shard=64, page_size=16)
+    pool = TokenPool(alloc)
+    reg = VpiRegistry(secret=b"t")
+    parser = LengthPrefixedParser()
+    mk = lambda: Connection(parser, reg, min_payload=min_payload)
+    return pool, reg, mk, CopyCounters()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 20), st.integers(8, 400), st.integers(1, 4))
+def test_proxy_flow_payload_intact(meta_n, payload_n, n_msgs):
+    """Any message stream: payloads arrive intact with zero payload copies
+    across the user boundary; VPIs and pages are fully reclaimed."""
+    pool, reg, mk, counters = _setup()
+    cin, cout = mk(), mk()
+    payloads = []
+    for _ in range(n_msgs):
+        meta = RNG.integers(100, 200, meta_n)
+        payload = RNG.integers(1000, 2000, payload_n)
+        payloads.append(payload)
+        cin.deliver(build_message(meta, payload))
+    for payload in payloads:
+        buf, logical = libra_recv(cin, 1 << 20, pool, reg, counters)
+        new_meta = np.array([17, 0, payload_n], np.int64)
+        out = np.concatenate([new_meta, buf[-1:]])
+        sent = libra_send(cin, cout, out, pool, reg, counters)
+        assert sent == 3 + payload_n
+        wire = cout.tx_stream[-1]
+        assert np.array_equal(wire[3:], payload)
+    assert len(reg) == 0
+    assert pool.alloc.free_pages == pool.alloc.total_pages
+    # selective copy: user-boundary copies are metadata-sized only
+    assert counters.meta_copied <= n_msgs * (meta_n + 3 + 3)
+    assert counters.zero_copied == n_msgs * payload_n
+
+
+def test_fallback_on_vpi_miss():
+    """Garbage VPI slot -> FALLBACK_BYPASS full-copy path (Fig. 5)."""
+    pool, reg, mk, counters = _setup()
+    cin, cout = mk(), mk()
+    meta = RNG.integers(100, 200, 4)
+    fake = np.concatenate([build_message(meta, np.array([], np.int64))[:3],
+                           meta, np.array([123456789], np.int64)])
+    fake[2] = 50  # claims a 50-token payload; VPI slot is garbage
+    sent = libra_send(cin, cout, fake, pool, reg, counters)
+    assert cout.tx_machine.state == St.FALLBACK_BYPASS
+    assert counters.full_copied > 0 and counters.zero_copied == 0
+
+
+def test_small_buffer_metadata_parsed_then_vpi():
+    """Tiny user buffer: METADATA_PARSED defers the VPI until space exists
+    (Fig. 4 boxes 2-3)."""
+    pool, reg, mk, counters = _setup()
+    c = mk()
+    meta = RNG.integers(100, 200, 6)
+    payload = RNG.integers(1000, 2000, 64)
+    c.deliver(build_message(meta, payload))
+    buf1, n1 = libra_recv(c, 4, pool, reg, counters)     # too small for VPI
+    assert c.rx_machine.state == St.METADATA_PARSED
+    assert len(buf1) == 4
+    buf2, n2 = libra_recv(c, 1 << 16, pool, reg, counters)
+    assert c.rx_machine.state == St.FAST_PATH
+    assert len(buf2) == (3 + 6 - 4) + 1  # remaining meta + VPI
+    assert n2 >= 64
+
+
+def test_pool_exhaustion_falls_back_to_copy():
+    alloc = AnchorPool(n_shards=1, pages_per_shard=2, page_size=16)
+    pool = TokenPool(alloc)
+    reg = VpiRegistry(secret=b"t")
+    c = Connection(LengthPrefixedParser(), reg, min_payload=8)
+    counters = CopyCounters()
+    payload = RNG.integers(1000, 2000, 200)  # needs 13 pages > 2
+    c.deliver(build_message(RNG.integers(0, 9, 2), payload))
+    out_parts = []
+    total = 0
+    for _ in range(50):
+        buf, n = libra_recv(c, 64, pool, reg, counters)
+        out_parts.append(buf)
+        total += n
+        if c.rx_available() == 0:
+            break
+    got = np.concatenate(out_parts)
+    assert counters.full_copied > 0 and len(reg) == 0
+    assert np.array_equal(got[-200:], payload)  # data still correct

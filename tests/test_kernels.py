@@ -1,0 +1,197 @@
+"""Pallas kernel validation: shape/dtype sweeps + hypothesis properties,
+asserting allclose against the pure-jnp oracles in kernels/ref.py
+(interpret=True executes the TPU kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+RNG = np.random.default_rng(7)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.array(RNG.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,hd,blk", [
+    (1, 1, 1, 128, 64, 64),
+    (2, 4, 2, 256, 64, 128),
+    (1, 8, 8, 128, 128, 64),   # MHA
+    (2, 6, 2, 128, 32, 64),    # GQA group 3
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_shapes(b, hq, hkv, s, hd, blk, dtype):
+    q, k, v = (randn((b, hq, s, hd), dtype), randn((b, hkv, s, hd), dtype),
+               randn((b, hkv, s, hd), dtype))
+    out = ops.flash_attention(q, k, v, causal=True, impl="interpret",
+                              block_q=blk, block_k=blk)
+    want = R.flash_attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.array(out, np.float32),
+                               np.array(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [16, 64, 100])
+def test_flash_window(window):
+    q, k, v = randn((1, 2, 256, 32)), randn((1, 2, 256, 32)), randn((1, 2, 256, 32))
+    out = ops.flash_attention(q, k, v, causal=True, window=window,
+                              impl="interpret", block_q=64, block_k=64)
+    want = R.flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.array(out), np.array(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_noncausal():
+    q, k, v = randn((2, 2, 128, 32)), randn((2, 2, 128, 32)), randn((2, 2, 128, 32))
+    out = ops.flash_attention(q, k, v, causal=False, impl="interpret",
+                              block_q=64, block_k=64)
+    want = R.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.array(out), np.array(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged attention
+# ---------------------------------------------------------------------------
+
+def _paged_setup(b, hq, hkv, hd, page, pps, p_total, seq_lens):
+    q = randn((b, hq, hd))
+    pool = randn((p_total, page, 2, hkv, hd))
+    tables = np.full((b, pps), -1, np.int32)
+    page_pos = np.full((b, pps), -(2 ** 20), np.int32)
+    ctr = 0
+    for i in range(b):
+        for j in range(seq_lens[i] // page + 1):
+            tables[i, j] = ctr % p_total
+            page_pos[i, j] = j * page
+            ctr += 1
+    return q, pool, jnp.array(tables), jnp.array(page_pos), jnp.array(seq_lens, jnp.int32)
+
+
+@pytest.mark.parametrize("b,hq,hkv,hd,page", [
+    (2, 4, 2, 64, 16), (3, 8, 8, 32, 8), (1, 6, 1, 128, 32),
+])
+def test_paged_matches_ref(b, hq, hkv, hd, page):
+    seq = RNG.integers(1, page * 3, b)
+    q, pool, tbl, pp, sl = _paged_setup(b, hq, hkv, hd, page, 4, 24, seq)
+    got = ops.paged_attention(q, pool, tbl, pp, sl, impl="interpret")
+    want = R.paged_attention_ref(q, pool, tbl, pp, sl)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.array(g), np.array(w), atol=1e-4, rtol=1e-4)
+
+
+def test_paged_equals_dense_attention():
+    """Combined partials must equal full attention over the logical KV."""
+    b, hq, hkv, hd, page = 2, 4, 2, 32, 8
+    seq = np.array([20, 13])
+    q, pool, tbl, pp, sl = _paged_setup(b, hq, hkv, hd, page, 6, 32, seq)
+    acc, m, l = ops.paged_attention(q, pool, tbl, pp, sl, impl="interpret")
+    out = np.array(acc / np.maximum(np.array(l), 1e-30)[..., None])
+    # dense reference: rebuild contiguous KV from pages
+    for i in range(b):
+        ln = seq[i] + 1
+        kk = np.zeros((ln, hkv, hd), np.float32)
+        vv = np.zeros((ln, hkv, hd), np.float32)
+        for j in range(ln // page + 1):
+            pid = int(tbl[i, j])
+            if pid < 0:
+                continue
+            lo = j * page
+            hi = min(lo + page, ln)
+            kk[lo:hi] = np.array(pool[pid, : hi - lo, 0])
+            vv[lo:hi] = np.array(pool[pid, : hi - lo, 1])
+        qg = np.array(q[i]).reshape(hkv, hq // hkv, hd) / np.sqrt(hd)
+        s = np.einsum("hgd,thd->hgt", qg, kk)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        o = np.einsum("hgt,thd->hgd", p, vv).reshape(hq, hd)
+        np.testing.assert_allclose(out[i], o, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# selective copy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_selective_copy_property(data):
+    """Metadata lands in the compact buffer; payload lands in its pages;
+    untouched pages are preserved — for arbitrary parse boundaries."""
+    b = data.draw(st.integers(1, 3))
+    page = data.draw(st.sampled_from([8, 16]))
+    pps = 4
+    s = 16 + pps * page
+    p_total = b * pps + 2
+    meta_max = 16
+    stream = jnp.array(RNG.integers(1, 1000, (b, s)), jnp.int32)
+    meta_len, total_len, tables = [], [], np.full((b, pps), -1, np.int32)
+    ctr = 0
+    for i in range(b):
+        ml = data.draw(st.integers(0, meta_max))
+        pl_len = data.draw(st.integers(0, pps * page))
+        meta_len.append(ml)
+        total_len.append(ml + pl_len)
+        for j in range(-(-pl_len // page)):
+            tables[i, j] = ctr
+            ctr += 1
+    meta_len = jnp.array(meta_len, jnp.int32)
+    total_len = jnp.array(total_len, jnp.int32)
+    pool = jnp.array(RNG.integers(0, 5, (p_total, page)), jnp.int32)
+    got_m, got_p = ops.selective_copy(stream, meta_len, total_len, pool,
+                                      jnp.array(tables), meta_max=meta_max,
+                                      impl="interpret")
+    want_m, want_p = R.selective_copy_ref(stream, meta_len, total_len, pool,
+                                          jnp.array(tables), meta_max=meta_max)
+    assert np.array_equal(np.array(got_m), np.array(want_m))
+    assert np.array_equal(np.array(got_p), np.array(want_p))
+    # semantic checks against the raw stream
+    for i in range(b):
+        ml, tl = int(meta_len[i]), int(total_len[i])
+        assert np.array_equal(np.array(got_m[i, :ml]), np.array(stream[i, :ml]))
+        for j, pid in enumerate(tables[i]):
+            if pid < 0:
+                continue
+            lo, hi = ml + j * page, min(ml + (j + 1) * page, tl)
+            if hi > lo:
+                assert np.array_equal(np.array(got_p[pid, : hi - lo]),
+                                      np.array(stream[i, lo:hi]))
+
+
+# ---------------------------------------------------------------------------
+# mlstm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,s,dh,chunk", [
+    (1, 1, 64, 32, 16), (2, 3, 64, 32, 32), (1, 2, 128, 64, 16),
+])
+def test_mlstm_matches_sequential(b, h, s, dh, chunk):
+    q, k, v = randn((b, h, s, dh)), randn((b, h, s, dh)), randn((b, h, s, dh))
+    li = randn((b, h, s))
+    lf = jnp.array(np.log(1 / (1 + np.exp(-(RNG.standard_normal((b, h, s)) + 2)))),
+                   jnp.float32)
+    got = ops.mlstm_scan(q, k, v, li, lf, chunk=chunk, impl="interpret")
+    want = R.mlstm_scan_ref(q, k, v, li, lf)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=5e-4,
+                               rtol=5e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([16, 32]))
+def test_mlstm_gate_extremes(b, chunk):
+    """Strong forget gates (decay ~0) and strong inputs stay stable."""
+    h, s, dh = 2, 64, 16
+    q, k, v = randn((b, h, s, dh)), randn((b, h, s, dh)), randn((b, h, s, dh))
+    li = jnp.array(RNG.standard_normal((b, h, s)) * 4, jnp.float32)
+    lf = jnp.array(np.log(1 / (1 + np.exp(-(RNG.standard_normal((b, h, s)) * 4)))),
+                   jnp.float32)
+    got = ops.mlstm_scan(q, k, v, li, lf, chunk=chunk, impl="interpret")
+    want = R.mlstm_scan_ref(q, k, v, li, lf)
+    assert np.all(np.isfinite(np.array(got)))
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=3e-3,
+                               rtol=3e-3)

@@ -1,0 +1,131 @@
+"""Serving engine correctness: the Libra datapath must produce bit-identical
+tokens to the standard-stack baseline and to a naive full-recompute
+reference, while moving orders of magnitude fewer bytes across the host
+boundary."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.parser import TokenStreamParser
+from repro.models.registry import build_model
+from repro.serving.engine import (
+    CopierEngine,
+    LibraEngine,
+    StandardEngine,
+    StaticEngine,
+)
+
+ARCH = "libra-proxy-125m"
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_reduced(ARCH)
+    model = build_model(cfg, page_size=8)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _reference_generate(model, params, prompt, n_new):
+    """Naive reference: full forward over the whole context per token."""
+    toks = list(map(int, prompt))
+    out = []
+    for _ in range(n_new):
+        hidden, _ = model.forward(params, jnp.array([toks], jnp.int32),
+                                  remat="none", compute_dtype=jnp.float32)
+        logits = model.logits(params, hidden[:, -1:], jnp.float32)
+        nxt = int(jnp.argmax(logits[0, 0]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def _mk_requests(rng, n, lo=6, hi=20):
+    return [rng.integers(1, 250, rng.integers(lo, hi)) for _ in range(n)]
+
+
+def test_libra_matches_reference(model_and_params):
+    model, params = model_and_params
+    rng = np.random.default_rng(0)
+    prompts = _mk_requests(rng, 3)
+    eng = LibraEngine(model, params, max_batch=3, max_len=64, page_size=8,
+                      parser=TokenStreamParser(header_len=4))
+    reqs = [eng.submit(p, max_new_tokens=5) for p in prompts]
+    eng.run()
+    for r, p in zip(reqs, prompts):
+        want = _reference_generate(model, params, p, 5)
+        assert r.output == want, (r.output, want)
+
+
+def test_all_engines_agree(model_and_params):
+    model, params = model_and_params
+    rng = np.random.default_rng(1)
+    prompts = _mk_requests(rng, 4)
+    outs = {}
+    for cls, kw in [(LibraEngine, dict(max_batch=4, max_len=64, page_size=8)),
+                    (StandardEngine, dict(max_batch=4, max_len=64)),
+                    (CopierEngine, dict(max_batch=4, max_len=64)),
+                    (StaticEngine, dict(memory_budget=1 << 30, max_len=64))]:
+        eng = cls(model, params, **kw)
+        reqs = [eng.submit(p, max_new_tokens=4) for p in prompts]
+        eng.run()
+        outs[cls.name] = [r.output for r in reqs]
+    for name, o in outs.items():
+        assert o == outs["libra"], (name, o, outs["libra"])
+
+
+def test_selective_copy_traffic_advantage(model_and_params):
+    """The Libra host-boundary traffic must be metadata-sized; the standard
+    engine's must scale with vocab (logits) and its payload copies with the
+    whole cache — the paper's Figure 9 relationships."""
+    model, params = model_and_params
+    rng = np.random.default_rng(2)
+    prompts = _mk_requests(rng, 4)
+    libra = LibraEngine(model, params, max_batch=4, max_len=64, page_size=8)
+    std = StandardEngine(model, params, max_batch=4, max_len=64)
+    for eng in (libra, std):
+        for p in prompts:
+            eng.submit(p, max_new_tokens=6)
+        eng.run()
+    # per decode step, Libra ships O(B) ids; Standard ships O(B·V) logits
+    assert libra.stats.d2h_bytes * 50 < std.stats.d2h_bytes
+    # Libra anchors payload once; Standard re-copies the cache every step
+    assert libra.stats.payload_copy_bytes == 0
+    assert std.stats.payload_copy_bytes > std.stats.steps * 1000
+    # pool pages all returned after completion
+    assert libra.pool.alloc.free_pages == libra.pool.alloc.total_pages - 1  # parking
+
+
+def test_continuous_batching_admission(model_and_params):
+    """More requests than slots: engine must admit in waves and finish all."""
+    model, params = model_and_params
+    rng = np.random.default_rng(3)
+    prompts = _mk_requests(rng, 7)
+    eng = LibraEngine(model, params, max_batch=2, max_len=64, page_size=8)
+    reqs = [eng.submit(p, max_new_tokens=3) for p in prompts]
+    eng.run()
+    assert len(eng.completed) == 7
+    for r, p in zip(reqs, prompts):
+        want = _reference_generate(model, params, p, 3)
+        assert r.output == want
+
+
+def test_vpi_forwarding_zero_copy(model_and_params):
+    """Zero-copy handoff: sharing a handle moves no payload bytes and both
+    holders see the same anchored pages (refcounted)."""
+    model, params = model_and_params
+    rng = np.random.default_rng(4)
+    eng = LibraEngine(model, params, max_batch=2, max_len=64, page_size=8)
+    r = eng.submit(rng.integers(1, 250, 12), max_new_tokens=3)
+    eng.run()
+    # note: handle released at completion; re-anchor to exercise forwarding
+    r2 = eng.submit(rng.integers(1, 250, 12), max_new_tokens=5)
+    eng.step()  # prefill + first decode; r2 still active
+    h2 = eng.forward_handle(r2)
+    assert eng.stats.zero_copy_bytes > 0
+    before = eng.pool.alloc.free_pages
+    eng.pool.release(h2)
+    assert eng.pool.alloc.free_pages == before  # refcount held by r2
+    eng.run()
