@@ -1,16 +1,42 @@
 """Paper Fig. 6e: single-stream latency + host-work share.
 
-End-to-end latency is expected to be comparable (dominated by model
-compute, the network-propagation analogue); the win shows in host-boundary
-work per request — Libra's is metadata-sized, the standard stack scales
-with the payload."""
+Stream level (socket facade): one client↔backend flow per payload size;
+Libra's user-boundary work is metadata-sized while the full-copy path
+scales with the payload. Engine level: end-to-end latency is expected to
+be comparable (dominated by model compute, the network-propagation
+analogue); the win shows in host-boundary work per request.
+"""
 from __future__ import annotations
 
-from benchmarks.common import csv, prompts_for, proxy_model, run_engine
-from repro.serving.engine import LibraEngine, StandardEngine
+from benchmarks.common import (
+    csv,
+    is_smoke,
+    prompts_for,
+    proxy_model,
+    run_engine,
+    run_stream,
+)
 
 
-def main() -> None:
+def stream_section() -> None:
+    n_msgs = 8
+    for payload in (64, 512, 4096):
+        rows = {}
+        for name, selective in (("libra", True), ("fullcopy", False)):
+            stack, rt, msgs, dt = run_stream(
+                pages=4096, n_conns=1, n_msgs=n_msgs, payload=payload,
+                parsers=["length-prefixed"], selective=selective)
+            rows[name] = (dt, stack.counters.total_user_copies())
+        (t_l, cp_l), (t_s, cp_s) = rows["libra"], rows["fullcopy"]
+        csv(f"fig6e_stream_p{payload}_latency", t_l * 1e6 / n_msgs,
+            f"libra_s={t_l:.4f} fullcopy_s={t_s:.4f}")
+        csv(f"fig6e_stream_p{payload}_boundary_tokens", 0.0,
+            f"libra={cp_l} fullcopy={cp_s} ratio={cp_s/max(cp_l,1):.1f}x")
+
+
+def engine_section() -> None:
+    from repro.serving.engine import LibraEngine, StandardEngine
+
     cfg, model, params = proxy_model()
     for ctx in (32, 128, 320):
         prompts = prompts_for(cfg.vocab_size, 1, ctx)
@@ -23,6 +49,12 @@ def main() -> None:
         csv(f"fig6e_ctx{ctx}_boundary_bytes", 0.0,
             f"libra={libra.stats.d2h_bytes + libra.stats.h2d_bytes} "
             f"std={std.stats.d2h_bytes + std.stats.h2d_bytes}")
+
+
+def main() -> None:
+    stream_section()
+    if not is_smoke():
+        engine_section()
 
 
 if __name__ == "__main__":

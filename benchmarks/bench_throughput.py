@@ -3,10 +3,21 @@ stacks (Libra / Standard / Copier / Static-aka-F-Stack).
 
 Payload size maps to context length; the Static engine gets a fixed memory
 budget so its attainable concurrency collapses as payloads grow (the
-paper's F-Stack large-payload inversion)."""
+paper's F-Stack large-payload inversion).
+
+A stream-level preamble reports the same sweep through the socket facade
+(LibraStack/LibraSocket/ProxyRuntime) with one proxied flow per request —
+the pure selective-copy throughput with no model compute in the loop."""
 from __future__ import annotations
 
-from benchmarks.common import csv, prompts_for, proxy_model, run_engine
+from benchmarks.common import (
+    csv,
+    is_smoke,
+    prompts_for,
+    proxy_model,
+    run_engine,
+    run_stream,
+)
 from repro.serving.engine import (
     CopierEngine,
     LibraEngine,
@@ -20,7 +31,26 @@ GEN = 8
 BUDGET = 26_000_000  # bytes: fits ~8 slots at ctx 64 but ~1 at ctx 320
 
 
+def stream_preamble() -> None:
+    for ctx in CTX_SIZES:
+        rows = {}
+        for name, selective in (("libra", True), ("fullcopy", False)):
+            stack, rt, msgs, dt = run_stream(
+                n_conns=N_REQ, n_msgs=4, payload=ctx * 8,
+                selective=selective)
+            rows[name] = (msgs / max(dt, 1e-9),
+                          stack.counters.total_user_copies())
+        (tput, cp), (_, cp_full) = rows["libra"], rows["fullcopy"]
+        csv(f"fig6a_stream_ctx{ctx}", 1e6 / max(tput, 1e-9),
+            f"msgs_per_s={tput:.0f} "
+            f"boundary_tokens={cp} vs_fullcopy={cp_full} "
+            f"copy_reduction={cp_full/max(cp,1):.1f}x")
+
+
 def main() -> None:
+    stream_preamble()
+    if is_smoke():
+        return
     cfg, model, params = proxy_model()
     for ctx in CTX_SIZES:
         max_len = ctx + GEN + 8

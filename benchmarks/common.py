@@ -1,22 +1,96 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import os
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
-from repro.configs import get_reduced
-from repro.core.parser import TokenStreamParser
-from repro.models.registry import build_model
+from repro.core import (
+    LibraStack,
+    ProxyRuntime,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+)
+
+
+def is_smoke() -> bool:
+    """``benchmarks/run.py --smoke`` sets this: stream-level benches only,
+    reduced sizes, no jit compiles — a seconds-long CI gate."""
+    return os.environ.get("LIBRA_BENCH_SMOKE", "") == "1"
 
 
 def proxy_model(page_size: int = 8):
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.models.registry import build_model
+
     cfg = get_reduced("libra-proxy-125m")
     model = build_model(cfg, page_size=page_size)
     params = model.init_params(jax.random.PRNGKey(0))
     return cfg, model, params
+
+
+# -- stream-level (socket facade) workloads ----------------------------------
+
+BUILDERS = {
+    "length-prefixed": build_message,
+    "delimiter": build_delimited_message,
+    "chunked": lambda m, p: build_chunked_message(
+        [p[i : i + 64] for i in range(0, len(p), 64)]),
+}
+
+
+def stream_stack(pages: int = 4096, page_size: int = 16) -> LibraStack:
+    return LibraStack(n_shards=4, pages_per_shard=pages // 4,
+                      page_size=page_size, secret=b"bench")
+
+
+def run_stream(*, pages: int = 8192, page_size: int = 16,
+               **load_kw) -> Tuple[LibraStack, ProxyRuntime, int, float]:
+    """Build a stack, pre-load a proxy workload (see :func:`load_proxy`),
+    time a full run, shut down, and assert the pool drained. The shared
+    measurement loop for every stream-level benchmark.
+
+    The returned message count is the *application* workload size
+    (``n_conns * n_msgs``) so msgs/s is comparable across parser mixes;
+    chunked flows forward several frames per application message
+    (``rt.messages_forwarded()`` counts frames)."""
+    stack = stream_stack(pages=pages, page_size=page_size)
+    rt = load_proxy(stack, **load_kw)
+    t0 = time.perf_counter()
+    rt.run()
+    dt = time.perf_counter() - t0
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    return stack, rt, load_kw["n_conns"] * load_kw["n_msgs"], dt
+
+
+def load_proxy(stack: LibraStack, *, n_conns: int, n_msgs: int,
+               payload: int, meta: int = 8, parsers: Optional[List[str]] = None,
+               budget: Optional[int] = None, selective: bool = True,
+               seed: int = 0) -> ProxyRuntime:
+    """Build an N-connection proxy over ``stack`` with its ingress queues
+    pre-loaded — entirely through the socket facade. ``selective=False``
+    forces every message down the native full-copy path (the standard-stack
+    baseline) via the admission threshold."""
+    rng = np.random.default_rng(seed)
+    parsers = parsers or ["length-prefixed"]
+    rt = ProxyRuntime(stack, tick_every=32)
+    min_payload = 8 if selective else 1 << 30
+    for i in range(n_conns):
+        proto = parsers[i % len(parsers)]
+        src = stack.socket(proto, min_payload=min_payload)
+        dst = stack.socket(proto, min_payload=min_payload)
+        rt.channel(src, dst, budget=budget, name=f"{proto}-{i}")
+        for _ in range(n_msgs):
+            m = rng.integers(100, 200, meta)
+            p = rng.integers(1000, 2000, payload)
+            src.deliver(BUILDERS[proto](m, p))
+    return rt
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

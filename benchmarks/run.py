@@ -16,10 +16,20 @@ import time
 BENCHES = [
     ("fig1_copy_overhead", "benchmarks.bench_copy_overhead"),
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
+    ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
     ("fig8_vs_copier", "benchmarks.bench_sota"),
     ("fig9_microarch", "benchmarks.bench_microarch"),
+]
+
+# --smoke: stream-level benches only (socket facade, no jit) — seconds, not
+# minutes; the scripts/verify.sh CI gate.
+SMOKE_BENCHES = [
+    ("fig1_copy_overhead", "benchmarks.bench_copy_overhead"),
+    ("fig6_throughput_latency", "benchmarks.bench_throughput"),
+    ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
+    ("fig6e_single_stream", "benchmarks.bench_single_stream"),
 ]
 
 
@@ -50,10 +60,19 @@ def roofline_summary() -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast stream-level subset (CI gate); implies "
+                         "reduced sizes via LIBRA_BENCH_SMOKE=1")
     args = ap.parse_args()
     import importlib
 
-    for name, mod in BENCHES:
+    benches = BENCHES
+    if args.smoke:
+        os.environ["LIBRA_BENCH_SMOKE"] = "1"
+        benches = SMOKE_BENCHES
+
+    failures = 0
+    for name, mod in benches:
         if args.only and args.only not in name:
             continue
         print(f"# --- {name} ---", flush=True)
@@ -61,11 +80,14 @@ def main() -> None:
         try:
             importlib.import_module(mod).main()
         except Exception as e:  # noqa: BLE001
+            failures += 1
             print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
-    if not args.only or "roofline" in (args.only or ""):
+    if not args.smoke and (not args.only or "roofline" in (args.only or "")):
         print("# --- roofline (from dry-run artifacts) ---")
         roofline_summary()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) errored")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.core import LibraStack
 from repro.core.parser import TokenStreamParser
 from repro.models.registry import build_model
 from repro.serving.engine import LibraEngine
@@ -30,9 +31,12 @@ def main() -> None:
     refs = [mono.submit(p, max_new_tokens=6) for p in prompts]
     mono.run()
 
-    # ---- disaggregated: prefill worker ---------------------------------------
+    # ---- disaggregated: both workers share one LibraStack (one anchored
+    # pool, one VPI registry, one tick clock) — the handoff stays in-kernel
+    stack = LibraStack(n_shards=1, pages_per_shard=3 * (64 // 8 + 2) + 4,
+                       page_size=8)
     prefill_worker = LibraEngine(model, params, max_batch=3, max_len=64,
-                                 page_size=8)
+                                 page_size=8, stack=stack)
     reqs = [prefill_worker.submit(p, max_new_tokens=6) for p in prompts]
     prefill_worker.step()   # prefill + first token; payload KV now anchored
 
@@ -43,7 +47,7 @@ def main() -> None:
     for r in reqs:
         h = prefill_worker.forward_handle(r)
         meta_moved += len(h.pages) * 12  # (shard, pid, base) int32 triplets
-        prefill_worker.pool.release(h)   # decode worker holds the other ref
+        prefill_worker.release_handle(h)  # decode worker holds the other ref
 
     # ---- decode worker finishes the streams ----------------------------------
     decode_worker.run()

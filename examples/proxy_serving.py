@@ -1,39 +1,103 @@
-"""The paper's scenario, end to end: an L7-proxy-style router in front of
-backend models, with zero-copy payload forwarding.
+"""The paper's scenario, end to end: an L7 proxy in front of backends, with
+zero-copy payload forwarding — written the way an unmodified proxy would be.
 
-A router inspects ONLY each request's header tokens (selective copy) to
-pick a backend; the bulk payload context is anchored once and handed to
-the chosen backend by VPI — no payload bytes move, no re-prefill. The
-standard proxy re-processes (re-prefills) the payload at the backend.
+Part 1 (stream level): one ``LibraStack`` multiplexes several client↔backend
+flows with *different* protocol parsers through the event-driven
+``ProxyRuntime``. The router policy inspects ONLY header tokens; payloads
+stay anchored in the "kernel" pool and move to the egress socket by VPI
+ownership transfer. Note there is no pool/registry/counter plumbing at any
+call-site — just sockets.
+
+Part 2 (serving level): the same stack design carried into the LLM serving
+engine — a router reads request headers, prefill anchors the payload KV,
+and the chosen backend takes ownership via VPI with zero payload movement.
 
   PYTHONPATH=src python examples/proxy_serving.py
 """
-import time
-
-import jax
 import numpy as np
 
-from repro.configs import get_reduced
-from repro.core.parser import TokenStreamParser
-from repro.models.registry import build_model
-from repro.serving.engine import LibraEngine
+from repro.core import (
+    LibraStack,
+    ProxyRuntime,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+)
 
 HEADER = 4   # routing prefix tokens (the HTTP-header analogue)
 
 
-def main() -> None:
+def stream_proxy() -> None:
+    rng = np.random.default_rng(0)
+    stack = LibraStack(n_shards=4, pages_per_shard=256, page_size=16)
+    rt = ProxyRuntime(stack, scheduler="round-robin", tick_every=8)
+
+    # three protocols behind one proxy; the framed protocols route each
+    # message to one of two backends by its first *header* token (the L7
+    # policy — past the framing: [MAGIC, mlen, plen, hdr...] vs [hdr...]);
+    # the chunked flow has no routing tag and uses a single backend
+    flows = []
+    route_tok = {"length-prefixed": 3, "delimiter": 0}
+    for proto, build in (("length-prefixed", build_message),
+                         ("delimiter", build_delimited_message),
+                         ("chunked", None)):
+        client = stack.socket(proto)
+        n_backends = 2 if proto in route_tok else 1
+        backends = [stack.socket(proto) for _ in range(n_backends)]
+        router = None
+        if proto in route_tok:
+            router = (lambda buf, n, b=backends, i=route_tok[proto]:
+                      b[int(buf[i]) % 2])
+        rt.channel(client, backends, router=router, budget=64, name=proto)
+        flows.append((proto, build, client, backends))
+
+    n_msgs, payload_tokens = 8, 96
+    for proto, build, client, _ in flows:
+        for i in range(n_msgs):
+            meta = np.full(HEADER, 100 + (i % 2))
+            payload = rng.integers(1000, 2000, payload_tokens)
+            if build is None:
+                client.deliver(build_chunked_message(
+                    [payload[:48], payload[48:]]))
+            else:
+                client.deliver(build(meta, payload))
+
+    forwarded = rt.run()
+    c = stack.counters
+    print("--- stream proxy (3 protocols, 5 backends, one stack) ---")
+    for ch in rt.channels:
+        print(f"  {ch.name:16s} messages={ch.stats.messages:3d} "
+              f"logical={ch.stats.logical_bytes} "
+              f"partial_sends={ch.stats.partial_sends}")
+    print(f"messages forwarded: {forwarded}")
+    print(f"user-boundary copies: meta={c.meta_copied} full={c.full_copied} "
+          f"tokens (payload stayed in the pool)")
+    print(f"payload anchored once: {c.anchored} tokens; "
+          f"ownership-transferred: {c.zero_copied} tokens")
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def serving_proxy() -> None:
+    import jax
+
+    from repro.configs import get_reduced
+    from repro.core.parser import TokenStreamParser
+    from repro.models.registry import build_model
+    from repro.serving.engine import LibraEngine
+
     cfg = get_reduced("libra-proxy-125m")
     model = build_model(cfg, page_size=8)
     params = model.init_params(jax.random.PRNGKey(0))
     parser = TokenStreamParser(header_len=HEADER)
 
-    # one engine instance = one shared anchored pool serving two logical
-    # backends (route 0 / route 1) behind the router
+    # one engine instance = one LibraStack serving two logical backends
+    # (route 0 / route 1) behind the router
     eng = LibraEngine(model, params, max_batch=4, max_len=96, page_size=8,
                       parser=parser)
     rng = np.random.default_rng(0)
 
-    n_req, fwd_bytes, hdr_bytes = 8, 0, 0
+    n_req, hdr_bytes = 8, 0
     for i in range(n_req):
         route_tag = i % 2
         header = np.full(HEADER, 100 + route_tag)
@@ -52,20 +116,25 @@ def main() -> None:
         # --- zero-copy forwarding: backend takes ownership via VPI ---
         if not r.done:
             h = eng.forward_handle(r)
-            fwd_bytes += h.seq_len * eng._kv_bytes_per_token()
-            eng.pool.release(h)  # backend done with the shared context
+            eng.release_handle(h)  # backend done with the shared context
         print(f"req {r.rid}: route={decision} header={header[:2]}... "
               f"anchored {len(r.handle.pages) if r.handle else 0} pages "
               f"(vpi={r.handle.vpi & 0xffff:#x}...)" if r.handle else "")
     eng.run()
 
     s = eng.stats
-    print("\n--- proxy summary ---")
+    print("\n--- serving proxy summary ---")
     print(f"requests routed: {n_req}; header bytes inspected: {hdr_bytes}")
     print(f"payload KV forwarded zero-copy: {s.zero_copy_bytes/1e6:.2f} MB")
     print(f"payload bytes moved through the router: 0 (VPI handoff)")
     print(f"standard proxy would re-prefill {s.anchored_bytes/1e6:.2f} MB "
           f"of context at the backend")
+    print(f"stack counters (tokens): {eng.stack.counters}")
+
+
+def main() -> None:
+    stream_proxy()
+    serving_proxy()
 
 
 if __name__ == "__main__":

@@ -1,4 +1,5 @@
-"""Quickstart: train a tiny LM, then serve it through the Libra engine.
+"""Quickstart: the Libra socket API in five lines, then a tiny LM served
+through the Libra engine.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -6,6 +7,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_reduced
+from repro.core import LibraStack, build_message
 from repro.core.parser import TokenStreamParser
 from repro.data.pipeline import DataPipeline, SyntheticCorpus
 from repro.models.registry import build_model
@@ -14,7 +16,24 @@ from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import Trainer
 
 
+def socket_quickstart() -> None:
+    # ---- 0. the POSIX-shaped core API ---------------------------------------
+    # one stack = one Libra "kernel"; sockets hide all pool/registry plumbing
+    stack = LibraStack()
+    client, backend = stack.socket_pair("length-prefixed")
+    msg = build_message(np.arange(4), np.arange(1000, 1064))  # 4 meta + 64 payload
+    client.deliver(msg)                       # network hands bytes to the NIC
+    buf, n = client.recv(1 << 16)             # proxy sees [meta..., VPI]
+    client.forward(backend, buf)              # payload moves by ownership, not copy
+    c = stack.counters
+    print(f"socket demo: recv'd {n} logical tokens via a {len(buf)}-token "
+          f"buffer; user-boundary copies={c.total_user_copies()} "
+          f"zero-copied={c.zero_copied}")
+
+
 def main() -> None:
+    socket_quickstart()
+
     # ---- 1. build a model from a config ------------------------------------
     cfg = get_reduced("libra-proxy-125m")
     model = build_model(cfg, page_size=8)
@@ -44,6 +63,7 @@ def main() -> None:
           f"({s.d2h_calls} transfers), {s.h2d_bytes} B up")
     print(f"payload anchored on device: {s.anchored_bytes/1e6:.2f} MB "
           f"(copied across the boundary: 0 MB)")
+    print(f"engine stack counters (tokens): {eng.stack.counters}")
 
     # the standard stack for contrast
     std = StandardEngine(model, trainer.params, max_batch=4, max_len=64)

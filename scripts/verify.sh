@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# One-command builder gate: tier-1 tests + example/benchmark smoke.
+#   bash scripts/verify.sh [--fast]   (--fast skips the jit-heavy quickstart)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: benchmarks/run.py --smoke =="
+python -m benchmarks.run --smoke
+
+if [[ "${1:-}" != "--fast" ]]; then
+  echo "== smoke: examples/quickstart.py =="
+  python examples/quickstart.py
+fi
+
+echo "verify: OK"

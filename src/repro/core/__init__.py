@@ -1,14 +1,37 @@
 """Libra core: programmable selective data movement (the paper's contribution).
 
-Mechanism (this package) / policy (user parsers) split:
+Three layers, top to bottom:
 
+**Facade (policy-free POSIX surface)** — what unmodified proxies program
+against. One :class:`LibraStack` per "kernel" owns the anchored payload
+pool, the global VPI map, the parser registry, the tick clock, and the
+copy-telemetry counters; :class:`LibraSocket` exposes per-connection
+``recv``/``send``/``forward``/``close``/``poll`` with zero plumbing at
+call-sites. :class:`ProxyRuntime` is the epoll-style event loop that
+multiplexes N flows with mixed parser policies over one stack.
+
+* ``stack``          — :class:`LibraStack` (shared kernel state + clock)
+* ``socket``         — :class:`LibraSocket` (POSIX-shaped connection facade)
+* ``runtime``        — :class:`ProxyRuntime` / :class:`ProxyChannel`
+                       (readiness sets, scheduling, send budgets, ticks)
+
+**Mechanism (datapaths)** — the selective-copy machinery itself.
+
+* ``ingress``        — selective-copy recv path (§3.3)
+* ``egress``         — metadata-copy + zero-copy ownership-transfer send
+                       path, deferred teardown (§3.4, §A.2–A.4)
+* ``state_machine``  — RX/TX lifecycle state machines (paper Figs. 4–5)
 * ``vpi``            — 64-bit opaque anchored-payload handles + registry
 * ``anchor_pool``    — paged, refcounted payload pool allocator + accounting
-* ``parser``         — programmable metadata-boundary policies (eBPF analogue)
-* ``state_machine``  — RX/TX lifecycle state machines (paper Figs. 4–5)
 * ``stream``         — connections + token payload pool (protocol testbed)
-* ``ingress``        — selective-copy recv path
-* ``egress``         — metadata-copy + zero-copy ownership-transfer send path
+
+**Policy (user programs)** — the eBPF analogue supplied by applications.
+
+* ``parser``         — programmable metadata-boundary policies
+
+The free functions ``libra_recv``/``libra_send``/``libra_close``/
+``expire_teardowns`` remain exported as the explicit-plumbing compatibility
+layer; new code should go through the facade (see docs/API.md).
 """
 from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
 from repro.core.egress import expire_teardowns, libra_close, libra_send
@@ -24,17 +47,26 @@ from repro.core.parser import (
     build_message,
     kmp_find,
 )
+from repro.core.runtime import ChannelStats, ProxyChannel, ProxyRuntime
+from repro.core.socket import Events, LibraSocket
+from repro.core.stack import LibraStack
 from repro.core.state_machine import RxStateMachine, St, TxStateMachine
 from repro.core.stream import Connection, CopyCounters, TokenPool
 from repro.core.vpi import VPI_BYTES, VpiEntry, VpiRegistry
 
 __all__ = [
+    # facade
+    "LibraStack", "LibraSocket", "Events",
+    "ProxyRuntime", "ProxyChannel", "ChannelStats",
+    # mechanism
     "AnchorPool", "PageRef", "PoolExhausted",
     "VpiRegistry", "VpiEntry", "VPI_BYTES",
+    "RxStateMachine", "TxStateMachine", "St",
+    "Connection", "TokenPool", "CopyCounters",
+    # policy
     "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",
     "build_message", "build_delimited_message", "build_chunked_message",
-    "RxStateMachine", "TxStateMachine", "St",
-    "Connection", "TokenPool", "CopyCounters",
+    # compatibility layer (explicit plumbing)
     "libra_recv", "libra_send", "libra_close", "expire_teardowns",
 ]

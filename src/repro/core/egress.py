@@ -41,13 +41,15 @@ def libra_send(
     registry: VpiRegistry,
     counters: CopyCounters,
     send_budget: Optional[int] = None,
+    parsed=None,
 ) -> int:
     """Transmit the proxy's outgoing buffer [new_metadata..., VPI] on
     ``dst_conn``. Returns the number of *logical* bytes accepted (like a
-    non-blocking send). ``send_budget`` models a constrained send buffer.
+    non-blocking send). ``send_budget`` models a constrained send buffer;
+    ``parsed`` reuses a ParseResult already computed for ``buf``.
     """
     sm = dst_conn.tx_machine
-    decision = sm.pre_send(buf, _extract_vpi)
+    decision = sm.pre_send(buf, _extract_vpi, parsed=parsed)
 
     if decision.state in (St.DEFAULT, St.FALLBACK_BYPASS, St.METADATA_PARSED):
         n = len(buf) if send_budget is None else min(len(buf), send_budget)
@@ -60,32 +62,41 @@ def libra_send(
         return n
 
     assert decision.state == St.FAST_PATH
+    # cumulative resume offset: a budget-constrained send picks the message
+    # up where the previous call left off (Post-Send accounting, §3.4)
+    start = sm.sent_cumulative
     entry = registry.resolve(decision.vpi)
-    assert entry is not None
-    pages = [PageRef(*pg) for pg in entry.pages]
+    if entry is None:
+        # only reachable on a resume: the anchoring socket closed mid-send
+        # (§A.4 moved the entry to TEARDOWN and deferred the page frees).
+        # The staged frame completes the transmission; teardown expiry owns
+        # the pages now, so the done-cleanup below must not free them.
+        assert start > 0 and sm.staged_out is not None, decision.vpi
+        owned = None
+    else:
+        owned = [PageRef(*pg) for pg in entry.pages]
+        if start == 0:
+            meta = np.asarray(buf[: sm.meta_len]).copy()
+            # data plane: selective copy of the new metadata only
+            counters.meta_copied += len(meta)
+            # §A.2 two-phase ownership transfer through the staging list
+            staged = pool.alloc.stage_transfer(owned)
+            owned = pool.alloc.commit_transfer(staged)
+            counters.zero_copied += entry.payload_len
+            # zero-copy "transmission": the NIC consumes anchored pages in
+            # place; the composed frame stays staged across partial sends
+            payload = pool.read_payload(owned, entry.payload_len)
+            sm.staged_out = np.concatenate([meta, payload])
+    out = sm.staged_out
 
-    # data plane: selective copy of the new metadata only
-    meta = np.asarray(buf[: sm.meta_len]).copy()
-    counters.meta_copied += len(meta)
+    remaining = len(out) - start
+    n = remaining if send_budget is None else min(remaining, send_budget)
+    dst_conn.tx_stream.append(out[start : start + n])
 
-    # §A.2 two-phase ownership transfer through the staging list
-    staged = pool.alloc.stage_transfer(pages)
-    owned = pool.alloc.commit_transfer(staged)
-
-    # zero-copy "transmission": the NIC consumes anchored pages in place.
-    payload = pool.read_payload(owned, entry.payload_len)
-    counters.zero_copied += entry.payload_len
-    out = np.concatenate([meta, payload])
-
-    logical = len(meta) + entry.payload_len
-    n = logical if send_budget is None else min(logical, send_budget)
-    dst_conn.tx_stream.append(out[:n])
-
-    done = sm.post_send(n)
-    if done:
+    if sm.post_send(n):
         # cross-datapath cleanup: VPI entry out of the global map, pages
         # refcount-released, RX machine of the source connection reset.
-        if registry.release(decision.vpi):
+        if owned is not None and registry.release(decision.vpi):
             pool.alloc.free_pages_list(owned)
         src_conn.anchored.pop(decision.vpi, None)
         reset_rx_from_tx(src_conn)

@@ -44,7 +44,7 @@ def libra_recv(
 
     # §A.1 drain mode: a previous message overflowed the pool; the rest of
     # its payload takes the native copy path.
-    drain = getattr(conn, "rx_drain_remaining", 0)
+    drain = conn.rx_drain_remaining
     if drain > 0:
         n = min(drain, conn.rx_available(), buf_len)
         out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
@@ -56,10 +56,26 @@ def libra_recv(
         return out, n
 
     window = conn.rx_window(sm.parser.lookahead)
-    if len(window) == 0:
+    if len(window) == 0 and not (sm.state == St.FAST_PATH
+                                 and sm.payload_consumed < sm.payload_len):
+        # nothing buffered AND no capped logical remainder to report: the
+        # FAST_PATH skip needs no rx bytes (the kernel already consumed the
+        # skb at WRITE_VPI) — recv transparency must still surface it
         return np.zeros((0,), np.int64), 0
 
-    decision = sm.on_recv(window, buf_len)
+    parsed = None
+    if sm.state == St.DEFAULT:
+        # admission precondition for the selective path: the whole declared
+        # payload must be resident in the kernel queue (NIC DMA complete)
+        # before anchoring — a partially delivered message waits, it is
+        # never anchored with holes. (parse() is pure; the result is reused
+        # by the state machine below, so the window is scanned once.)
+        parsed = sm.parser.parse(window)
+        if parsed.ok and parsed.payload_len >= sm.min_payload \
+                and conn.rx_available() < parsed.meta_len + parsed.payload_len:
+            return np.zeros((0,), np.int64), 0
+
+    decision = sm.on_recv(window, buf_len, parsed=parsed)
 
     if decision.state == St.DEFAULT:
         n = min(decision.full_copy, conn.rx_available(), buf_len)
@@ -87,11 +103,15 @@ def libra_recv(
         try:
             pages = pool.alloc.alloc_sequence(payload_len)
         except PoolExhausted:
-            # anchor nothing; serve the whole payload via native copies
-            n = min(payload_len, buf_len - len(meta)) if buf_len > len(meta) else 0
+            # anchor nothing; serve the whole payload via native copies.
+            # the metadata was already accounted as meta_copied above — only
+            # the payload portion goes through the full-copy path. (clamp to
+            # what is actually buffered: never advance past delivered bytes)
+            n = (min(payload_len, conn.rx_available(), buf_len - len(meta))
+                 if buf_len > len(meta) else 0)
             out = np.concatenate([meta, payload[:n].copy()])
             conn.rx_advance(n)
-            counters.full_copied += len(out)
+            counters.full_copied += n
             conn.rx_drain_remaining = payload_len - n
             if conn.rx_drain_remaining == 0:
                 sm.reset()

@@ -1,0 +1,141 @@
+"""``LibraStack`` — one Libra "kernel" instance.
+
+The stack owns everything the paper's kernel half owns, so that socket
+call-sites carry zero plumbing:
+
+* the anchored payload pool (:class:`AnchorPool` allocator +
+  :class:`TokenPool` payload store — the kernel-retained skb pages),
+* the global ``<VPI, payload>`` map (:class:`VpiRegistry`),
+* the parser-policy registry (named eBPF RX/TX-Prog analogues),
+* a monotonic tick clock driving §A.4 deferred-teardown expiry,
+* the global :class:`CopyCounters` telemetry block (paper Fig. 9).
+
+Sockets are created with :meth:`socket` / :meth:`socket_pair`; a single
+stack multiplexes any number of connections with heterogeneous parser
+policies (see :mod:`repro.core.runtime` for the event loop on top).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.anchor_pool import AnchorPool
+from repro.core.egress import expire_teardowns
+from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolicy
+from repro.core.socket import Events, LibraSocket
+from repro.core.state_machine import MIN_PAYLOAD
+from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.vpi import VpiRegistry
+
+ParserLike = Union[str, ParserPolicy]
+
+
+class LibraStack:
+    """Shared selective-copy state for a set of :class:`LibraSocket`\\ s."""
+
+    def __init__(self, *, n_shards: int = 4, pages_per_shard: int = 64,
+                 page_size: int = 16, max_pages_per_seq: int = 0,
+                 grace_ticks: int = 5, secret: Optional[bytes] = None,
+                 alloc: Optional[AnchorPool] = None,
+                 registry: Optional[VpiRegistry] = None,
+                 parsers: Optional[Dict[str, type]] = None):
+        self.alloc = alloc or AnchorPool(n_shards, pages_per_shard, page_size,
+                                         max_pages_per_seq=max_pages_per_seq)
+        self.pool = TokenPool(self.alloc)
+        self.registry = registry or VpiRegistry(secret=secret,
+                                                grace_ticks=grace_ticks)
+        self.counters = CopyCounters()
+        self.parsers: Dict[str, type] = dict(BUILTIN_PARSERS)
+        if parsers:
+            self.parsers.update(parsers)
+        self.now_tick = 0
+        self.sockets: Dict[int, LibraSocket] = {}
+        # vpi -> anchoring socket (the kernel finds this through the global
+        # eBPF map; the facade keeps an explicit owner index)
+        self._vpi_owner: Dict[int, LibraSocket] = {}
+        self._null_conn: Optional[Connection] = None
+
+    # -- socket lifecycle ----------------------------------------------------
+    def make_parser(self, parser: ParserLike, **kw) -> ParserPolicy:
+        """Resolve a registered parser name (or pass a policy through)."""
+        if isinstance(parser, str):
+            return self.parsers[parser](**kw)
+        return parser
+
+    def socket(self, parser: ParserLike = "length-prefixed", *,
+               min_payload: int = MIN_PAYLOAD,
+               send_budget: Optional[int] = None) -> LibraSocket:
+        """Open a connection on this stack. ``min_payload`` above any real
+        message size forces the native full-copy path (a standard-stack
+        baseline socket); ``send_budget`` models a bounded send buffer."""
+        sock = LibraSocket(self, self.make_parser(parser),
+                           min_payload=min_payload, send_budget=send_budget)
+        self.sockets[sock.fileno()] = sock
+        return sock
+
+    def socket_pair(self, parser: ParserLike = "length-prefixed",
+                    **kw) -> Tuple[LibraSocket, LibraSocket]:
+        """A (client-side, backend-side) pair sharing one parser policy —
+        the two halves of one proxied flow."""
+        return self.socket(parser, **kw), self.socket(parser, **kw)
+
+    def close_all(self) -> int:
+        """Close every open socket; returns total anchors deferred."""
+        return sum(s.close() for s in list(self.sockets.values()))
+
+    # -- clock ---------------------------------------------------------------
+    def tick(self, n: int = 1) -> int:
+        """Advance the monotonic clock ``n`` ticks, expiring §A.4 grace
+        periods each tick. Returns the number of pages reclaimed."""
+        freed = 0
+        for _ in range(max(n, 1)):
+            self.now_tick += 1
+            freed += expire_teardowns(self.pool, self.registry, self.now_tick)
+        self._gc_anchor_owners()
+        return freed
+
+    def drain(self) -> int:
+        """Tick through a full grace period (teardown flush for tests and
+        orderly shutdown)."""
+        return self.tick(self.registry.grace_ticks + 1)
+
+    # -- telemetry -----------------------------------------------------------
+    @property
+    def pages_in_use(self) -> int:
+        return self.alloc.total_pages - self.alloc.free_pages
+
+    def utilization(self) -> float:
+        return self.alloc.used_fraction
+
+    def poll(self) -> Dict[int, Events]:
+        """Stack-wide readiness snapshot (epoll_wait analogue)."""
+        return {fd: s.poll() for fd, s in self.sockets.items()}
+
+    # -- facade bookkeeping (called by LibraSocket) --------------------------
+    def _note_anchor_owner(self, sock: LibraSocket) -> None:
+        for vpi in sock.connection.anchored:
+            self._vpi_owner.setdefault(vpi, sock)
+
+    def _anchor_owner(self, vpi: int) -> Optional[LibraSocket]:
+        return self._vpi_owner.get(vpi)
+
+    def _null_source(self) -> Connection:
+        """Inert connection used as the nominal source of sends with no
+        live anchor owner, so cross-path cleanup never resets a real RX
+        machine (its state machines carry no traffic)."""
+        if self._null_conn is None:
+            self._null_conn = Connection(LengthPrefixedParser(), self.registry)
+        return self._null_conn
+
+    def _gc_anchor_owners(self) -> None:
+        dead = [v for v in self._vpi_owner if v not in self.registry]
+        for v in dead:
+            del self._vpi_owner[v]
+
+    def _detach(self, sock: LibraSocket) -> None:
+        self.sockets.pop(sock.fileno(), None)
+        self._gc_anchor_owners()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"LibraStack(sockets={len(self.sockets)}, "
+                f"pages={self.alloc.free_pages}/{self.alloc.total_pages} free, "
+                f"vpis={len(self.registry)}, tick={self.now_tick})")

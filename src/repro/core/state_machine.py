@@ -65,16 +65,20 @@ class RxStateMachine:
         self.meta_copied = self.payload_consumed = 0
         self.vpi_written = False
 
-    def on_recv(self, window, user_buf_space: int) -> RxDecision:
+    def on_recv(self, window, user_buf_space: int,
+                parsed: Optional[ParseResult] = None) -> RxDecision:
         """Evaluate the machine for one recv call. ``window`` is the bounded
         lookahead over the socket queue; ``user_buf_space`` the free room in
-        the application buffer (G2: arbitrary size)."""
+        the application buffer (G2: arbitrary size). ``parsed`` lets the
+        caller reuse a ParseResult it already computed for this window
+        (parse() is pure, so the reuse is sound)."""
         if self.state == St.FAST_PATH:
             remaining = self.payload_len - self.payload_consumed
             return RxDecision(St.FAST_PATH, skip_payload=remaining)
 
         if self.state == St.DEFAULT:
-            res: ParseResult = self.parser.parse(window)
+            res: ParseResult = (parsed if parsed is not None
+                                else self.parser.parse(window))
             if not res.ok:
                 # unparseable or incomplete: native full-copy of what's there
                 return RxDecision(St.DEFAULT, full_copy=min(len(window), user_buf_space))
@@ -127,9 +131,10 @@ class TxStateMachine:
     extraction, kernel action, Post-Send cumulative accounting."""
 
     def __init__(self, parser: ParserPolicy, resolve_vpi, min_payload: int = MIN_PAYLOAD,
-                 vpi_slots: int = 1):
+                 vpi_slots: int = 1, vpi_torn_down=None):
         self.parser = parser
         self.resolve_vpi = resolve_vpi  # callable vpi -> entry | None
+        self.vpi_torn_down = vpi_torn_down  # callable vpi -> bool (§A.4 grace)
         self.min_payload = min_payload
         self.vpi_slots = vpi_slots
         self.state = St.DEFAULT
@@ -138,6 +143,9 @@ class TxStateMachine:
         self.sent_cumulative = 0
         self.message_len = 0
         self.current_vpi: Optional[int] = None
+        # composed [meta..., payload...] staged for transmission — kept
+        # across budget-truncated sendmsg calls (the pending-skb analogue)
+        self.staged_out = None
 
     def reset(self) -> None:
         self.state = St.DEFAULT
@@ -145,11 +153,14 @@ class TxStateMachine:
         self.sent_cumulative = 0
         self.message_len = 0
         self.current_vpi = None
+        self.staged_out = None
 
     # -- Pre-Send ----------------------------------------------------------
-    def pre_send(self, buf, extract_vpi) -> TxDecision:
+    def pre_send(self, buf, extract_vpi,
+                 parsed: Optional[ParseResult] = None) -> TxDecision:
         """``buf`` is the user's outgoing stream window; ``extract_vpi`` maps
-        a buffer slice to the embedded 64-bit VPI (or None)."""
+        a buffer slice to the embedded 64-bit VPI (or None). ``parsed``
+        reuses a ParseResult the caller already computed for ``buf``."""
         if self.state == St.FALLBACK_BYPASS:
             # skip parsing entirely (avoids KMP overhead — footnote 5)
             return TxDecision(St.FALLBACK_BYPASS, full_copy=len(buf))
@@ -157,7 +168,7 @@ class TxStateMachine:
             return TxDecision(St.FAST_PATH, vpi=self.current_vpi,
                               zero_copy_payload=self.payload_len)
 
-        res = self.parser.parse(buf)
+        res = parsed if parsed is not None else self.parser.parse(buf)
         if not res.ok:
             return TxDecision(St.DEFAULT, full_copy=len(buf))
         self.meta_len, self.payload_len = res.meta_len, res.payload_len
@@ -170,6 +181,15 @@ class TxStateMachine:
         vpi = extract_vpi(buf, res.meta_len)
         entry = self.resolve_vpi(vpi) if vpi is not None else None
         if entry is None:
+            if (vpi is not None and self.vpi_torn_down is not None
+                    and self.vpi_torn_down(vpi)):
+                # the handle was real but its payload entered the §A.4 grace
+                # period (anchoring socket closed before this send): the
+                # frame is all that remains — transmit it and complete,
+                # never waiting for payload bytes that cannot arrive
+                self.state = St.FALLBACK_BYPASS
+                self.message_len = len(buf)
+                return TxDecision(St.FALLBACK_BYPASS, full_copy=len(buf))
             self.state = St.FALLBACK_BYPASS  # cache miss (Fig. 5)
             return TxDecision(St.FALLBACK_BYPASS, full_copy=len(buf))
         self.current_vpi = vpi

@@ -77,10 +77,14 @@ class Connection:
         self.rx_read_off = 0
         self.rx_machine = RxStateMachine(parser, min_payload=min_payload)
         self.tx_machine = TxStateMachine(parser, registry.resolve,
-                                         min_payload=min_payload)
+                                         min_payload=min_payload,
+                                         vpi_torn_down=registry.torn_down)
         self.tx_stream: List[np.ndarray] = []     # what actually went out
         self.anchored: Dict[int, Tuple[List[PageRef], int]] = {}  # vpi -> (pages, len)
         self.closed = False
+        # §A.1 drain mode: tokens of an overflowed message still owed to the
+        # native copy path (set by the ingress datapath on pool exhaustion)
+        self.rx_drain_remaining = 0
 
     # -- socket plumbing -----------------------------------------------------
     def deliver(self, data: np.ndarray) -> None:
@@ -99,3 +103,10 @@ class Connection:
 
     def rx_available(self) -> int:
         return len(self.rx_queue) - self.rx_read_off
+
+    def tx_wire(self) -> np.ndarray:
+        """Everything transmitted on this connection, concatenated — the
+        byte stream a peer NIC would observe."""
+        if not self.tx_stream:
+            return np.zeros((0,), np.int64)
+        return np.concatenate(self.tx_stream)

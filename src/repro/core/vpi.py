@@ -79,6 +79,18 @@ class VpiRegistry:
         self.stats["hits"] += 1
         return e
 
+    def peek(self, vpi: int) -> Optional[VpiEntry]:
+        """``resolve`` without touching the hit/miss telemetry — for
+        control-plane bookkeeping (the socket facade sizing a message)."""
+        e = self._entries.get(vpi)
+        return None if e is None or e.state == "TEARDOWN" else e
+
+    def torn_down(self, vpi: int) -> bool:
+        """True while ``vpi`` sits in its §A.4 grace period: the handle was
+        real but its payload is being reclaimed (vs a garbage token)."""
+        e = self._entries.get(vpi)
+        return e is not None and e.state == "TEARDOWN"
+
     def retain(self, vpi: int) -> None:
         self._entries[vpi].refcount += 1
 

@@ -40,7 +40,9 @@ def _payload_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, pool_in_ref,
     tlen = tlen_ref[b]
     pid = tables_ref[b, j]
     start = jnp.minimum(mlen + j * page, s - page)  # in-bounds (caller pads S)
-    toks = pl.load(stream_ref, (0, pl.dslice(start, page)))
+    # row index as a size-1 dslice: older pallas interpret-mode discharge
+    # rules reject plain-int indices mixed with dynamic slices
+    toks = pl.load(stream_ref, (pl.dslice(0, 1), pl.dslice(start, page)))[0]
     rel = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
     valid = (pid >= 0) & (rel + mlen < tlen)
     # always write the block: invalid lanes / skipped pages pass the original

@@ -30,8 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.sharding import make_mesh
 from repro.core.anchor_pool import PoolExhausted
 from repro.core.parser import TokenStreamParser
+from repro.core.stack import LibraStack
 from repro.models.attention import plan_decode_sharding
 from repro.serving.kv_cache import PagedKVPool, SeqHandle
 
@@ -92,8 +94,7 @@ class _EngineBase:
         self.active: List[Request] = []
         self.completed: List[Request] = []
         self._rid = 0
-        self.mesh = jax.make_mesh((1, 1), ("data", "model"),
-                                  axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        self.mesh = make_mesh((1, 1), ("data", "model"))
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
         self._rid += 1
@@ -130,15 +131,38 @@ class LibraEngine(_EngineBase):
     name = "libra"
 
     def __init__(self, model, params, *, max_batch: int = 8, max_len: int = 512,
-                 page_size: int = 16, parser=None, pool_pages: int = 0):
+                 page_size: int = 16, parser=None, pool_pages: int = 0,
+                 stack: Optional[LibraStack] = None,
+                 kv_pool: Optional[PagedKVPool] = None):
         super().__init__(model, params, max_batch=max_batch, max_len=max_len,
                          parser=parser)
         self.page_size = page_size
         b_axis, combine = plan_decode_sharding(max_batch, self.mesh)
         self.b_axis, self.combine = b_axis, combine
-        n_shards = 1
-        pages = pool_pages or (max_batch * (max_len // page_size + 2) + 4)
-        self.pool = PagedKVPool(model, n_shards, pages, page_size)
+        # one LibraStack per engine "kernel": it owns the page allocator, the
+        # VPI registry, the tick clock, and the copy counters. A shared
+        # ``stack`` pools that host state across engines; zero-copy
+        # CROSS-ENGINE handoff additionally needs the device KV itself
+        # shared — pass the first engine's ``kv_pool`` to the second
+        # (handles forwarded into an engine with its own pool would index a
+        # different, zero-filled device array).
+        if stack is None:
+            pages = pool_pages or (max_batch * (max_len // page_size + 2) + 4)
+            stack = LibraStack(n_shards=1, pages_per_shard=pages,
+                               page_size=page_size)
+        elif pool_pages:
+            raise ValueError("pool_pages conflicts with an external stack: "
+                             "the stack's allocator defines the geometry")
+        assert stack.alloc.page_size == page_size, \
+            (stack.alloc.page_size, page_size)
+        self.stack = stack
+        if kv_pool is not None:
+            assert kv_pool.alloc is stack.alloc, \
+                "a shared kv_pool must be backed by the shared stack's allocator"
+            self.pool = kv_pool
+        else:
+            self.pool = PagedKVPool(model, page_size=page_size,
+                                    alloc=stack.alloc, registry=stack.registry)
         self.pps = max_len // page_size + 2
         # parking page for inactive slots (keeps decode NaN-free)
         self._parking = self.pool.alloc.alloc_page(0, 0)
@@ -200,6 +224,9 @@ class LibraEngine(_EngineBase):
         return c.num_layers * 2 * c.num_kv_heads * c.head_dim * 4
 
     def step(self) -> None:
+        # each engine step advances the stack clock: deferred teardowns from
+        # closed connections expire on the engine's cadence (§A.4)
+        self.stack.tick()
         # admit
         free = self.max_batch - len(self.active)
         group = []
@@ -213,6 +240,11 @@ class LibraEngine(_EngineBase):
                     len(r.prompt), r.header_len, reserve=r.max_new_tokens)
             except PoolExhausted:
                 break
+            c = self.stack.counters
+            c.anchored += len(r.prompt) - r.header_len
+            c.meta_copied += r.header_len
+            c.vpi_injected += 1
+            c.allocs += 1
             self.waiting.pop(0)
             group.append(r)
             free -= 1
@@ -287,7 +319,13 @@ class LibraEngine(_EngineBase):
         without moving payload bytes (refcounted ownership share)."""
         h = self.pool.share(r.handle)
         self.stats.zero_copy_bytes += h.seq_len * self._kv_bytes_per_token()
+        self.stack.counters.zero_copied += h.seq_len
         return h
+
+    def release_handle(self, h: SeqHandle) -> None:
+        """Drop a forwarded handle (the backend finished with the shared
+        context). Facade call so call-sites never touch the pool."""
+        self.pool.release(h)
 
 
 # ---------------------------------------------------------------------------

@@ -28,17 +28,26 @@ class SeqHandle:
 
 
 class PagedKVPool:
-    def __init__(self, model, n_shards: int, pages_per_shard: int,
+    def __init__(self, model, n_shards: Optional[int] = None,
+                 pages_per_shard: Optional[int] = None,
                  page_size: int = 16, registry: Optional[VpiRegistry] = None,
-                 max_pages_per_seq: int = 0, dtype=jnp.float32):
+                 max_pages_per_seq: int = 0, dtype=jnp.float32,
+                 alloc: Optional[AnchorPool] = None):
         self.model = model
-        self.page_size = page_size
-        self.alloc = AnchorPool(n_shards, pages_per_shard, page_size,
-                                max_pages_per_seq=max_pages_per_seq)
+        # either an external allocator (a LibraStack's — its geometry defines
+        # the device pool shape) or explicit geometry, never both
+        if alloc is not None:
+            assert n_shards is None and pages_per_shard is None, \
+                "pass geometry via alloc= OR n_shards/pages_per_shard, not both"
+            assert alloc.page_size == page_size, (alloc.page_size, page_size)
+        else:
+            alloc = AnchorPool(n_shards, pages_per_shard, page_size,
+                               max_pages_per_seq=max_pages_per_seq)
+        self.alloc = alloc
+        self.page_size = alloc.page_size
         self.registry = registry or VpiRegistry()
-        total = n_shards * pages_per_shard
-        self.pool = jnp.zeros(model.kv_pool_shape(total), dtype)
-        self.n_shards = n_shards
+        self.pool = jnp.zeros(model.kv_pool_shape(alloc.total_pages), dtype)
+        self.n_shards = alloc.n_shards
 
     # -- sequence lifecycle -------------------------------------------------
     def anchor_sequence(self, prompt_len: int, header_len: int,

@@ -1,0 +1,91 @@
+"""Hypothesis with a deterministic fallback sampler.
+
+The container may not ship ``hypothesis`` (see requirements-dev.txt). Rather
+than skipping every property test, this module re-exports the real library
+when present and otherwise provides a miniature, seeded implementation of
+the tiny slice of its API the tests use (``given``, ``settings``,
+``st.integers``, ``st.lists``, ``st.data``). The fallback draws a fixed
+number of pseudo-random examples per test — weaker than real shrinking
+hypothesis, but it keeps the invariants exercised on minimal installs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+    import inspect
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Data:
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.sample(self._rng)
+
+    class st:  # noqa: N801 — mirrors `hypothesis.strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+        @staticmethod
+        def data():
+            return _Strategy(_Data)
+
+    def settings(max_examples=20, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # the trailing parameters receive the drawn values — bind them
+            # by name so pytest fixtures in the leading positions compose,
+            # exactly as real @given does
+            drawn_names = [p.name for p in params[-len(strategies):]]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 20)
+                for i in range(n):
+                    rng = np.random.default_rng(0x5EED + 7919 * i)
+                    drawn = {name: s.sample(rng)
+                             for name, s in zip(drawn_names, strategies)}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(
+                parameters=params[: -len(strategies)])
+            del wrapper.__wrapped__
+            return wrapper
+
+        return deco

@@ -2,7 +2,8 @@
 end-to-end ingress/egress — unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     AnchorPool,

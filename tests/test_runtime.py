@@ -1,0 +1,284 @@
+"""ProxyRuntime: one stack multiplexing many connections with mixed parser
+policies — readiness scheduling, send budgets, interleaved deliveries,
+counter accounting, and teardown."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Events,
+    LibraStack,
+    ProxyRuntime,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+)
+
+RNG = np.random.default_rng(11)
+
+
+def _stack(**kw):
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("pages_per_shard", 128)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("secret", b"rt")
+    return LibraStack(**kw)
+
+
+def test_multiplex_three_connections_mixed_parsers():
+    """One stack, ≥3 concurrent flows with different parsers, interleaved
+    deliveries; every payload arrives intact and the global CopyCounters
+    equal the sum of per-path expectations."""
+    stack = _stack()
+    rt = ProxyRuntime(stack, tick_every=4)
+    n_msgs, meta_n, payload_n, chunk = 6, 4, 48, 24
+
+    chans = {}
+    for proto in ("length-prefixed", "delimiter", "chunked"):
+        src, dst = stack.socket_pair(proto)
+        chans[proto] = (src, dst, rt.channel(src, dst, name=proto))
+
+    payloads = {p: [] for p in chans}
+    # interleave deliveries round-robin across connections
+    for i in range(n_msgs):
+        for proto, (src, _, _) in chans.items():
+            meta = RNG.integers(100, 200, meta_n)
+            payload = RNG.integers(1000, 2000, payload_n)
+            payloads[proto].append(payload)
+            if proto == "length-prefixed":
+                src.deliver(build_message(meta, payload))
+            elif proto == "delimiter":
+                src.deliver(build_delimited_message(meta, payload))
+            else:
+                src.deliver(build_chunked_message(
+                    [payload[:chunk], payload[chunk:]]))
+
+    rt.run()
+
+    # every payload crossed intact, in order
+    for proto, (_, dst, _) in chans.items():
+        wire = dst.tx_wire()
+        flat = np.concatenate(payloads[proto])
+        if proto == "length-prefixed":
+            got = wire.reshape(n_msgs, 3 + meta_n + payload_n)[:, -payload_n:]
+        elif proto == "delimiter":
+            got = wire.reshape(n_msgs, meta_n + 5 + payload_n)[:, -payload_n:]
+        else:
+            per = wire.reshape(n_msgs, 2 * (2 + chunk) + 2)[:, :-2]
+            got = per.reshape(n_msgs, 2, 2 + chunk)[:, :, 2:]
+        assert np.array_equal(got.reshape(-1), flat)
+
+    # counter accounting: each selective message copies its metadata twice
+    # (rx + tx), anchors its payload once, zero-copies it once; the chunked
+    # terminator (2 tokens) is below the admission threshold -> full copy
+    # on both sides.
+    c = stack.counters
+    lp_meta = 3 + meta_n
+    dl_meta = meta_n + 4 + 1
+    ck_meta = 2 * 2                       # two chunk headers per message
+    assert c.meta_copied == 2 * n_msgs * (lp_meta + dl_meta + ck_meta)
+    assert c.full_copied == 2 * n_msgs * 2
+    assert c.anchored == 3 * n_msgs * payload_n
+    assert c.zero_copied == 3 * n_msgs * payload_n
+    assert c.vpi_injected == n_msgs * (1 + 1 + 2)
+    assert len(stack.registry) == 0
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_budget_partial_messages_stay_ordered():
+    """A budget-truncated message must finish before the next one starts on
+    the same flow (TCP ordering per connection)."""
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    src, dst = stack.socket_pair("length-prefixed")
+    ch = rt.channel(src, dst, budget=10)
+    p1 = RNG.integers(1000, 2000, 40)
+    p2 = RNG.integers(2000, 3000, 40)
+    src.deliver(build_message(np.arange(3), p1))
+    src.deliver(build_message(np.arange(3), p2))
+    rt.run()
+    wire = dst.tx_wire()
+    assert ch.stats.messages == 2 and ch.stats.partial_sends > 0
+    assert np.array_equal(wire[6 : 46], p1)
+    assert np.array_equal(wire[-40:], p2)
+
+
+def test_router_selects_backend_by_header():
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    src = stack.socket("length-prefixed")
+    backends = [stack.socket("length-prefixed") for _ in range(3)]
+    rt.channel(src, backends, router=lambda buf, n: backends[int(buf[3]) % 3])
+    for tag in (0, 1, 2, 1):
+        src.deliver(build_message(np.array([tag]), RNG.integers(0, 9, 32)))
+    rt.run()
+    lens = [len(b.tx_wire()) for b in backends]
+    assert lens == [36, 72, 36]   # 3 hdr + 1 meta + 32 payload per message
+
+
+def test_priority_scheduler_orders_ready_set():
+    stack = _stack()
+    rt = ProxyRuntime(stack, scheduler="priority")
+    order = []
+
+    def mk_rewrite(name):
+        def rewrite(buf, n):
+            order.append(name)
+            return buf
+        return rewrite
+
+    for name, prio in (("lo", 0), ("hi", 5), ("mid", 2)):
+        src, dst = stack.socket_pair("length-prefixed")
+        rt.channel(src, dst, rewrite=mk_rewrite(name), priority=prio,
+                   name=name)
+        src.deliver(build_message(np.arange(2), RNG.integers(0, 9, 32)))
+    rt.step()
+    assert order == ["hi", "mid", "lo"]
+
+
+def test_round_robin_rotates_service_order():
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    order = []
+
+    def mk_rewrite(name):
+        def rewrite(buf, n):
+            order.append(name)
+            return buf
+        return rewrite
+
+    for name in ("a", "b", "c"):
+        src, dst = stack.socket_pair("length-prefixed")
+        rt.channel(src, dst, rewrite=mk_rewrite(name), name=name)
+        for _ in range(2):
+            src.deliver(build_message(np.arange(2), RNG.integers(0, 9, 32)))
+    rt.step()
+    rt.step()
+    assert order[:3] == ["a", "b", "c"]
+    assert order[3:] == ["b", "c", "a"]   # rotated start
+
+
+def test_small_recv_buf_reassembles_before_routing():
+    """Regression: a recv_buf smaller than metadata+VPI fragments one
+    message across several recv calls; the channel must reassemble it and
+    route/forward it exactly once (never hand an empty FAST_PATH fragment
+    to the router)."""
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    src = stack.socket("length-prefixed")
+    backends = [stack.socket("length-prefixed") for _ in range(2)]
+    routed = []
+
+    def router(buf, n):
+        routed.append((len(buf), n))
+        return backends[int(buf[3]) % 2]
+
+    ch = rt.channel(src, backends, router=router, recv_buf=4)
+    payload = RNG.integers(1000, 2000, 64)
+    src.deliver(build_message(np.array([101, 7, 7, 7]), payload))
+    rt.run()
+    # routed once, with the fully reassembled [meta..., VPI] buffer
+    assert routed == [(3 + 4 + 1, 3 + 4 + 64)]
+    assert ch.stats.messages == 1
+    assert np.array_equal(backends[1].tx_wire()[-64:], payload)
+    assert len(backends[0].tx_wire()) == 0
+    assert len(stack.registry) == 0
+
+
+def test_runtime_tick_drives_deferred_teardown():
+    stack = _stack(grace_ticks=2)
+    rt = ProxyRuntime(stack, tick_every=1)
+    src, dst = stack.socket_pair("length-prefixed")
+    rt.channel(src, dst)
+    src.deliver(build_message(np.arange(3), RNG.integers(0, 9, 64)))
+    src.recv(1 << 20)      # anchor, then close with the message in flight
+    src.close()
+    assert stack.pages_in_use == 4
+    # idle steps still advance the clock via tick_every
+    for _ in range(4):
+        rt.step()
+    assert stack.pages_in_use == 0
+    assert len(stack.registry) == 0
+
+
+def test_shared_backend_holds_message_until_send_buffer_frees():
+    """Two channels sharing one backend socket: while channel A's message
+    is budget-truncated, channel B's message is held (EAGAIN) and retried —
+    both arrive whole, never interleaved."""
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    shared = stack.socket("length-prefixed")
+    pa = RNG.integers(1000, 2000, 40)
+    pb = RNG.integers(3000, 4000, 40)
+    for payload, budget in ((pa, 8), (pb, None)):
+        src = stack.socket("length-prefixed")
+        rt.channel(src, shared, budget=budget)
+        src.deliver(build_message(np.arange(3), payload))
+    rt.run()
+    wire = shared.tx_wire()
+    assert len(wire) == 2 * 46
+    # channel A's truncated message finishes before B's is admitted
+    assert np.array_equal(wire[6:46], pa)
+    assert np.array_equal(wire[-40:], pb)
+    assert sum(c.stats.messages for c in rt.channels) == 2
+
+
+def test_trickled_delivery_waits_for_frame_then_anchors():
+    """A message arriving in small network chunks must be forwarded as ONE
+    selectively-copied message once framable — never as raw fragments."""
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    src, dst = stack.socket_pair("length-prefixed")
+    ch = rt.channel(src, dst)
+    payload = RNG.integers(1000, 2000, 32)
+    msg = build_message(np.arange(4), payload)
+    for lo in range(0, len(msg), 5):      # 5-token trickles
+        src.deliver(msg[lo : lo + 5])
+        rt.step()
+    rt.run()
+    assert ch.stats.messages == 1
+    assert stack.counters.zero_copied == 32      # anchored, not full-copied
+    assert np.array_equal(dst.tx_wire()[-32:], payload)
+
+
+def test_client_close_mid_truncated_send_still_drains():
+    """Regression: a client closing while its message is budget-truncated
+    must not strand the backend — the frame finishes transmitting (§A.4)
+    and other channels sharing the backend proceed."""
+    stack = _stack(grace_ticks=3)
+    rt = ProxyRuntime(stack, tick_every=1)
+    shared = stack.socket("length-prefixed")
+    pa = RNG.integers(1000, 2000, 40)
+    pb = RNG.integers(3000, 4000, 40)
+    a = stack.socket("length-prefixed")
+    ch_a = rt.channel(a, shared, budget=16)
+    a.deliver(build_message(np.arange(3), pa))
+    rt.step()                     # truncated: backend pending
+    assert shared.pending_send is not None
+    a.close()                     # client vanishes mid-send
+    b = stack.socket("length-prefixed")
+    rt.channel(b, shared)
+    b.deliver(build_message(np.arange(3), pb))
+    rt.run()
+    wire = shared.tx_wire()
+    assert shared.pending_send is None
+    assert np.array_equal(wire[6:46], pa)    # A's frame finished first
+    assert np.array_equal(wire[-40:], pb)    # then B flowed
+    stack.drain()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_shutdown_reclaims_everything():
+    stack = _stack()
+    rt = ProxyRuntime(stack)
+    for proto in ("length-prefixed", "delimiter"):
+        src, dst = stack.socket_pair(proto)
+        rt.channel(src, dst)
+        src.deliver(build_message(np.arange(3), RNG.integers(0, 9, 48))
+                    if proto == "length-prefixed" else
+                    build_delimited_message(np.arange(3),
+                                            RNG.integers(0, 9, 48)))
+        src.recv(1 << 20)  # leave a message half-proxied
+    rt.shutdown()
+    assert all(s.closed for ch in rt.channels for s in [ch.src] + ch.dsts)
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert len(stack.registry) == 0

@@ -3,11 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 from jax.sharding import PartitionSpec as P
 
 from repro.common.sharding import (
     DEFAULT_RULES,
+    AxisType,
+    abstract_mesh,
     fsdp2d_rules,
     spec_for,
     tree_shardings,
@@ -21,7 +22,7 @@ from repro.roofline.hlo_analysis import (
 
 
 def _mesh(shape=(2, 4), axes=("data", "model")):
-    return jax.sharding.AbstractMesh(shape, axes)
+    return abstract_mesh(shape, axes)
 
 
 class TestSpecFor:

@@ -1,0 +1,449 @@
+"""LibraStack/LibraSocket facade: parity with the explicit-plumbing free
+functions, partial sends under send budgets, pool-exhaustion drain, and
+tick-driven deferred teardown — the POSIX surface of the redesign."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnchorPool,
+    Connection,
+    CopyCounters,
+    Events,
+    LengthPrefixedParser,
+    LibraStack,
+    St,
+    TokenPool,
+    VpiRegistry,
+    build_message,
+    libra_recv,
+    libra_send,
+)
+
+RNG = np.random.default_rng(3)
+
+
+def _mk_stack(**kw):
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("pages_per_shard", 64)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("secret", b"t")
+    return LibraStack(**kw)
+
+
+def _msg(meta_n=5, payload_n=64):
+    meta = RNG.integers(100, 200, meta_n)
+    payload = RNG.integers(1000, 2000, payload_n)
+    return build_message(meta, payload), meta, payload
+
+
+# ---------------------------------------------------------------------------
+# parity with the compatibility layer
+# ---------------------------------------------------------------------------
+
+def test_facade_parity_with_free_functions():
+    """The facade must be byte- and counter-identical to hand-threading
+    pool/registry/counters through libra_recv/libra_send."""
+    msg, meta, payload = _msg()
+
+    # explicit plumbing (compatibility layer)
+    alloc = AnchorPool(4, 64, 16)
+    pool = TokenPool(alloc)
+    reg = VpiRegistry(secret=b"t")
+    counters = CopyCounters()
+    cin = Connection(LengthPrefixedParser(), reg, min_payload=8)
+    cout = Connection(LengthPrefixedParser(), reg, min_payload=8)
+    cin.deliver(msg)
+    buf_f, n_f = libra_recv(cin, 1 << 20, pool, reg, counters)
+    sent_f = libra_send(cin, cout, buf_f, pool, reg, counters)
+
+    # facade
+    stack = _mk_stack()
+    src, dst = stack.socket_pair("length-prefixed")
+    src.deliver(msg)
+    buf_s, n_s = src.recv(1 << 20)
+    sent_s = src.forward(dst, buf_s)
+
+    assert n_s == n_f and sent_s == sent_f
+    assert len(buf_s) == len(buf_f)
+    assert np.array_equal(buf_s[:-1], buf_f[:-1])  # same meta; VPIs differ
+    assert np.array_equal(cout.tx_stream[-1], dst.tx_wire())
+    for field in ("meta_copied", "full_copied", "anchored", "zero_copied",
+                  "vpi_injected", "allocs"):
+        assert getattr(stack.counters, field) == getattr(counters, field), field
+    assert len(stack.registry) == 0
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_send_resolves_anchor_owner_via_vpi():
+    """POSIX-shaped send on the egress socket alone: the stack resolves the
+    anchoring connection from the embedded VPI (global-map analogue)."""
+    stack = _mk_stack()
+    msg, meta, payload = _msg()
+    src = stack.socket("length-prefixed")
+    dst = stack.socket("length-prefixed")
+    src.deliver(msg)
+    buf, n = src.recv(1 << 20)
+    sent = dst.send(buf)   # no forward(), no explicit src
+    assert sent == n
+    assert np.array_equal(dst.tx_wire()[-len(payload):], payload)
+    assert src.connection.rx_machine.state is St.DEFAULT  # cross-path reset
+    assert len(stack.registry) == 0
+
+
+# ---------------------------------------------------------------------------
+# partial sends (send budgets)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("budget", [1, 7, 10, 71, 72, 1000])
+def test_partial_send_budget_resumes_exactly(budget):
+    stack = _mk_stack()
+    msg, meta, payload = _msg(meta_n=5, payload_n=64)
+    logical = 3 + 5 + 64
+    src, dst = stack.socket_pair("length-prefixed")
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    total = src.forward(dst, buf, budget=budget)
+    calls = 1
+    while dst.pending_send is not None:
+        n = dst.send(budget=budget)
+        assert n > 0
+        total += n
+        calls += 1
+        assert calls < 200
+    assert total == logical
+    wire = dst.tx_wire()
+    assert len(wire) == logical
+    assert np.array_equal(wire[-64:], payload)
+    # metadata and payload counted once regardless of how many send calls
+    assert stack.counters.zero_copied == 64
+    assert stack.counters.meta_copied == 8 + 8  # rx meta + tx meta
+    assert len(stack.registry) == 0
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_new_buffer_while_pending_raises_eagain():
+    """Regression: a second message on a socket with a budget-truncated
+    send pending must be refused (EAGAIN analogue), not silently swallowed
+    into the first message's continuation."""
+    stack = _mk_stack()
+    msg1, _, p1 = _msg()
+    msg2, _, _ = _msg()
+    src1, dst = stack.socket_pair("length-prefixed")
+    src2 = stack.socket("length-prefixed")
+    src1.deliver(msg1)
+    src2.deliver(msg2)
+    buf1, _ = src1.recv(1 << 20)
+    buf2, _ = src2.recv(1 << 20)
+    src1.forward(dst, buf1, budget=8)       # truncated -> pending
+    with pytest.raises(BlockingIOError):
+        src2.forward(dst, buf2)
+    # the pending message still completes untouched
+    while dst.pending_send is not None:
+        dst.send(budget=8)
+    assert np.array_equal(dst.tx_wire()[-64:], p1)
+    src2.close()
+    stack.drain()
+
+
+def test_src_close_mid_partial_send_completes_from_staged_frame():
+    """Regression: closing the anchoring socket while its message is
+    half-sent (§A.4 teardown) must not crash the continuation; the staged
+    frame finishes the wire and pages are freed exactly once (by teardown
+    expiry, not the send completion)."""
+    stack = _mk_stack(grace_ticks=2)
+    msg, _, payload = _msg(payload_n=64)
+    src, dst = stack.socket_pair("length-prefixed")
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    total = src.forward(dst, buf, budget=10)
+    src.close()                       # anchor enters the grace period
+    while dst.pending_send is not None:
+        n = dst.send(budget=10)
+        assert n > 0
+        total += n
+    assert total == 3 + 5 + 64
+    assert np.array_equal(dst.tx_wire()[-64:], payload)
+    stack.drain()
+    # exactly once: a double free would push free_pages past total
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert len(stack.registry) == 0
+
+
+def test_forward_to_baseline_socket_completes_as_full_copy():
+    """Regression: forwarding a selective-copy frame to a baseline socket
+    (admission threshold above any payload -> DEFAULT full copy) must
+    complete at the frame's byte length, not wedge on the registry's
+    logical length."""
+    stack = _mk_stack()
+    msg, _, _ = _msg()
+    src = stack.socket("length-prefixed")
+    dst = stack.socket("length-prefixed", min_payload=1 << 30)
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    sent = src.forward(dst, buf)
+    assert sent == len(buf)
+    assert dst.pending_send is None          # completed, not stuck at 8/72
+    # the socket still accepts new messages
+    assert dst.send(np.arange(4)) == 4
+
+
+def test_header_only_frame_then_fastpath_message():
+    """Regression: a frame that parses to a payload but carries no VPI slot
+    leaves METADATA_PARSED behind; the next real message must fast-path
+    cleanly instead of crashing on a phantom resume."""
+    stack = _mk_stack()
+    src, dst = stack.socket_pair("length-prefixed")
+    header_only = np.array([17, 4, 50, 9, 9, 9, 9], np.int64)  # claims 50
+    assert dst.send(header_only) == len(header_only)
+    assert dst.pending_send is None
+    msg, _, payload = _msg()
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    assert src.forward(dst, buf) == 3 + 5 + 64   # no TypeError, fast path
+    assert np.array_equal(dst.tx_wire()[-64:], payload)
+    assert len(stack.registry) == 0
+
+
+def test_unresolvable_send_never_resets_own_rx_machine():
+    """Regression: completing a send with no live anchor owner must not
+    reset the sending socket's own in-flight RX state (the fallback used
+    to default the 'source' to self)."""
+    stack = _mk_stack(grace_ticks=5)
+    # socket S is mid-recv: message anchored but logical remainder capped
+    s = stack.socket("length-prefixed")
+    msg, _, payload = _msg(meta_n=5, payload_n=64)
+    s.deliver(msg)
+    s.recv(10)                      # logical capped: RX stays FAST_PATH
+    assert s.connection.rx_machine.state is St.FAST_PATH
+    # meanwhile S transmits a frame whose anchor was torn down elsewhere
+    other = stack.socket("length-prefixed")
+    msg2, _, _ = _msg()
+    other.deliver(msg2)
+    frame, _ = other.recv(1 << 20)
+    other.close()                   # anchor -> TEARDOWN
+    s.send(frame)                   # completes via the teardown fallback
+    # S's own receive state survived; the remainder is still recoverable
+    assert s.connection.rx_machine.state is St.FAST_PATH
+    _, more = s.recv(1 << 20)
+    assert more == (3 + 5 + 64) - 10
+    stack.drain()
+
+
+def test_stale_vpi_frame_does_not_wedge_next_message():
+    """Regression: a frame whose VPI was already released (double-forward)
+    claims a payload that never follows; the next message on the socket
+    must still fast-path instead of being swallowed by the stale bypass."""
+    stack = _mk_stack()
+    msg, _, payload = _msg()
+    src, dst = stack.socket_pair("length-prefixed")
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    src.forward(dst, buf)                 # completes, releases the VPI
+    sent = dst.send(buf.copy())           # same frame again: stale handle
+    assert sent == len(buf)
+    # a fresh selective-copy message is NOT absorbed into the stale bypass
+    src2 = stack.socket("length-prefixed")
+    msg2, _, payload2 = _msg()
+    src2.deliver(msg2)
+    buf2, _ = src2.recv(1 << 20)
+    before = stack.counters.zero_copied
+    assert src2.forward(dst, buf2) == 3 + 5 + 64
+    assert stack.counters.zero_copied == before + 64   # fast path, not full copy
+    assert dst.pending_send is None
+    assert np.array_equal(dst.tx_wire()[-64:], payload2)
+
+
+def test_src_close_before_first_send_completes_frame():
+    """Regression: forwarding a [meta, VPI] frame whose anchor entered the
+    §A.4 grace period (src closed BEFORE the first send) must transmit the
+    frame and complete — not wedge the TX machine waiting for payload
+    bytes that can never arrive."""
+    stack = _mk_stack(grace_ticks=3)
+    msg, _, payload = _msg()
+    src, dst = stack.socket_pair("length-prefixed")
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    src.close()                      # anchor -> TEARDOWN before any send
+    sent = dst.send(buf)
+    assert sent == len(buf)          # the frame itself, nothing phantom
+    assert dst.pending_send is None
+    assert dst.connection.tx_machine.state is St.DEFAULT  # completed, not wedged
+    # a healthy selective-copy message on the same socket still fast-paths
+    msg2, _, payload2 = _msg()
+    src2 = stack.socket("length-prefixed")
+    src2.deliver(msg2)
+    buf2, _ = src2.recv(1 << 20)
+    assert src2.forward(dst, buf2) == 3 + 5 + 64
+    assert np.array_equal(dst.tx_wire()[-64:], payload2)
+    stack.drain()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert len(stack.registry) == 0
+
+
+def test_socket_default_send_budget():
+    """A socket-level send_budget applies when the call passes none."""
+    stack = _mk_stack()
+    msg, _, payload = _msg()
+    src, dst = stack.socket_pair("length-prefixed")
+    dst.send_budget = 16
+    src.deliver(msg)
+    buf, _ = src.recv(1 << 20)
+    n = src.forward(dst, buf)
+    assert n == 16 and dst.pending_send is not None
+    while dst.pending_send is not None:
+        dst.send()
+    assert np.array_equal(dst.tx_wire()[-64:], payload)
+
+
+# ---------------------------------------------------------------------------
+# pool exhaustion through the facade (+ the accounting regression)
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_drains_through_facade():
+    stack = _mk_stack(n_shards=1, pages_per_shard=2, page_size=16)
+    meta = RNG.integers(100, 200, 2)
+    payload = RNG.integers(1000, 2000, 200)  # needs 13 pages > 2
+    sock = stack.socket("length-prefixed")
+    sock.deliver(build_message(meta, payload))
+    parts, total = [], 0
+    for _ in range(50):
+        buf, n = sock.recv(64)
+        parts.append(buf)
+        total += n
+        if sock.rx_available() == 0:
+            break
+    got = np.concatenate(parts)
+    assert np.array_equal(got[-200:], payload)
+    assert len(stack.registry) == 0
+
+
+def test_exhaustion_counts_meta_and_payload_once():
+    """Regression: the §A.1 overflow path used to count the already-copied
+    metadata a second time as full copy. Copies must partition exactly:
+    meta tokens -> meta_copied, payload tokens -> full_copied."""
+    stack = _mk_stack(n_shards=1, pages_per_shard=2, page_size=16)
+    meta = RNG.integers(100, 200, 4)
+    payload = RNG.integers(1000, 2000, 100)   # 7 pages > 2 -> exhaustion
+    sock = stack.socket("length-prefixed")
+    sock.deliver(build_message(meta, payload))
+    while sock.rx_available() > 0:
+        _, n = sock.recv(1 << 20)
+        if n == 0:
+            break
+    c = stack.counters
+    assert c.meta_copied == 3 + 4          # header + meta, exactly once
+    assert c.full_copied == 100            # payload portion, exactly once
+    assert c.total_user_copies() == 3 + 4 + 100
+    assert c.anchored == 0 and c.zero_copied == 0
+
+
+def test_partial_payload_delivery_waits_then_anchors():
+    """Regression: the selective path must not anchor until the whole
+    declared payload is resident (DMA-complete precondition) — anchoring a
+    half-delivered message used to write zeros into the pool and push the
+    read offset past the queue."""
+    stack = _mk_stack()
+    meta = RNG.integers(100, 200, 4)
+    payload = RNG.integers(1000, 2000, 32)
+    msg = build_message(meta, payload)
+    src, dst = stack.socket_pair("length-prefixed")
+    src.deliver(msg[: 3 + 4 + 10])          # header + meta + 10 of 32 payload
+    buf, n = src.recv(1 << 20)
+    assert n == 0 and len(buf) == 0         # waits; nothing consumed
+    assert src.rx_available() == 3 + 4 + 10
+    src.deliver(msg[3 + 4 + 10 :])          # the rest arrives
+    buf, n = src.recv(1 << 20)
+    assert n == 3 + 4 + 32
+    src.forward(dst, buf)
+    assert np.array_equal(dst.tx_wire()[-32:], payload)  # no zeros anchored
+    assert len(stack.registry) == 0
+
+
+def test_partial_delivery_under_exhaustion_never_overshoots():
+    """Companion clamp: even on the pool-exhaustion fallback, recv must
+    never advance past the delivered bytes."""
+    stack = _mk_stack(n_shards=1, pages_per_shard=2, page_size=16)
+    meta = RNG.integers(100, 200, 2)
+    payload = RNG.integers(1000, 2000, 200)  # 13 pages > 2 -> exhaustion
+    msg = build_message(meta, payload)
+    sock = stack.socket("length-prefixed")
+    sock.deliver(msg[:40])
+    buf, n = sock.recv(1 << 20)
+    assert n == 0                            # incomplete: waits
+    sock.deliver(msg[40:])
+    parts, total = [], 0
+    while sock.rx_available() > 0:
+        buf, n = sock.recv(1 << 20)
+        if n == 0:
+            break
+        parts.append(buf)
+        total += n
+    got = np.concatenate(parts)
+    assert np.array_equal(got[-200:], payload)
+    assert sock.rx_available() == 0
+
+
+# ---------------------------------------------------------------------------
+# close + tick-driven deferred teardown
+# ---------------------------------------------------------------------------
+
+def test_close_defers_then_tick_reclaims():
+    stack = _mk_stack(grace_ticks=3)
+    msg, _, payload = _msg(payload_n=64)   # 4 pages at page_size=16
+    sock = stack.socket("length-prefixed")
+    sock.deliver(msg)
+    sock.recv(1 << 20)
+    assert stack.pages_in_use == 4
+    deferred = sock.close()
+    assert deferred == 1 and sock.closed
+    assert sock.fileno() not in stack.sockets
+    # §A.4: pages survive the grace period, then tick() reclaims them
+    assert stack.tick(2) == 0
+    assert stack.pages_in_use == 4
+    assert stack.tick(2) == 4
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert len(stack.registry) == 0
+
+
+def test_close_idempotent_and_recv_raises():
+    stack = _mk_stack()
+    sock = stack.socket("length-prefixed")
+    assert sock.close() == 0
+    assert sock.close() == 0
+    with pytest.raises(OSError):
+        sock.recv(16)
+    with pytest.raises(OSError):
+        sock.send(np.zeros(4, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# poll / readiness
+# ---------------------------------------------------------------------------
+
+def test_poll_events():
+    stack = _mk_stack()
+    msg, _, _ = _msg()
+    src, dst = stack.socket_pair("length-prefixed", send_budget=8)
+    assert src.poll() == Events.WRITABLE
+    src.deliver(msg)
+    assert src.poll() & Events.READABLE
+    buf, _ = src.recv(1 << 20)
+    src.forward(dst, buf)          # budget-truncated
+    assert dst.poll() & Events.SEND_PENDING
+    while dst.pending_send is not None:
+        dst.send()
+    assert not dst.poll() & Events.SEND_PENDING
+    dst.close()
+    assert dst.poll() == Events.CLOSED
+    stack.drain()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_stack_poll_snapshot():
+    stack = _mk_stack()
+    a = stack.socket("length-prefixed")
+    b = stack.socket("delimiter")
+    a.deliver(np.arange(8))
+    snap = stack.poll()
+    assert snap[a.fileno()] & Events.READABLE
+    assert not snap[b.fileno()] & Events.READABLE
