@@ -72,14 +72,17 @@ def run_stream(*, pages: int = 8192, page_size: int = 16,
 def load_proxy(stack: LibraStack, *, n_conns: int, n_msgs: int,
                payload: int, meta: int = 8, parsers: Optional[List[str]] = None,
                budget: Optional[int] = None, selective: bool = True,
-               seed: int = 0) -> ProxyRuntime:
+               seed: int = 0, batched: bool = False,
+               batch_impl: str = "host") -> ProxyRuntime:
     """Build an N-connection proxy over ``stack`` with its ingress queues
     pre-loaded — entirely through the socket facade. ``selective=False``
     forces every message down the native full-copy path (the standard-stack
-    baseline) via the admission threshold."""
+    baseline) via the admission threshold. ``batched=True`` services each
+    scheduling round with one fused recv_batch/forward_batch pass."""
     rng = np.random.default_rng(seed)
     parsers = parsers or ["length-prefixed"]
-    rt = ProxyRuntime(stack, tick_every=32)
+    rt = ProxyRuntime(stack, tick_every=32, batched=batched,
+                      batch_impl=batch_impl)
     min_payload = 8 if selective else 1 << 30
     for i in range(n_conns):
         proto = parsers[i % len(parsers)]

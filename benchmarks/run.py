@@ -17,6 +17,7 @@ BENCHES = [
     ("fig1_copy_overhead", "benchmarks.bench_copy_overhead"),
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
+    ("batched_datapath", "benchmarks.bench_batched_datapath"),
     ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
     ("fig8_vs_copier", "benchmarks.bench_sota"),
@@ -29,6 +30,7 @@ SMOKE_BENCHES = [
     ("fig1_copy_overhead", "benchmarks.bench_copy_overhead"),
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
+    ("batched_datapath", "benchmarks.bench_batched_datapath"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
 ]
 

@@ -1,0 +1,70 @@
+"""CI gate: fused selective-copy kernel vs the pure-jnp oracle.
+
+Two checks (seconds-fast, CPU-only), sharing case/walk machinery with
+tests/test_kernels.py via :mod:`repro.kernels.testing`:
+
+1. **Interpret-mode parity** — the fused Pallas kernel body (executed on
+   CPU via ``interpret=True``) must match ``kernels.ref.selective_copy_ref``
+   bit-exactly across a shape/boundary sweep, in both legacy and
+   reserved-scratch modes.
+2. **Zero-realloc hot path** — the ``reserved_scratch=True`` jaxpr must
+   contain no ``concatenate``/``pad`` (the pre-fusion implementation copied
+   the whole pool per call to append a dummy row).
+
+Run: ``PYTHONPATH=src python scripts/check_kernel_parity.py``
+"""
+from __future__ import annotations
+
+import functools
+import sys
+
+import jax
+import numpy as np
+
+from repro.kernels import ref as R
+from repro.kernels.selective_copy import selective_copy
+from repro.kernels.testing import POOL_COPY_PRIMS, jaxpr_primitives, selcopy_case
+
+
+def check_parity() -> None:
+    rng = np.random.default_rng(42)
+    for b, page, pps, meta_max in [(1, 8, 2, 8), (2, 8, 4, 16),
+                                   (3, 16, 4, 16), (2, 16, 3, 32)]:
+        stream, ml, tl, pool, tables = selcopy_case(
+            rng, b=b, page=page, pps=pps, meta_max=meta_max)
+        for reserved in (True, False):
+            pl_pool = pool if reserved else pool[:-1]
+            got_m, got_p = selective_copy(stream, ml, tl, pl_pool, tables,
+                                          meta_max=meta_max, interpret=True,
+                                          reserved_scratch=reserved)
+            want_m, want_p = R.selective_copy_ref(stream, ml, tl, pl_pool,
+                                                  tables, meta_max=meta_max)
+            assert np.array_equal(np.array(got_m), np.array(want_m)), \
+                (b, page, pps, meta_max, reserved, "meta")
+            assert np.array_equal(np.array(got_p), np.array(want_p)), \
+                (b, page, pps, meta_max, reserved, "pool")
+    print("parity: fused kernel == oracle (bit-exact, interpret mode)")
+
+
+def check_no_pool_copy() -> None:
+    stream, ml, tl, pool, tables = selcopy_case(np.random.default_rng(7))
+    fn = functools.partial(selective_copy, meta_max=16, interpret=True,
+                           reserved_scratch=True)
+    names = jaxpr_primitives(jax.make_jaxpr(fn)(stream, ml, tl, pool,
+                                                tables).jaxpr)
+    bad = set(names) & set(POOL_COPY_PRIMS)
+    assert not bad, f"pool-sized copy crept back into the hot path: {bad}"
+    legacy = functools.partial(selective_copy, meta_max=16, interpret=True,
+                               reserved_scratch=False)
+    lnames = jaxpr_primitives(jax.make_jaxpr(legacy)(stream, ml, tl,
+                                                     pool[:-1], tables).jaxpr)
+    assert "concatenate" in lnames, \
+        "sanity check broken: legacy path should show its concatenate"
+    print("zero-realloc: reserved-scratch jaxpr has no concatenate/pad")
+
+
+if __name__ == "__main__":
+    check_parity()
+    check_no_pool_copy()
+    print("check_kernel_parity: OK")
+    sys.exit(0)

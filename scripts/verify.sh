@@ -8,6 +8,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
+echo "== kernel parity: fused selective-copy vs oracle (interpret mode) =="
+python scripts/check_kernel_parity.py
+
 echo "== smoke: benchmarks/run.py --smoke =="
 python -m benchmarks.run --smoke
 

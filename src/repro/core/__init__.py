@@ -47,22 +47,28 @@ from repro.core.parser import (
     build_message,
     kmp_find,
 )
-from repro.core.runtime import ChannelStats, ProxyChannel, ProxyRuntime
+from repro.core.runtime import (
+    ChannelStats,
+    LatencyHistogram,
+    ProxyChannel,
+    ProxyRuntime,
+)
 from repro.core.socket import Events, LibraSocket
-from repro.core.stack import LibraStack
+from repro.core.stack import SEND_EAGAIN, SEND_OK, LibraStack
 from repro.core.state_machine import RxStateMachine, St, TxStateMachine
-from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.stream import Connection, CopyCounters, RxRing, TokenPool
 from repro.core.vpi import VPI_BYTES, VpiEntry, VpiRegistry
 
 __all__ = [
     # facade
     "LibraStack", "LibraSocket", "Events",
-    "ProxyRuntime", "ProxyChannel", "ChannelStats",
+    "ProxyRuntime", "ProxyChannel", "ChannelStats", "LatencyHistogram",
+    "SEND_OK", "SEND_EAGAIN",
     # mechanism
     "AnchorPool", "PageRef", "PoolExhausted",
     "VpiRegistry", "VpiEntry", "VPI_BYTES",
     "RxStateMachine", "TxStateMachine", "St",
-    "Connection", "TokenPool", "CopyCounters",
+    "Connection", "TokenPool", "CopyCounters", "RxRing",
     # policy
     "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",

@@ -75,6 +75,19 @@ class AnchorPool:
         return self.n_shards * self.pages_per_shard
 
     @property
+    def scratch_page(self) -> int:
+        """Flat index of the scratch row reserved at allocation time — the
+        dummy DMA target the fused selective-copy kernel routes invalid
+        table entries to. Lives one row past the allocatable pages (the
+        freelists never hand it out), so the device pool needs no per-call
+        extension/copy."""
+        return self.total_pages
+
+    def flat_pid(self, pg: "PageRef") -> int:
+        """Flat [0, total_pages) row index of a page (device table entry)."""
+        return pg.shard * self.pages_per_shard + pg.local_pid
+
+    @property
     def free_pages(self) -> int:
         return sum(len(f) for f in self._free)
 

@@ -42,11 +42,15 @@ def libra_send(
     counters: CopyCounters,
     send_budget: Optional[int] = None,
     parsed=None,
+    payload_prefetched: Optional[np.ndarray] = None,
 ) -> int:
     """Transmit the proxy's outgoing buffer [new_metadata..., VPI] on
     ``dst_conn``. Returns the number of *logical* bytes accepted (like a
     non-blocking send). ``send_budget`` models a constrained send buffer;
-    ``parsed`` reuses a ParseResult already computed for ``buf``.
+    ``parsed`` reuses a ParseResult already computed for ``buf``;
+    ``payload_prefetched`` hands in this message's anchored payload when a
+    batched forward already gathered it (one fused read for the round) —
+    it MUST be the exact ``read_payload`` result for the embedded VPI.
     """
     sm = dst_conn.tx_machine
     decision = sm.pre_send(buf, _extract_vpi, parsed=parsed)
@@ -85,7 +89,8 @@ def libra_send(
             counters.zero_copied += entry.payload_len
             # zero-copy "transmission": the NIC consumes anchored pages in
             # place; the composed frame stays staged across partial sends
-            payload = pool.read_payload(owned, entry.payload_len)
+            payload = (payload_prefetched if payload_prefetched is not None
+                       else pool.read_payload(owned, entry.payload_len))
             sm.staged_out = np.concatenate([meta, payload])
     out = sm.staged_out
 

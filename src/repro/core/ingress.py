@@ -47,7 +47,7 @@ def libra_recv(
     drain = conn.rx_drain_remaining
     if drain > 0:
         n = min(drain, conn.rx_available(), buf_len)
-        out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
+        out = conn.rx_peek(n).copy()
         conn.rx_advance(n)
         counters.full_copied += n
         conn.rx_drain_remaining = drain - n
@@ -79,7 +79,7 @@ def libra_recv(
 
     if decision.state == St.DEFAULT:
         n = min(decision.full_copy, conn.rx_available(), buf_len)
-        out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
+        out = conn.rx_peek(n).copy()
         conn.rx_advance(n)
         counters.full_copied += n
         sm.reset()
@@ -87,19 +87,19 @@ def libra_recv(
 
     if decision.state == St.METADATA_PARSED:
         n = decision.copy_meta
-        out = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + n].copy()
+        out = conn.rx_peek(n).copy()
         conn.rx_advance(n)
         counters.meta_copied += n
         return out, n
 
     if decision.state == St.WRITE_VPI:
-        meta = conn.rx_queue[
-            conn.rx_read_off : conn.rx_read_off + decision.copy_meta
-        ].copy()
+        meta = conn.rx_peek(decision.copy_meta).copy()
         conn.rx_advance(decision.copy_meta)
         counters.meta_copied += len(meta)
         payload_len = sm.payload_len
-        payload = conn.rx_queue[conn.rx_read_off : conn.rx_read_off + payload_len]
+        # zero-copy window over the resident payload (view stays valid
+        # until the rx_advance below)
+        payload = conn.rx_peek(payload_len)
         try:
             pages = pool.alloc.alloc_sequence(payload_len)
         except PoolExhausted:

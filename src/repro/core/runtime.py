@@ -13,25 +13,86 @@ Model:
   socket, optionally rewrite the metadata (L7 policy), route to one of the
   backend sockets, ``forward`` with this channel's send budget. A
   budget-truncated message stays "in flight" and is continued on later
-  quanta before new data is read (TCP ordering per flow).
+  quanta before new data is read (TCP ordering per flow). Channels apply
+  pool **backpressure**: when the stack is above its watermark, a channel
+  whose next frame would anchor pauses instead of overflowing into the
+  §A.1 drain path (disable per channel with ``backpressure=False``).
 * :class:`ProxyRuntime` — readiness-set scheduler. ``step()`` is one
   scheduling round: poll all channels, service the ready ones (round-robin
   rotation or strict priority order), and advance the stack clock every
-  ``tick_every`` rounds. ``run()`` loops until idle.
+  ``tick_every`` rounds. With ``batched=True`` a round gathers every ready
+  channel's admissible frame into ONE ``LibraStack.recv_batch`` /
+  ``forward_batch`` pair (a single data-plane pass for the whole round);
+  channels in edge states (mid-message, drain, held/in-flight sends, pool
+  exhaustion, unparseable frames) transparently fall back to their scalar
+  quantum, so semantics and counters match the scalar scheduler exactly.
+  ``run()`` loops until idle.
+
+Every channel records a per-quantum latency histogram
+(:class:`LatencyHistogram`, log₂ buckets) — ``ProxyRuntime.latency_summary``
+reports p50/p99 per channel; batched rounds charge each participant the
+amortized share of the round's data-plane time.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Union
+import math
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.socket import Events, LibraSocket
-from repro.core.stack import LibraStack
+from repro.core.stack import SEND_EAGAIN, LibraStack
 from repro.core.state_machine import St
 
 Router = Callable[[np.ndarray, int], LibraSocket]
 Rewrite = Callable[[np.ndarray, int], np.ndarray]
+
+#: sentinel: a quantum consumed input but produced nothing to transmit
+_IDLE = object()
+
+
+class LatencyHistogram:
+    """Log₂-bucketed latency histogram (quantum-scale timings).
+
+    Bucket k covers [lo·2ᵏ, lo·2ᵏ⁺¹); percentiles report the geometric
+    midpoint of the covering bucket — cheap, allocation-free telemetry
+    (no per-sample storage)."""
+
+    __slots__ = ("lo", "counts", "count", "total")
+
+    def __init__(self, lo: float = 1e-7, n_buckets: int = 40):
+        self.lo = lo
+        self.counts = [0] * n_buckets
+        self.count = 0
+        self.total = 0.0
+
+    def record(self, seconds: float) -> None:
+        b = 0 if seconds <= self.lo else int(math.log2(seconds / self.lo)) + 1
+        self.counts[min(max(b, 0), len(self.counts) - 1)] += 1
+        self.count += 1
+        self.total += seconds
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 1] -> seconds (0.0 when empty)."""
+        if self.count == 0:
+            return 0.0
+        rank = q * self.count
+        seen = 0
+        for b, c in enumerate(self.counts):
+            seen += c
+            if seen >= rank:
+                if b == 0:
+                    return self.lo
+                return self.lo * (2.0 ** (b - 1)) * math.sqrt(2.0)
+        return self.lo * 2.0 ** (len(self.counts) - 1)
+
+    def summary(self) -> Dict[str, float]:
+        return {"count": self.count,
+                "mean": self.total / max(self.count, 1),
+                "p50": self.percentile(0.50),
+                "p99": self.percentile(0.99)}
 
 
 @dataclasses.dataclass
@@ -44,6 +105,11 @@ class ChannelStats:
     send_calls: int = 0
     partial_sends: int = 0     # sends truncated by the budget
     quanta: int = 0            # scheduling quanta consumed
+    bp_pauses: int = 0         # quanta skipped by pool backpressure
+    # per-quantum wall-clock latency (batched rounds charge the amortized
+    # share of the round's single data-plane pass)
+    latency: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
 
 
 class ProxyChannel:
@@ -56,7 +122,8 @@ class ProxyChannel:
                  recv_buf: int = 1 << 20,
                  budget: Optional[int] = None,
                  priority: int = 0,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None,
+                 backpressure: bool = True):
         self.src = src
         self.dsts: List[LibraSocket] = (
             list(dst) if isinstance(dst, (list, tuple)) else [dst])
@@ -66,6 +133,7 @@ class ProxyChannel:
         self.budget = budget
         self.priority = priority
         self.name = name or f"ch{src.fileno()}"
+        self.backpressure = backpressure
         self.stats = ChannelStats()
         self._inflight: Optional[LibraSocket] = None
         # reassembly of a selective-copy message that needed several recv
@@ -75,8 +143,12 @@ class ProxyChannel:
         # message routed to a backend whose send buffer was busy with
         # another flow's truncated message (EAGAIN): retried next quantum
         self._held: Optional[tuple] = None
+        # set by ready() when backpressure (alone) kept the channel out of
+        # the ready set this round — the scheduler's liveness fallback
+        self._bp_paused = False
 
     def ready(self) -> bool:
+        self._bp_paused = False
         # outbound work (a truncated or held message) outlives the client
         # connection — §A.4 teardown lets the frame finish transmitting
         if self._inflight is not None or self._held is not None:
@@ -90,7 +162,17 @@ class ProxyChannel:
         # L7 policy: wait for a parseable frame rather than forwarding the
         # unframed prefix of a message still arriving (raw unparseable
         # streams — need_more False — still flow through as full copies)
-        return not self.src.needs_more_data()
+        if self.src.needs_more_data():
+            return False
+        # pool backpressure: a frame that would anchor waits while the pool
+        # sits above its watermark — egress quanta drain it — instead of
+        # overflowing into the §A.1 full-copy drain path
+        if self.backpressure and self.src.next_frame_selective() \
+                and self.src.stack.above_watermark():
+            self._bp_paused = True
+            self.stats.bp_pauses += 1
+            return False
+        return True
 
     def _mid_message(self) -> bool:
         """True while the RX machine is inside one selective-copy message
@@ -102,6 +184,13 @@ class ProxyChannel:
 
     def service(self) -> bool:
         """One quantum of work; returns True if progress was made."""
+        t0 = time.perf_counter()
+        try:
+            return self._service()
+        finally:
+            self.stats.latency.record(time.perf_counter() - t0)
+
+    def _service(self) -> bool:
         self.stats.quanta += 1
         if self._inflight is not None:
             return self._continue_send()
@@ -113,27 +202,45 @@ class ProxyChannel:
         self.stats.recv_calls += 1
         if logical == 0 and len(buf) == 0:
             return False
+        intent = self._ingest(buf, logical)
+        if intent is None:
+            return True          # fragment absorbed: progress
+        if intent is _IDLE:
+            return False
+        return self._start_send(*intent)
+
+    def _ingest(self, buf: np.ndarray, logical: int):
+        """Post-recv half of a quantum: reassembly, rewrite, routing.
+        Returns ``(out, dst)`` when a whole message is ready to transmit,
+        ``None`` when a fragment was absorbed, ``_IDLE`` on no progress."""
         if self._mid_message():
             # fragment of one message: reassemble before routing, so the
             # whole message goes to ONE backend in one send
             self._rx_parts.append(buf)
             self._rx_logical += logical
-            return True
+            return None
         if self._rx_parts:
             self._rx_parts.append(buf)
             buf = np.concatenate(self._rx_parts)
             logical += self._rx_logical
             self._rx_parts, self._rx_logical = [], 0
         if logical == 0:
-            return False
+            return _IDLE
         out = self.rewrite(buf, logical) if self.rewrite else buf
         dst = self.router(buf, logical) if self.router else self.dsts[0]
-        return self._start_send(out, dst)
+        return out, dst
 
     def _start_send(self, out, dst: LibraSocket) -> bool:
         try:
             n = self.src.forward(dst, out, budget=self.budget)
         except BlockingIOError:
+            return self._note_send_outcome(dst, 0, out, eagain=True)
+        return self._note_send_outcome(dst, n, out)
+
+    def _note_send_outcome(self, dst: LibraSocket, n: int, out,
+                           eagain: bool = False) -> bool:
+        """Shared bookkeeping for scalar and batched transmits."""
+        if eagain:
             # backend busy with another flow's truncated message: hold the
             # routed message and retry once that send completes
             self._held = (out, dst)
@@ -166,11 +273,18 @@ class ProxyRuntime:
     SCHEDULERS = ("round-robin", "priority")
 
     def __init__(self, stack: LibraStack, *, scheduler: str = "round-robin",
-                 tick_every: int = 16):
+                 tick_every: int = 16, batched: bool = False,
+                 batch_impl: str = "host", batch_tile: int = 64):
         assert scheduler in self.SCHEDULERS, scheduler
         self.stack = stack
         self.scheduler = scheduler
         self.tick_every = tick_every
+        self.batched = batched
+        self.batch_impl = batch_impl   # recv_batch data-plane impl
+        # channels fused per recv/forward pass: one round is processed in
+        # tiles so a tile's anchored pages are transmitted while still
+        # cache-hot (0 = whole round in one pass)
+        self.batch_tile = batch_tile
         self.channels: List[ProxyChannel] = []
         self.rounds = 0
         self._rr = 0
@@ -196,15 +310,107 @@ class ProxyRuntime:
         return ready[k:] + ready[:k]
 
     def step(self) -> int:
-        """One scheduling round: give each ready channel one quantum.
-        Returns the number of channels that made progress."""
-        progressed = 0
-        for ch in self.poll():
-            progressed += bool(ch.service())
+        """One scheduling round: give each ready channel one quantum (with
+        ``batched=True``, one fused recv/forward pass for the whole ready
+        set). Returns the number of channels that made progress."""
+        progressed = (self._step_batched() if self.batched
+                      else self._step_scalar())
+        if progressed == 0:
+            # liveness: if backpressure alone paused the remaining work and
+            # nothing else can free pool pages, admit the paused channels —
+            # worst case they overflow into §A.1 drain, exactly as without
+            # backpressure
+            for ch in self.channels:
+                if ch._bp_paused:
+                    ch._bp_paused = False
+                    progressed += bool(ch.service())
         self.rounds += 1
         self._rr += 1
         if self.tick_every and self.rounds % self.tick_every == 0:
             self.stack.tick()
+        return progressed
+
+    def _step_scalar(self) -> int:
+        progressed = 0
+        for ch in self.poll():
+            progressed += bool(ch.service())
+        return progressed
+
+    def _step_batched(self) -> int:
+        progressed = 0
+        batch: List[ProxyChannel] = []
+        for ch in self.poll():
+            # edge states keep their scalar quantum (continuations, held
+            # messages, reassembly in progress)
+            if ch._inflight is not None or ch._held is not None \
+                    or ch._rx_parts or ch.src.closed:
+                progressed += bool(ch.service())
+            else:
+                batch.append(ch)
+        # one fused recv/forward pass per tile: a tile's anchored pages are
+        # forwarded while still cache-hot instead of after the whole round
+        tile = self.batch_tile if self.batch_tile > 0 else len(batch)
+        for i in range(0, len(batch), max(tile, 1)):
+            progressed += self._service_tile(batch[i : i + tile])
+        return progressed
+
+    def _service_tile(self, batch: List[ProxyChannel]) -> int:
+        if not batch:
+            return 0
+        progressed = 0
+        t0 = time.perf_counter()
+        results = self.stack.recv_batch(
+            [ch.src for ch in batch],
+            {ch.src.fileno(): ch.recv_buf for ch in batch},
+            impl=self.batch_impl)
+        # data-plane time only: scalar fallbacks below record their own
+        # quanta and must not inflate the batched channels' share
+        dp_elapsed = time.perf_counter() - t0
+        sends, senders = [], []
+        n_batched = 0
+        for ch in batch:
+            r = results.get(ch.src.fileno())
+            if r is None:
+                # the batch filled the pool past the watermark before this
+                # channel's turn: pause it (backpressure) instead of letting
+                # the scalar fallback overflow into §A.1 drain
+                if ch.backpressure and self.stack.above_watermark() \
+                        and ch.src.next_frame_selective():
+                    ch._bp_paused = True
+                    ch.stats.bp_pauses += 1
+                    continue
+                # not admissible this round (drain, short/unparseable frame,
+                # exhaustion, tiny recv_buf, ...): scalar fallback quantum
+                progressed += bool(ch.service())
+                continue
+            n_batched += 1
+            ch.stats.quanta += 1
+            ch.stats.recv_calls += 1
+            intent = ch._ingest(*r)
+            if intent is None:
+                progressed += 1          # capped fragment absorbed
+                continue
+            if intent is _IDLE:
+                continue
+            out, dst = intent
+            sends.append((ch.src, dst, out, ch.budget))
+            senders.append(ch)
+        if sends:
+            t1 = time.perf_counter()
+            outcomes = self.stack.forward_batch(sends)
+            dp_elapsed += time.perf_counter() - t1
+            for (ch, (_src, dst, out, _b), (status, n)) in zip(
+                    senders, sends, outcomes):
+                progressed += bool(
+                    ch._note_send_outcome(dst, n, out,
+                                          eagain=(status == SEND_EAGAIN)))
+        if n_batched:
+            # charge each participant its amortized share of the tile's
+            # fused recv/forward passes
+            share = dp_elapsed / n_batched
+            for ch in batch:
+                if results.get(ch.src.fileno()) is not None:
+                    ch.stats.latency.record(share)
         return progressed
 
     def run(self, max_rounds: int = 10 ** 6) -> int:
@@ -232,3 +438,8 @@ class ProxyRuntime:
 
     def logical_bytes(self) -> int:
         return sum(c.stats.logical_bytes for c in self.channels)
+
+    def latency_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-channel quantum latency summary: name -> {count, mean, p50,
+        p99} (seconds)."""
+        return {c.name: c.stats.latency.summary() for c in self.channels}

@@ -75,7 +75,7 @@ class LibraSocket:
         self._conn = Connection(parser, stack.registry, min_payload=min_payload)
         self._pending: Optional[_PendingSend] = None
         self._first_parse = None       # ParseResult handed to the first send
-        self._needs_more_memo = None   # (queue fingerprint, result) cache
+        self._parse_memo = None        # (queue fingerprint, ParseResult)
 
     # -- identity / state ---------------------------------------------------
     def fileno(self) -> int:
@@ -91,11 +91,28 @@ class LibraSocket:
         return self._conn
 
     @property
+    def stack(self):
+        """The owning :class:`~repro.core.stack.LibraStack`."""
+        return self._stack
+
+    @property
     def pending_send(self) -> Optional[_PendingSend]:
         return self._pending
 
     def rx_available(self) -> int:
         return self._conn.rx_available()
+
+    def parse_pending(self):
+        """ParseResult for the current head of the receive queue — a pure
+        function of the queue fingerprint, memoised so idle poll rounds and
+        the batched datapath never rescan the window (KMP for delimiters)."""
+        conn = self._conn
+        key = conn.rx_fingerprint()
+        if self._parse_memo is not None and self._parse_memo[0] == key:
+            return self._parse_memo[1]
+        res = self.parser.parse(conn.rx_window(self.parser.lookahead))
+        self._parse_memo = (key, res)
+        return res
 
     def needs_more_data(self) -> bool:
         """True when the buffered bytes are only the prefix of a message
@@ -109,15 +126,20 @@ class LibraSocket:
             return False
         if conn.rx_machine.state is not St.DEFAULT:
             return False
-        # the answer is a pure function of the queue fingerprint — memoise
-        # so idle poll rounds don't rescan the window (KMP for delimiters)
-        key = (conn.rx_read_off, len(conn.rx_queue))
-        if self._needs_more_memo is not None and self._needs_more_memo[0] == key:
-            return self._needs_more_memo[1]
-        res = self.parser.parse(conn.rx_window(self.parser.lookahead))
-        out = not res.ok and res.need_more
-        self._needs_more_memo = (key, out)
-        return out
+        res = self.parse_pending()
+        return not res.ok and res.need_more
+
+    def next_frame_selective(self) -> bool:
+        """True when the pending frame would take the selective (anchoring)
+        path on recv — the backpressure predicate: pausing such a socket
+        sheds pool load; full-copy frames never touch the pool."""
+        conn = self._conn
+        if conn.closed or conn.rx_available() == 0 or conn.rx_drain_remaining:
+            return False
+        if conn.rx_machine.state is not St.DEFAULT:
+            return False
+        res = self.parse_pending()
+        return res.ok and res.payload_len >= conn.rx_machine.min_payload
 
     def tx_wire(self) -> np.ndarray:
         return self._conn.tx_wire()
@@ -188,7 +210,9 @@ class LibraSocket:
         return len(msg), None, None, res
 
     def _transmit(self, src: Optional["LibraSocket"], buf,
-                  budget: Optional[int]) -> int:
+                  budget: Optional[int],
+                  payload_prefetched: Optional[np.ndarray] = None,
+                  peeked=None) -> int:
         if self._conn.closed:
             raise OSError("send on closed LibraSocket")
         budget = self.send_budget if budget is None else budget
@@ -211,7 +235,10 @@ class LibraSocket:
                 # the compat layer.
                 sm_prev.reset()
             msg = np.asarray(buf, np.int64)
-            meta_len, vpi, entry, parsed = self._peek_message(msg)
+            # ``peeked`` lets the batched forwarder hand in the
+            # _peek_message it already ran for prefetch eligibility
+            meta_len, vpi, entry, parsed = (peeked if peeked is not None
+                                            else self._peek_message(msg))
             src_conn = src._conn if src is not None else None
             if src_conn is None and vpi is not None:
                 owner = self._stack._anchor_owner(vpi)
@@ -240,7 +267,8 @@ class LibraSocket:
         self._first_parse = None
         n = libra_send(p.src_conn, self._conn, chunk, self._stack.pool,
                        self._stack.registry, self._stack.counters,
-                       send_budget=budget, parsed=parsed)
+                       send_budget=budget, parsed=parsed,
+                       payload_prefetched=payload_prefetched)
         p.accepted += n
         if p.accepted >= p.logical:
             self._pending = None

@@ -16,17 +16,36 @@ policies (see :mod:`repro.core.runtime` for the event loop on top).
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple, Union
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from repro.core.anchor_pool import AnchorPool
+import numpy as np
+
+from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
 from repro.core.egress import expire_teardowns
 from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolicy
 from repro.core.socket import Events, LibraSocket
-from repro.core.state_machine import MIN_PAYLOAD
+from repro.core.state_machine import MIN_PAYLOAD, St
 from repro.core.stream import Connection, CopyCounters, TokenPool
 from repro.core.vpi import VpiRegistry
 
 ParserLike = Union[str, ParserPolicy]
+
+#: forward_batch outcome tags
+SEND_OK = "ok"
+SEND_EAGAIN = "eagain"
+
+
+@dataclasses.dataclass
+class _BatchItem:
+    """One admissible message in a batched recv round."""
+    sock: LibraSocket
+    buf_len: int
+    meta_len: int
+    payload_len: int
+    pages: List[PageRef]
+    meta: np.ndarray = None
+    payload: np.ndarray = None   # zero-copy rx window (valid until advance)
 
 
 class LibraStack:
@@ -106,9 +125,213 @@ class LibraStack:
     def utilization(self) -> float:
         return self.alloc.used_fraction
 
+    @property
+    def high_watermark(self) -> float:
+        """§A.1 receive-window watermark (fraction of pool pages in use at
+        which ingress backpressure engages)."""
+        return self.alloc.high_watermark
+
+    @high_watermark.setter
+    def high_watermark(self, frac: float) -> None:
+        self.alloc.high_watermark = frac
+
+    def above_watermark(self) -> bool:
+        """Backpressure signal: the pool is nearly full — pausing selective
+        ingress now avoids overflowing into the §A.1 drain path."""
+        return self.alloc.above_watermark()
+
     def poll(self) -> Dict[int, Events]:
         """Stack-wide readiness snapshot (epoll_wait analogue)."""
         return {fd: s.poll() for fd, s in self.sockets.items()}
+
+    # -- batched datapath ----------------------------------------------------
+    def recv_batch(
+        self,
+        socks: Sequence[LibraSocket],
+        buf_len: Union[int, Dict[int, int]] = 1 << 20,
+        *,
+        impl: str = "host",
+    ) -> Dict[int, Tuple[np.ndarray, int]]:
+        """Batched instrumented recvmsg (§3.3) across many sockets.
+
+        Gathers every socket whose next frame is admissible to the
+        selective path in one shot (RX machine in DEFAULT, parseable frame,
+        whole payload resident, room for metadata + VPI in the buffer, pool
+        pages available), runs the selective-copy data plane ONCE for the
+        whole batch, and scatters the results back through each socket's RX
+        state machine — batched data movement, unchanged per-socket control
+        flow and counters.
+
+        ``impl='host'`` executes the single-pass placement as one fused
+        numpy scatter directly into the pool (allocation-free, exact int64).
+        Any other value is forwarded to :func:`repro.kernels.ops.selective_copy`
+        (``'auto'``/``'ref'``/``'interpret'``/``'pallas'``): the round is
+        flattened into one ``[B, S]`` int32 batch and the fused kernel runs
+        over the pool's reserved scratch row (on TPU the donation keeps the
+        device pool in place; the host repro pays one sync copy-back).
+
+        ``buf_len`` is one size for all sockets or a per-fd mapping.
+        Returns ``{fd: (buffer, logical_len)}`` for the serviced sockets;
+        a socket absent from the result was not batchable this round (mid
+        message, drain mode, unparseable/short frame, buffer too small for
+        metadata + VPI, pool exhausted, ...) and should fall back to scalar
+        ``recv`` — every edge state keeps its §3.3/§A.1 semantics there.
+        """
+        def _bl(sock: LibraSocket) -> int:
+            if isinstance(buf_len, dict):
+                return buf_len.get(sock.fileno(), 1 << 20)
+            return buf_len
+
+        items: List[_BatchItem] = []
+        for sock in socks:
+            conn = sock.connection
+            if conn.closed or conn.rx_drain_remaining > 0:
+                continue
+            sm = conn.rx_machine
+            if sm.state is not St.DEFAULT:
+                continue
+            if conn.rx_available() == 0:
+                continue
+            parsed = sock.parse_pending()
+            if not parsed.ok or parsed.payload_len < sm.min_payload:
+                continue  # full-copy / unparseable: scalar path
+            if conn.rx_available() < parsed.meta_len + parsed.payload_len:
+                continue  # NIC DMA incomplete: never anchor holes
+            bl = _bl(sock)
+            if bl < parsed.meta_len + 1:
+                continue  # cannot reach WRITE_VPI in one evaluation
+            try:
+                pages = self.alloc.alloc_sequence(parsed.payload_len)
+            except PoolExhausted:
+                continue  # §A.1 overflow is the scalar path's business
+            # drive the existing state machine: DEFAULT -> ... -> WRITE_VPI
+            decision = sm.on_recv(conn.rx_window(sm.parser.lookahead), bl,
+                                  parsed=parsed)
+            assert decision.state is St.WRITE_VPI, decision.state
+            items.append(_BatchItem(sock, bl, decision.copy_meta,
+                                    sm.payload_len, pages))
+        if not items:
+            return {}
+
+        # -- selective copy of metadata (host buffers stay int64-exact) -----
+        for it in items:
+            conn = it.sock.connection
+            it.meta = conn.rx_peek(it.meta_len).copy()
+            conn.rx_advance(it.meta_len)
+            self.counters.meta_copied += it.meta_len
+            it.payload = conn.rx_peek(it.payload_len)
+
+        # -- payload anchoring: ONE fused pass for the whole round ----------
+        if impl == "host":
+            self.pool.write_payload_batch(
+                [(it.pages, it.payload) for it in items])
+        else:
+            self._recv_batch_device(items, impl)
+
+        # -- scatter back through per-socket bookkeeping --------------------
+        results: Dict[int, Tuple[np.ndarray, int]] = {}
+        for it in items:
+            conn = it.sock.connection
+            sm = conn.rx_machine
+            self.counters.anchored += it.payload_len
+            self.counters.allocs += 1
+            conn.rx_advance(it.payload_len)
+            vpi = self.registry.register(
+                "token-pool",
+                [(p.shard, p.local_pid, p.base_pos) for p in it.pages],
+                it.payload_len,
+            )
+            conn.anchored[vpi] = (it.pages, it.payload_len)
+            buf = np.concatenate(
+                [it.meta, np.array([VpiRegistry.to_token(vpi)], np.int64)])
+            self.counters.vpi_injected += 1
+            logical = min(it.meta_len + it.payload_len, it.buf_len)
+            sm.on_payload_consumed(logical - it.meta_len)
+            self._note_anchor_owner(it.sock)
+            results[it.sock.fileno()] = (buf, logical)
+        return results
+
+    def _recv_batch_device(self, items: List[_BatchItem], impl: str) -> None:
+        """Flatten the round into one [B, S] batch and run the fused
+        selective-copy kernel once over the pool + reserved scratch row."""
+        from repro.kernels import ops
+
+        page = self.alloc.page_size
+        b = len(items)
+        pps = max(len(it.pages) for it in items)
+        meta_max = max(max(it.meta_len for it in items), 1)
+        s = max(it.meta_len + len(it.pages) * page for it in items)
+        s = max(-(-max(s, meta_max) // page) * page, page)
+        stream = np.zeros((b, s), np.int32)
+        meta_len = np.zeros((b,), np.int32)
+        total_len = np.zeros((b,), np.int32)
+        tables = np.full((b, pps), -1, np.int32)
+        for i, it in enumerate(items):
+            msg = it.meta_len + it.payload_len
+            # int64 host tokens ride the int32 device stream; values must
+            # fit (callers with >31-bit tokens use impl='host')
+            stream[i, : it.meta_len] = it.meta
+            stream[i, it.meta_len : msg] = it.payload
+            meta_len[i] = it.meta_len
+            total_len[i] = msg
+            for j, pg in enumerate(it.pages):
+                tables[i, j] = self.alloc.flat_pid(pg)
+        import jax.numpy as jnp
+
+        pool = self.pool.flat_with_scratch
+        new_meta, new_pool = ops.selective_copy(
+            stream, meta_len, total_len,
+            jnp.asarray(pool.astype(np.int32)), tables,
+            meta_max=meta_max, impl=impl, reserved_scratch=True)
+        del new_meta  # host buffers keep the int64-exact metadata
+        # sync back ONLY the rows this batch anchored: rows untouched by the
+        # kernel keep their int64-exact host content (and the copy stays
+        # O(batch), not O(pool)). On TPU the donation makes this a no-op.
+        touched = np.unique(tables[tables >= 0])
+        pool[touched] = np.asarray(new_pool)[touched]
+
+    def forward_batch(
+        self,
+        sends: Sequence[Tuple[Optional[LibraSocket], LibraSocket,
+                              np.ndarray, Optional[int]]],
+    ) -> List[Tuple[str, int]]:
+        """Batched proxy forwarding: ``sends`` is a list of
+        ``(src_sock, dst_sock, buf, budget)``. The anchored payloads of all
+        FAST_PATH-eligible messages are fetched with ONE fused gather
+        (:meth:`TokenPool.read_payload_batch`) and handed to each socket's
+        normal transmit path, so counters, staging, partial-send resume and
+        cross-datapath cleanup behave exactly as scalar ``forward``.
+
+        Returns one ``(status, accepted)`` per send, in order:
+        ``(SEND_OK, n)`` or ``(SEND_EAGAIN, 0)`` (backend busy with another
+        flow's truncated message — retry next round, as scalar)."""
+        prefetch: List[Optional[np.ndarray]] = [None] * len(sends)
+        peeks: List[Optional[Tuple]] = [None] * len(sends)
+        gather: List[Tuple[int, Tuple]] = []
+        for k, (src, dst, buf, budget) in enumerate(sends):
+            if dst.pending_send is not None or dst.closed:
+                continue
+            peeks[k] = dst._peek_message(np.asarray(buf, np.int64))
+            entry = peeks[k][2]
+            if entry is not None and \
+                    entry.payload_len >= dst.connection.tx_machine.min_payload:
+                gather.append((k, ([PageRef(*pg) for pg in entry.pages],
+                                   entry.payload_len)))
+        if gather:
+            payloads = self.pool.read_payload_batch([g for _, g in gather])
+            for (k, _), pv in zip(gather, payloads):
+                prefetch[k] = pv
+        out: List[Tuple[str, int]] = []
+        for k, (src, dst, buf, budget) in enumerate(sends):
+            try:
+                n = dst._transmit(src, buf, budget,
+                                  payload_prefetched=prefetch[k],
+                                  peeked=peeks[k])
+            except BlockingIOError:
+                out.append((SEND_EAGAIN, 0))
+                continue
+            out.append((SEND_OK, n))
+        return out
 
     # -- facade bookkeeping (called by LibraSocket) --------------------------
     def _note_anchor_owner(self, sock: LibraSocket) -> None:

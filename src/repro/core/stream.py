@@ -5,11 +5,24 @@ expressed over int64 token streams (1 token = 8 bytes, so a VPI occupies
 exactly one stream slot). The serving engine reuses the same machinery with
 KV pages as the anchored payload; this layer anchors raw token payloads so
 the core can be tested and benchmarked in isolation.
+
+Datapath invariants kept allocation-free:
+
+* :class:`RxRing` — the receive queue is an amortized growable ring, not a
+  reallocate-on-every-deliver array: ``push`` appends into spare tail
+  capacity, the dead prefix is reclaimed by sliding (never by reallocating)
+  once it dominates the live region, and ``peek``/``window`` hand out
+  zero-copy views.
+* :class:`TokenPool` — payload placement/readback are single reshaped
+  scatter/gather ops (no per-page Python loop), with batched variants that
+  fuse a whole recv/forward round into one indexed assignment. The pool
+  carries the one scratch row :attr:`AnchorPool.scratch_page` reserves so
+  the fused device kernel needs no per-call pool copy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,35 +32,191 @@ from repro.core.state_machine import RxStateMachine, St, TxStateMachine
 from repro.core.vpi import VpiRegistry
 
 
+class RxRing:
+    """Amortized growable receive ring (the skb queue analogue).
+
+    Tokens live in ``_buf[_head:_tail]``. ``push`` writes into the spare
+    tail; when the tail hits capacity the live region slides to the front
+    (reclaiming the dead prefix) and the buffer only reallocates — by
+    doubling — when the live data itself outgrows it. ``advance`` also
+    compacts once the dead prefix exceeds the live region (proportional
+    policy: no fixed 64Ki threshold, so small-queue workloads never retain
+    dead prefixes indefinitely; tune with ``min_compact``).
+
+    ``peek``/views are zero-copy and remain valid until the next
+    ``push``/``advance`` on this ring (both may slide the buffer).
+    """
+
+    __slots__ = ("_buf", "_head", "_tail", "consumed", "delivered",
+                 "min_compact")
+
+    def __init__(self, capacity: int = 256, min_compact: int = 64):
+        self._buf = np.zeros((max(capacity, 16),), np.int64)
+        self._head = 0
+        self._tail = 0
+        self.consumed = 0    # total tokens ever advanced past (monotonic)
+        self.delivered = 0   # total tokens ever pushed (monotonic)
+        self.min_compact = min_compact
+
+    def __len__(self) -> int:
+        return self._tail - self._head
+
+    @property
+    def capacity(self) -> int:
+        return len(self._buf)
+
+    def _slide(self) -> None:
+        live = self._tail - self._head
+        # numpy slice assignment buffers overlapping copies (>= 1.13)
+        self._buf[:live] = self._buf[self._head : self._tail]
+        self._head, self._tail = 0, live
+
+    def push(self, data: np.ndarray) -> None:
+        n = len(data)
+        if n == 0:
+            return
+        if self._tail + n > len(self._buf):
+            live = self._tail - self._head
+            if live + n > len(self._buf):
+                grown = np.zeros((max(len(self._buf) * 2, live + n),), np.int64)
+                grown[:live] = self._buf[self._head : self._tail]
+                self._buf = grown
+                self._head, self._tail = 0, live
+            else:
+                self._slide()
+        self._buf[self._tail : self._tail + n] = data
+        self._tail += n
+        self.delivered += n
+
+    def peek(self, n: int) -> np.ndarray:
+        """Zero-copy view of up to ``n`` buffered tokens."""
+        return self._buf[self._head : min(self._head + n, self._tail)]
+
+    def advance(self, n: int) -> None:
+        assert self._head + n <= self._tail, (n, len(self))
+        self._head += n
+        self.consumed += n
+        # proportional compaction: reclaim once the dead prefix dominates
+        # the live region (each token moves at most O(1) times, amortized)
+        if self._head >= self.min_compact and self._head > self._tail - self._head:
+            self._slide()
+
+    def fingerprint(self) -> Tuple[int, int]:
+        """Content-stable identity of the unread region (survives slides/
+        reallocations — used to memoise pure functions of the queue)."""
+        return (self.consumed, self.delivered)
+
+
 class TokenPool:
     """Device-side payload pool stand-in: [n_shards * pages_per_shard, page]
     int64 pages. Payload tokens are written once on ingress (DMA analogue)
-    and never moved again."""
+    and never moved again.
+
+    The backing array carries one extra row — the scratch page the fused
+    selective-copy kernel routes dummy DMAs to (``alloc.scratch_page``) —
+    so device dispatch never has to extend the pool per call."""
 
     def __init__(self, alloc: AnchorPool):
         self.alloc = alloc
-        self.data = np.zeros((alloc.n_shards, alloc.pages_per_shard,
-                              alloc.page_size), np.int64)
+        total = alloc.n_shards * alloc.pages_per_shard
+        self._flat = np.zeros((total + 1, alloc.page_size), np.int64)
+        # real pages view: writes through to the same storage
+        self.data = self._flat[:total].reshape(
+            alloc.n_shards, alloc.pages_per_shard, alloc.page_size)
+
+    @property
+    def flat_with_scratch(self) -> np.ndarray:
+        """[total_pages + 1, page] flat view; row ``alloc.scratch_page`` is
+        the reserved kernel scratch row (contents undefined)."""
+        return self._flat
+
+    def _page_coords(self, pages: Sequence[PageRef], length: int,
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """(dest flat indices, source payload positions) for every in-range
+        token of ``pages`` — one vectorized index computation, no per-page
+        loop on the data itself."""
+        ps = self.alloc.page_size
+        pps = self.alloc.pages_per_shard
+        coords = np.array([(pg.shard * pps + pg.local_pid, pg.base_pos)
+                           for pg in pages], np.int64).reshape(-1, 2)
+        off = np.arange(ps)
+        src = coords[:, 1:] + off[None, :]            # [n_pages, ps]
+        mask = src < length
+        dest = coords[:, :1] * ps + off[None, :]
+        return dest[mask], src[mask]
 
     def write_payload(self, pages: List[PageRef], payload: np.ndarray) -> None:
-        ps = self.alloc.page_size
-        for pg in pages:
-            lo = pg.base_pos
-            hi = min(lo + ps, len(payload))
-            if lo >= len(payload):
-                break
-            self.data[pg.shard, pg.local_pid, : hi - lo] = payload[lo:hi]
+        n = len(payload)
+        if n == 0 or not pages:
+            return
+        dest, src = self._page_coords(pages, n)
+        self._flat.reshape(-1)[dest] = np.asarray(payload)[src]
 
     def read_payload(self, pages: List[PageRef], length: int) -> np.ndarray:
-        ps = self.alloc.page_size
         out = np.zeros((length,), np.int64)
-        for pg in pages:
-            lo = pg.base_pos
-            hi = min(lo + ps, length)
-            if lo >= length:
-                break
-            out[lo:hi] = self.data[pg.shard, pg.local_pid, : hi - lo]
+        if length and pages:
+            dest, src = self._page_coords(pages, length)
+            out[src] = self._flat.reshape(-1)[dest]
         return out
+
+    # -- batched data plane (one fused pass per scheduling round) -----------
+
+    # messages fused per scatter/gather: big enough to amortize dispatch,
+    # small enough that the index temporaries stay cache-resident
+    BATCH_TILE = 64
+
+    def _batch_coords(self, seqs: Sequence[Tuple[Sequence[PageRef], int]],
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """(dest flat pool indices, positions in the concatenated payload
+        stream) for every in-range token of a batch — one pass over the
+        page lists, then pure vectorized (int32) indexing."""
+        ps = self.alloc.page_size
+        pps = self.alloc.pages_per_shard
+        lens = np.array([ln for _, ln in seqs], np.int32)
+        offs = np.zeros((len(seqs),), np.int32)
+        np.cumsum(lens[:-1], out=offs[1:])
+        # one flat triple list over every page of the batch
+        triples = np.array(
+            [(pg.shard * pps + pg.local_pid, pg.base_pos, k)
+             for k, (pages, _) in enumerate(seqs) for pg in pages],
+            np.int32).reshape(-1, 3)
+        rows, base, owner = triples[:, 0], triples[:, 1], triples[:, 2]
+        off = np.arange(ps, dtype=np.int32)
+        rel = base[:, None] + off[None, :]             # [n_pages, ps]
+        mask = rel < lens[owner][:, None]
+        dest = (rows[:, None] * ps + off[None, :])[mask]
+        pos = (rel + offs[owner][:, None])[mask]
+        return dest, pos
+
+    def write_payload_batch(
+        self, seqs: Sequence[Tuple[Sequence[PageRef], np.ndarray]]) -> None:
+        """Anchor a whole batch of payloads with one flattened scatter per
+        cache-sized tile — the host mirror of the fused kernel's
+        single-pass payload placement."""
+        seqs = [(pages, p) for pages, p in seqs if len(p) and pages]
+        flat = self._flat.reshape(-1)
+        for i in range(0, len(seqs), self.BATCH_TILE):
+            tile = seqs[i : i + self.BATCH_TILE]
+            dest, pos = self._batch_coords(
+                [(pages, len(p)) for pages, p in tile])
+            cat = np.concatenate([p for _, p in tile])
+            flat[dest] = cat[pos]
+
+    def read_payload_batch(
+        self, seqs: Sequence[Tuple[Sequence[PageRef], int]]) -> List[np.ndarray]:
+        """One fused gather per cache-sized tile of anchored payloads;
+        returns one array per (pages, length) request."""
+        flat = self._flat.reshape(-1)
+        outs: List[np.ndarray] = []
+        for i in range(0, len(seqs), self.BATCH_TILE):
+            tile = seqs[i : i + self.BATCH_TILE]
+            lens = [ln for _, ln in tile]
+            out = np.zeros((sum(lens),), np.int64)
+            if any(ln and pages for pages, ln in tile):
+                dest, pos = self._batch_coords(tile)
+                out[pos] = flat[dest]
+            outs.extend(np.split(out, np.cumsum(lens)[:-1]))
+        return outs
 
 
 @dataclasses.dataclass
@@ -63,6 +232,10 @@ class CopyCounters:
     def total_user_copies(self) -> int:
         return self.meta_copied + self.full_copied
 
+    def snapshot(self) -> Tuple[int, ...]:
+        return (self.meta_copied, self.full_copied, self.anchored,
+                self.zero_copied, self.vpi_injected, self.allocs)
+
 
 class Connection:
     """One proxied connection pair (client<->proxy or proxy<->backend)."""
@@ -70,11 +243,12 @@ class Connection:
     _next_id = 0
 
     def __init__(self, parser: ParserPolicy, registry: VpiRegistry,
-                 min_payload: int = 1):
+                 min_payload: int = 1, rx_compact: Optional[int] = None):
         Connection._next_id += 1
         self.conn_id = Connection._next_id
-        self.rx_queue = np.zeros((0,), np.int64)  # socket receive queue
-        self.rx_read_off = 0
+        # socket receive queue: amortized ring, zero-copy windows;
+        # ``rx_compact`` tunes the proportional dead-prefix reclamation
+        self.rx_ring = RxRing(min_compact=rx_compact if rx_compact else 64)
         self.rx_machine = RxStateMachine(parser, min_payload=min_payload)
         self.tx_machine = TxStateMachine(parser, registry.resolve,
                                          min_payload=min_payload,
@@ -89,20 +263,25 @@ class Connection:
     # -- socket plumbing -----------------------------------------------------
     def deliver(self, data: np.ndarray) -> None:
         """Network delivers bytes into the receive queue (NIC DMA analogue)."""
-        self.rx_queue = np.concatenate([self.rx_queue, data.astype(np.int64)])
+        self.rx_ring.push(np.asarray(data, np.int64))
 
     def rx_window(self, lookahead: int) -> np.ndarray:
-        return self.rx_queue[self.rx_read_off : self.rx_read_off + lookahead]
+        """Zero-copy parser window (valid until the next deliver/advance)."""
+        return self.rx_ring.peek(lookahead)
+
+    def rx_peek(self, n: int) -> np.ndarray:
+        """Zero-copy view of up to ``n`` unread tokens."""
+        return self.rx_ring.peek(n)
 
     def rx_advance(self, n: int) -> None:
-        self.rx_read_off += n
-        # periodically compact the queue (kernel would free skbs)
-        if self.rx_read_off > 65536:
-            self.rx_queue = self.rx_queue[self.rx_read_off :]
-            self.rx_read_off = 0
+        self.rx_ring.advance(n)
 
     def rx_available(self) -> int:
-        return len(self.rx_queue) - self.rx_read_off
+        return len(self.rx_ring)
+
+    def rx_fingerprint(self) -> Tuple[int, int]:
+        """Content-stable queue identity (for parse memoisation)."""
+        return self.rx_ring.fingerprint()
 
     def tx_wire(self) -> np.ndarray:
         """Everything transmitted on this connection, concatenated — the

@@ -51,13 +51,18 @@ def paged_attention(q, pool, tables, page_pos, seq_lens, *, window=0,
 
 
 def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
-                   impl="auto"):
+                   impl="auto", reserved_scratch=False):
+    """``reserved_scratch=True`` marks the pool's last row as the scratch
+    page :class:`AnchorPool` reserved at allocation time — the fused kernel
+    then runs with zero pool-sized copies (tables must never reference it).
+    The oracle needs no flag: it never touches a row tables don't name."""
     impl = _resolve(impl)
     if impl == "ref":
         return _ref.selective_copy_ref(stream, meta_len, total_len, pool,
                                        tables, meta_max=meta_max)
     return _selcopy_pallas(stream, meta_len, total_len, pool, tables,
-                           meta_max=meta_max, interpret=(impl == "interpret"))
+                           meta_max=meta_max, interpret=(impl == "interpret"),
+                           reserved_scratch=reserved_scratch)
 
 
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):

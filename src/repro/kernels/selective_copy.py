@@ -1,6 +1,8 @@
 """Selective-copy ingress Pallas TPU kernel (RX-Prog data plane).
 
-One kernel performs both halves of the paper's ingress action:
+One **fused** kernel performs both halves of the paper's ingress action in a
+single pass over the stream:
+
   * **selective copy** — the metadata prefix (boundary supplied by the
     parser policy, scalar-prefetched) is compacted into a small [B, M]
     buffer (the only bytes that cross to the control plane);
@@ -9,10 +11,21 @@ One kernel performs both halves of the paper's ingress action:
     index is known before the DMA issues (SMEM metadata), so the payload is
     written exactly once and never touched again.
 
-Pool updates are in-place via input_output_aliasing (the anchored payload
-is donated, like the kernel socket buffer it models).
+The grid is flattened to ``(B, 1 + pps)``: step ``j == 0`` of each row
+writes the metadata block, steps ``j >= 1`` anchor payload page ``j - 1``.
+The stream block index depends only on ``b``, so each row is fetched into
+VMEM once and shared by its metadata and payload steps.
 
-Layout: stream [B, S] int32; pool [P, page] int32; tables [B, pps].
+Pool updates are in-place via input_output_aliasing (the anchored payload
+is donated, like the kernel socket buffer it models). Invalid table
+entries (-1) and the metadata step are routed to a *scratch page row*;
+with ``reserved_scratch=True`` that row is the one :class:`AnchorPool`
+reserves inside the pool at allocation time, so the hot path performs **no
+pool-sized copy at all** (no ``concatenate``; the donation stays a true
+in-place update). The legacy mode (``reserved_scratch=False``) appends a
+dummy row per call for callers that still hold a scratch-less pool.
+
+Layout: stream [B, S] int32; pool [P(+1), page] int32; tables [B, pps].
 """
 from __future__ import annotations
 
@@ -24,85 +37,98 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _meta_kernel(mlen_ref, tlen_ref, stream_ref, meta_ref, *, meta_max: int):
+def _fused_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, pool_in_ref,
+                  meta_ref, pool_ref, *, page: int, s: int, meta_max: int):
     b = pl.program_id(0)
-    mlen = mlen_ref[b]
-    idx = jax.lax.broadcasted_iota(jnp.int32, (1, meta_max), 1)
-    window = stream_ref[0, :meta_max]
-    meta_ref[0, :] = jnp.where(idx[0] < mlen, window, 0)
-
-
-def _payload_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, pool_in_ref,
-                    pool_ref, *, page: int, s: int):
-    b = pl.program_id(0)
-    j = pl.program_id(1)
+    j = pl.program_id(1)   # 0 = metadata step; j >= 1 anchors payload page j-1
     mlen = mlen_ref[b]
     tlen = tlen_ref[b]
-    pid = tables_ref[b, j]
-    start = jnp.minimum(mlen + j * page, s - page)  # in-bounds (caller pads S)
+
+    @pl.when(j == 0)
+    def _meta():
+        idx = jax.lax.broadcasted_iota(jnp.int32, (1, meta_max), 1)
+        window = stream_ref[0, :meta_max]
+        meta_ref[0, :] = jnp.where(idx[0] < mlen, window, 0)
+
+    # payload step: j == 0 is aimed at the scratch row by the index map and
+    # must pass the block through untouched (valid is forced False below)
+    jj = jnp.maximum(j - 1, 0)
+    pid = tables_ref[b, jj]
+    start = jnp.minimum(mlen + jj * page, s - page)  # in-bounds (caller pads S)
     # row index as a size-1 dslice: older pallas interpret-mode discharge
     # rules reject plain-int indices mixed with dynamic slices
     toks = pl.load(stream_ref, (pl.dslice(0, 1), pl.dslice(start, page)))[0]
-    rel = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
-    valid = (pid >= 0) & (rel + mlen < tlen)
+    rel = jj * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = (j > 0) & (pid >= 0) & (rel + mlen < tlen)
     # always write the block: invalid lanes / skipped pages pass the original
-    # page content through (the out block is revisited via the clamped index)
+    # page content through (the scratch block is revisited via the routed index)
     cur = pool_in_ref[0, :]
     pool_ref[0, :] = jnp.where(valid, toks, cur)
 
 
-@functools.partial(jax.jit, static_argnames=("meta_max", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("meta_max", "interpret", "reserved_scratch"))
 def selective_copy(
     stream: jax.Array,    # [B, S] int32
     meta_len: jax.Array,  # [B] int32
     total_len: jax.Array, # [B] int32
-    pool: jax.Array,      # [P, page] int32 (donated)
+    pool: jax.Array,      # [P, page] int32 (donated); [P+1, page] w/ scratch
     tables: jax.Array,    # [B, pps] int32
     *,
     meta_max: int,
     interpret: bool = False,
+    reserved_scratch: bool = False,
 ):
     """Returns (meta_buf [B, meta_max], new_pool). Matches
-    kernels.ref.selective_copy_ref."""
+    kernels.ref.selective_copy_ref.
+
+    With ``reserved_scratch=True`` the pool's LAST row is the scratch page
+    reserved by :attr:`AnchorPool.scratch_page` at allocation time: nothing
+    is concatenated, the donation is honoured in place, and ``new_pool``
+    keeps the full (scratch-inclusive) shape. Table entries must never
+    reference the scratch row (the allocator never hands it out)."""
     b, s = stream.shape
-    p_, page = pool.shape
+    page = pool.shape[1]
     pps = tables.shape[1]
     assert s % page == 0, (s, page)
 
-    meta = pl.pallas_call(
-        functools.partial(_meta_kernel, meta_max=meta_max),
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
-            grid=(b,),
-            in_specs=[pl.BlockSpec((1, s), lambda b_, ml, tl: (b_, 0))],
-            out_specs=pl.BlockSpec((1, meta_max), lambda b_, ml, tl: (b_, 0)),
-        ),
-        out_shape=jax.ShapeDtypeStruct((b, meta_max), stream.dtype),
-        interpret=interpret,
-    )(meta_len, total_len, stream)
+    if reserved_scratch:
+        pool_ext = pool                     # last row IS the reserved scratch
+    else:
+        # legacy callers hold a scratch-less pool: append a dummy row (one
+        # pool-sized copy — the batched datapath never takes this branch)
+        pool_ext = jnp.concatenate(
+            [pool, jnp.zeros((1, page), pool.dtype)], axis=0)
+    p_ext = pool_ext.shape[0]
+    scratch = p_ext - 1
 
-    # invalid table entries (-1) are routed to a dummy page row so no real
-    # page is ever revisited by a non-owner grid step
-    pool_ext = jnp.concatenate(
-        [pool, jnp.zeros((1, page), pool.dtype)], axis=0)
-    new_pool = pl.pallas_call(
-        functools.partial(_payload_kernel, page=page, s=s),
+    def _pool_index(b_, j, ml, tl, tbl):
+        # invalid table entries (-1) and the metadata step are routed to the
+        # scratch row so no real page is ever revisited by a non-owner step
+        pid = tbl[b_, jnp.maximum(j - 1, 0)]
+        return (jnp.where((j == 0) | (pid < 0), scratch, pid), 0)
+
+    meta, new_pool = pl.pallas_call(
+        functools.partial(_fused_kernel, page=page, s=s, meta_max=meta_max),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
-            grid=(b, pps),
+            grid=(b, 1 + pps),
             in_specs=[
                 pl.BlockSpec((1, s), lambda b_, j, ml, tl, tbl: (b_, 0)),
-                pl.BlockSpec((1, page),
-                             lambda b_, j, ml, tl, tbl: (
-                                 jnp.where(tbl[b_, j] < 0, p_, tbl[b_, j]), 0)),
+                pl.BlockSpec((1, page), _pool_index),
             ],
-            out_specs=pl.BlockSpec((1, page),
-                                   lambda b_, j, ml, tl, tbl: (
-                                       jnp.where(tbl[b_, j] < 0, p_,
-                                                 tbl[b_, j]), 0)),
+            out_specs=[
+                pl.BlockSpec((1, meta_max), lambda b_, j, ml, tl, tbl: (b_, 0)),
+                pl.BlockSpec((1, page), _pool_index),
+            ],
         ),
-        out_shape=jax.ShapeDtypeStruct((p_ + 1, page), pool.dtype),
-        input_output_aliases={4: 0},  # pool donated -> in-place anchoring
+        out_shape=[
+            jax.ShapeDtypeStruct((b, meta_max), stream.dtype),
+            jax.ShapeDtypeStruct((p_ext, page), pool.dtype),
+        ],
+        input_output_aliases={4: 1},  # pool donated -> in-place anchoring
         interpret=interpret,
     )(meta_len, total_len, tables, stream, pool_ext)
-    return meta, new_pool[:p_]
+    if reserved_scratch:
+        return meta, new_pool
+    return meta, new_pool[: p_ext - 1]

@@ -1,0 +1,57 @@
+"""Shared helpers for the selective-copy kernel gates.
+
+Used by both tests/test_kernels.py and scripts/check_kernel_parity.py so
+the regression test and the CI gate assert the SAME property with the same
+machinery (case shapes, and the jaxpr walk that proves the reserved-scratch
+hot path performs no pool-sized copy).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+#: primitives that would betray a pool-sized copy on the hot path
+POOL_COPY_PRIMS = ("concatenate", "pad")
+
+
+def selcopy_case(rng: np.random.Generator, b: int = 2, page: int = 8,
+                 pps: int = 4, meta_max: int = 16) -> Tuple:
+    """(stream, meta_len, total_len, pool_with_scratch, tables) with random
+    parse boundaries; the pool's LAST row is the reserved scratch page
+    (slice it off for legacy-mode calls)."""
+    s = meta_max + pps * page
+    p_total = b * pps + 2
+    stream = jnp.array(rng.integers(1, 1000, (b, s)), jnp.int32)
+    meta_len, total_len = [], []
+    tables = np.full((b, pps), -1, np.int32)
+    ctr = 0
+    for i in range(b):
+        ml = int(rng.integers(0, meta_max + 1))
+        pl = int(rng.integers(0, pps * page + 1))
+        meta_len.append(ml)
+        total_len.append(ml + pl)
+        for j in range(-(-pl // page)):
+            tables[i, j] = ctr
+            ctr += 1
+    pool = jnp.array(rng.integers(0, 5, (p_total + 1, page)), jnp.int32)
+    return (stream, jnp.array(meta_len, jnp.int32),
+            jnp.array(total_len, jnp.int32), pool, jnp.array(tables))
+
+
+def jaxpr_primitives(jaxpr) -> List[str]:
+    """All primitive names in a jaxpr, recursing through call/closed-call
+    params (pjit bodies etc.)."""
+    acc: List[str] = []
+
+    def walk(j):
+        for eqn in j.eqns:
+            acc.append(eqn.primitive.name)
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
+
+    walk(jaxpr)
+    return acc

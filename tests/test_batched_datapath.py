@@ -1,0 +1,469 @@
+"""Batched zero-realloc datapath: ring-buffer RX queues, fused batch
+scatter/gather, stack-wide recv_batch/forward_batch, batched ProxyRuntime
+rounds (scalar-parity, exhaustion/teardown interleaving), and pool
+backpressure."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AnchorPool,
+    LibraStack,
+    ProxyRuntime,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+)
+from repro.core.runtime import LatencyHistogram
+from repro.core.stream import RxRing, TokenPool
+
+RNG = np.random.default_rng(23)
+
+BUILDERS = {
+    "length-prefixed": build_message,
+    "delimiter": build_delimited_message,
+    "chunked": lambda m, p: build_chunked_message(
+        [p[i : i + 24] for i in range(0, len(p), 24)]),
+}
+
+
+def _stack(**kw):
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("pages_per_shard", 128)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("secret", b"bd")
+    return LibraStack(**kw)
+
+
+def _load(stack, rt, *, n_chans=6, n_msgs=4, payload=72, meta=6, seed=5,
+          protos=("length-prefixed", "delimiter", "chunked"), **chan_kw):
+    dsts = []
+    rng = np.random.default_rng(seed)
+    for i in range(n_chans):
+        proto = protos[i % len(protos)]
+        src, dst = stack.socket_pair(proto)
+        rt.channel(src, dst, name=f"{proto}-{i}", **chan_kw)
+        dsts.append(dst)
+        for _ in range(n_msgs):
+            src.deliver(BUILDERS[proto](rng.integers(100, 200, meta),
+                                        rng.integers(1000, 2000, payload)))
+    return dsts
+
+
+# ---------------------------------------------------------------------------
+# RxRing
+# ---------------------------------------------------------------------------
+
+def test_rx_ring_fifo_and_zero_copy_views():
+    r = RxRing(capacity=16)
+    r.push(np.arange(10))
+    assert len(r) == 10
+    v = r.peek(4)
+    assert v.base is not None           # a view, not a copy
+    assert np.array_equal(v, [0, 1, 2, 3])
+    r.advance(4)
+    assert np.array_equal(r.peek(100), np.arange(4, 10))
+    r.push(np.arange(100, 140))         # forces growth, preserves order
+    assert np.array_equal(r.peek(1000),
+                          np.concatenate([np.arange(4, 10), np.arange(100, 140)]))
+    assert r.fingerprint() == (4, 50)
+
+
+def test_rx_ring_small_queue_does_not_retain_dead_prefix():
+    """Regression for the hardcoded 65536 compaction threshold: a workload
+    of small messages must keep the buffer bounded instead of retaining an
+    ever-growing dead prefix."""
+    r = RxRing(capacity=16, min_compact=8)
+    for i in range(2000):
+        r.push(np.full(8, i))
+        r.advance(8)
+    assert len(r) == 0
+    assert r.capacity <= 64             # stayed small: dead prefix reclaimed
+    assert r.fingerprint() == (16000, 16000)
+
+
+def test_rx_ring_capacity_tracks_live_region_not_history():
+    r = RxRing(capacity=16)
+    for i in range(100):
+        r.push(RNG.integers(0, 9, 32))
+        r.advance(32)
+    assert r.capacity <= 256
+    # live data still correct after many slides
+    r.push(np.arange(7))
+    assert np.array_equal(r.peek(7), np.arange(7))
+
+
+# ---------------------------------------------------------------------------
+# TokenPool vectorized + batched scatter/gather
+# ---------------------------------------------------------------------------
+
+def _loop_write(pool, pages, payload):
+    """The original per-page loop semantics (oracle for the vector path)."""
+    ps = pool.alloc.page_size
+    for pg in pages:
+        lo = pg.base_pos
+        hi = min(lo + ps, len(payload))
+        if lo >= len(payload):
+            break
+        pool.data[pg.shard, pg.local_pid, : hi - lo] = payload[lo:hi]
+
+
+def test_tokenpool_vectorized_matches_loop_semantics():
+    alloc = AnchorPool(2, 8, 8)
+    a, b = TokenPool(alloc), TokenPool(alloc)
+    for ln in (1, 7, 8, 9, 20, 24):
+        pages = alloc.alloc_sequence(ln)
+        payload = RNG.integers(0, 1000, ln)
+        a.write_payload(pages, payload)
+        _loop_write(b, pages, payload)
+        assert np.array_equal(a.data, b.data), ln
+        assert np.array_equal(a.read_payload(pages, ln), payload)
+        alloc.free_pages_list(pages)
+
+
+def test_tokenpool_batched_roundtrip_matches_scalar():
+    alloc = AnchorPool(4, 64, 16)
+    pool = TokenPool(alloc)
+    seqs, payloads = [], []
+    for ln in (5, 16, 33, 100, 1, 64):
+        pages = alloc.alloc_sequence(ln)
+        payloads.append(RNG.integers(0, 1000, ln))
+        seqs.append((pages, payloads[-1]))
+    pool.write_payload_batch(seqs)
+    # batched write == per-message writes
+    pool2 = TokenPool(alloc)
+    for (pages, p) in seqs:
+        pool2.write_payload(pages, p)
+    assert np.array_equal(pool.data, pool2.data)
+    # batched read == per-message reads
+    got = pool.read_payload_batch([(pg, len(p)) for pg, p in seqs])
+    for g, p in zip(got, payloads):
+        assert np.array_equal(g, p)
+
+
+def test_tokenpool_batched_tiles_large_batches():
+    alloc = AnchorPool(4, 256, 8)
+    pool = TokenPool(alloc)
+    n = TokenPool.BATCH_TILE * 2 + 3     # spans multiple tiles
+    seqs = []
+    for i in range(n):
+        pages = alloc.alloc_sequence(3)
+        seqs.append((pages, np.full(3, i)))
+    pool.write_payload_batch(seqs)
+    got = pool.read_payload_batch([(pg, 3) for pg, _ in seqs])
+    for i, g in enumerate(got):
+        assert np.array_equal(g, np.full(3, i))
+
+
+def test_tokenpool_reserves_scratch_row():
+    alloc = AnchorPool(2, 4, 8)
+    pool = TokenPool(alloc)
+    assert alloc.scratch_page == 8
+    assert pool.flat_with_scratch.shape == (9, 8)
+    # real-page writes land in the flat view; scratch row is extra
+    pages = alloc.alloc_sequence(8)
+    pool.write_payload(pages, np.arange(8))
+    flat = pool.flat_with_scratch
+    assert np.array_equal(flat[alloc.flat_pid(pages[0])], np.arange(8))
+
+
+# ---------------------------------------------------------------------------
+# recv_batch / forward_batch parity with the scalar facade
+# ---------------------------------------------------------------------------
+
+def test_recv_batch_matches_scalar_recv():
+    def load(stack):
+        socks = []
+        rng = np.random.default_rng(1)
+        for proto in ("length-prefixed", "delimiter", "length-prefixed"):
+            s = stack.socket(proto)
+            s.deliver(BUILDERS[proto](rng.integers(100, 200, 5),
+                                      rng.integers(1000, 2000, 40)))
+            socks.append(s)
+        return socks
+
+    sa, sb = _stack(), _stack()
+    socks_a, socks_b = load(sa), load(sb)
+    scalar = {s.fileno(): s.recv(1 << 20) for s in socks_a}
+    batched = sb.recv_batch(socks_b, 1 << 20)
+    assert set(batched) == {s.fileno() for s in socks_b}
+    for s_a, s_b in zip(socks_a, socks_b):
+        buf_a, n_a = scalar[s_a.fileno()]
+        buf_b, n_b = batched[s_b.fileno()]
+        assert n_a == n_b
+        # metadata identical; VPI token differs only by registry order
+        assert np.array_equal(buf_a[:-1], buf_b[:-1])
+    assert sa.counters.snapshot() == sb.counters.snapshot()
+    assert np.array_equal(sa.pool.data, sb.pool.data)
+
+
+def test_recv_batch_skips_inadmissible_sockets():
+    stack = _stack()
+    ok = stack.socket("length-prefixed")
+    ok.deliver(build_message(np.arange(4), RNG.integers(0, 9, 32)))
+    short = stack.socket("length-prefixed")       # payload under threshold
+    short.deliver(build_message(np.arange(4), RNG.integers(0, 9, 4)))
+    partial = stack.socket("length-prefixed")     # DMA incomplete
+    partial.deliver(build_message(np.arange(4), RNG.integers(0, 9, 64))[:20])
+    raw = stack.socket("length-prefixed")         # unparseable
+    raw.deliver(np.array([99, 98, 97, 96]))
+    idle = stack.socket("length-prefixed")        # nothing buffered
+    tiny = stack.socket("length-prefixed")        # no room for meta+VPI
+    tiny.deliver(build_message(np.arange(4), RNG.integers(0, 9, 32)))
+
+    res = stack.recv_batch([ok, short, partial, raw, idle],
+                           {tiny.fileno(): 3})
+    res.update(stack.recv_batch([tiny], {tiny.fileno(): 3}))
+    assert set(res) == {ok.fileno()}
+    # the skipped sockets still work through scalar recv (fallback path)
+    buf, n = short.recv(1 << 20)
+    assert n == 3 + 4 + 4                  # full copy, admission threshold
+    assert stack.counters.full_copied == n
+
+
+def test_recv_batch_kernel_impls_match_host():
+    for impl in ("ref", "interpret"):
+        sh, sk = _stack(), _stack()
+        for stack in (sh, sk):
+            rng = np.random.default_rng(9)
+            socks = [stack.socket("length-prefixed") for _ in range(4)]
+            for s in socks:
+                s.deliver(build_message(rng.integers(100, 200, 7),
+                                        rng.integers(1000, 2000, 50)))
+            stack.recv_batch(socks, impl=("host" if stack is sh else impl))
+        assert np.array_equal(sh.pool.data, sk.pool.data), impl
+        assert sh.counters.snapshot() == sk.counters.snapshot()
+
+
+def test_recv_batch_device_impl_preserves_int64_pool_rows():
+    """Regression: the device impls ride an int32 stream, but their pool
+    write-back must touch ONLY the rows the batch anchored — payloads with
+    >=2^31 tokens anchored earlier by the int64-exact paths survive."""
+    stack = _stack()
+    big = stack.socket("length-prefixed")
+    huge = np.array([2 ** 40 + 5, -(2 ** 35), 2 ** 31, 7] * 4, np.int64)
+    big.deliver(build_message(np.arange(3), huge))
+    big.recv(1 << 20)                       # int64-exact scalar anchoring
+    (pages, ln), = big.connection.anchored.values()
+    others = [stack.socket("length-prefixed") for _ in range(3)]
+    for s in others:
+        s.deliver(build_message(np.arange(4), RNG.integers(0, 9, 48)))
+    res = stack.recv_batch(others, impl="ref")
+    assert len(res) == 3
+    assert np.array_equal(stack.pool.read_payload(pages, ln), huge)
+
+
+def test_runtime_batched_matches_scalar_end_to_end():
+    def run(batched, **kw):
+        stack = _stack()
+        rt = ProxyRuntime(stack, tick_every=8, batched=batched)
+        dsts = _load(stack, rt, **kw)
+        rt.run()
+        wires = [d.tx_wire() for d in dsts]
+        msgs = rt.messages_forwarded()
+        rt.shutdown()
+        assert stack.alloc.free_pages == stack.alloc.total_pages
+        return stack.counters.snapshot(), wires, msgs
+
+    for kw in ({}, {"budget": 20}, {"recv_buf": 4}):
+        cs, ws, ms = run(False, **kw)
+        cb, wb, mb = run(True, **kw)
+        assert cs == cb, kw
+        assert ms == mb, kw
+        for a, b in zip(ws, wb):
+            assert np.array_equal(a, b), kw
+
+
+def test_forward_batch_eagain_on_shared_backend():
+    stack = _stack()
+    shared = stack.socket("length-prefixed")
+    srcs = [stack.socket("length-prefixed") for _ in range(2)]
+    sends = []
+    for s in srcs:
+        s.deliver(build_message(np.arange(3), RNG.integers(1000, 2000, 40)))
+        buf, n = s.recv(1 << 20)
+        sends.append((s, shared, buf, 10))      # budget-truncated
+    out = stack.forward_batch(sends)
+    assert out[0][0] == "ok" and out[0][1] == 10
+    assert out[1] == ("eagain", 0)              # backend busy: held, like scalar
+    while shared.pending_send is not None:
+        shared.send(budget=10)
+    # retried send now goes through
+    out2 = stack.forward_batch([sends[1]])
+    assert out2[0][0] == "ok"
+
+
+# ---------------------------------------------------------------------------
+# exhaustion / teardown interleaved with batched rounds
+# ---------------------------------------------------------------------------
+
+def test_batched_pool_exhaustion_falls_back_scalar_drain():
+    """A pool too small for a whole batched round: overflow is handed to
+    the scalar §A.1 drain machinery without corrupting counters or wedging
+    the RX machines — every payload still arrives byte-identical. (Anchoring
+    a round at a time raises peak pool pressure, so WHICH path a message
+    takes legitimately differs from the scalar schedule; the wire bytes and
+    message counts must not.)"""
+    def run(batched):
+        stack = _stack(n_shards=1, pages_per_shard=6, page_size=16)
+        rt = ProxyRuntime(stack, tick_every=4, batched=batched)
+        # backpressure off: force the overflow path on purpose
+        dsts = _load(stack, rt, n_chans=4, n_msgs=3, payload=64,
+                     protos=("length-prefixed",), backpressure=False)
+        rt.run()
+        wires = [d.tx_wire() for d in dsts]
+        msgs = rt.messages_forwarded()
+        counters = stack.counters
+        # self-consistency: anchored tokens all left zero-copy, and every
+        # logical byte went down exactly one path
+        assert counters.anchored == counters.zero_copied
+        rt.shutdown()
+        assert stack.alloc.free_pages == stack.alloc.total_pages
+        return counters, wires, msgs
+
+    cs, ws, ms = run(False)
+    cb, wb, mb = run(True)
+    assert ms == mb == 12
+    assert cb.full_copied > 0          # drain mode engaged in the batch run
+    assert cb.vpi_injected > 0         # ...while other messages stayed fast
+    for a, b in zip(ws, wb):
+        assert np.array_equal(a, b)    # byte-identical delivery regardless
+
+
+def test_batched_rounds_interleave_with_deferred_teardown():
+    """Closing an anchoring socket mid-run (§A.4) while batched rounds keep
+    flowing: the grace period expires via the runtime tick, nothing wedges,
+    and the pool fully drains."""
+    stack = _stack(grace_ticks=2)
+    rt = ProxyRuntime(stack, tick_every=1, batched=True)
+    dsts = _load(stack, rt, n_chans=3, n_msgs=2,
+                 protos=("length-prefixed",))
+    # one extra socket anchors a message, then dies with it in flight
+    dying = stack.socket("length-prefixed")
+    dying.deliver(build_message(np.arange(3), RNG.integers(0, 9, 64)))
+    dying.recv(1 << 20)
+    dying.close()
+    assert stack.pages_in_use > 0
+    rt.run()
+    for _ in range(4):
+        rt.step()                      # idle ticks expire the grace period
+    assert rt.messages_forwarded() == 6
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert len(stack.registry) == 0
+
+
+def test_batched_teardown_mid_truncated_send_still_drains():
+    """Scalar regression scenario, batched mode: client closes while its
+    message is budget-truncated on a shared backend; the frame finishes and
+    later batched traffic flows."""
+    stack = _stack(grace_ticks=3)
+    rt = ProxyRuntime(stack, tick_every=1, batched=True)
+    shared = stack.socket("length-prefixed")
+    pa = RNG.integers(1000, 2000, 40)
+    pb = RNG.integers(3000, 4000, 40)
+    a = stack.socket("length-prefixed")
+    rt.channel(a, shared, budget=16)
+    a.deliver(build_message(np.arange(3), pa))
+    rt.step()
+    assert shared.pending_send is not None
+    a.close()
+    b = stack.socket("length-prefixed")
+    rt.channel(b, shared)
+    b.deliver(build_message(np.arange(3), pb))
+    rt.run()
+    wire = shared.tx_wire()
+    assert shared.pending_send is None
+    assert np.array_equal(wire[6:46], pa)
+    assert np.array_equal(wire[-40:], pb)
+    stack.drain()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+# ---------------------------------------------------------------------------
+# backpressure (pool watermark)
+# ---------------------------------------------------------------------------
+
+def test_backpressure_pauses_ingress_instead_of_drain_overflow():
+    """With backpressure on, channels pause while the pool sits above its
+    watermark, so the same overflow workload completes with ZERO §A.1
+    full-copy drain tokens; with backpressure off it must overflow."""
+    def run(backpressure):
+        stack = _stack(n_shards=1, pages_per_shard=10, page_size=16)
+        stack.high_watermark = 0.5
+        rt = ProxyRuntime(stack, tick_every=4, batched=True)
+        dsts = _load(stack, rt, n_chans=4, n_msgs=2, payload=64,
+                     protos=("length-prefixed",), backpressure=backpressure)
+        rt.run()
+        msgs = rt.messages_forwarded()
+        pauses = sum(c.stats.bp_pauses for c in rt.channels)
+        rt.shutdown()
+        assert stack.alloc.free_pages == stack.alloc.total_pages
+        return stack.counters, msgs, pauses
+
+    c_on, msgs_on, pauses_on = run(True)
+    c_off, msgs_off, _ = run(False)
+    assert msgs_on == msgs_off == 8          # same work completes either way
+    assert c_on.full_copied == 0             # paused, never overflowed
+    assert pauses_on > 0
+    assert c_off.full_copied > 0             # §A.1 drain engaged without bp
+    assert c_on.anchored == c_on.zero_copied # every payload stayed zero-copy
+
+
+def test_backpressure_liveness_when_only_paused_work_remains():
+    """If backpressure is the ONLY thing holding work back (nothing in
+    flight can free pages), the scheduler must admit the paused channels
+    rather than deadlock — worst case they take the §A.1 drain path."""
+    stack = _stack(n_shards=1, pages_per_shard=3, page_size=16)
+    stack.high_watermark = 0.3
+    rt = ProxyRuntime(stack, tick_every=4)
+    src, dst = stack.socket_pair("length-prefixed")
+    rt.channel(src, dst)                     # backpressure defaults on
+    payload = RNG.integers(1000, 2000, 64)   # 4 pages > 3-page pool
+    src.deliver(build_message(np.arange(3), payload))
+    rt.run()
+    assert rt.messages_forwarded() >= 1
+    assert np.array_equal(dst.tx_wire()[-64:], payload)
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_stack_exposes_watermark():
+    stack = _stack(n_shards=1, pages_per_shard=10, page_size=16)
+    assert not stack.above_watermark()
+    stack.high_watermark = 0.25
+    pages = stack.alloc.alloc_sequence(3 * 16)
+    assert stack.above_watermark()
+    stack.alloc.free_pages_list(pages)
+    assert not stack.above_watermark()
+
+
+# ---------------------------------------------------------------------------
+# latency telemetry
+# ---------------------------------------------------------------------------
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram(lo=1e-6)
+    for _ in range(90):
+        h.record(1e-5)
+    for _ in range(10):
+        h.record(1e-2)
+    assert h.count == 100
+    assert 2e-6 < h.percentile(0.5) < 5e-5       # near the bulk
+    assert h.percentile(0.99) > 1e-3             # tail bucket
+    s = h.summary()
+    assert s["count"] == 100 and s["p99"] >= s["p50"] > 0
+
+
+def test_runtime_reports_quantum_latency():
+    stack = _stack()
+    for batched in (False, True):
+        rt = ProxyRuntime(stack, batched=batched)
+        _load(stack, rt, n_chans=2, n_msgs=2, protos=("length-prefixed",),
+              seed=batched)
+        rt.run()
+        summary = rt.latency_summary()
+        assert len(summary) == 2
+        for stats in summary.values():
+            assert stats["count"] > 0
+            assert stats["p99"] >= stats["p50"] > 0
+    stack.close_all()
