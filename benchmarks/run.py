@@ -19,18 +19,21 @@ BENCHES = [
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("batched_datapath", "benchmarks.bench_batched_datapath"),
     ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
+    ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
     ("fig8_vs_copier", "benchmarks.bench_sota"),
     ("fig9_microarch", "benchmarks.bench_microarch"),
 ]
 
-# --smoke: stream-level benches only (socket facade, no jit) — seconds, not
-# minutes; the scripts/verify.sh CI gate.
+# --smoke: stream-level benches (socket facade) plus the encrypted-datapath
+# gate — the one smoke entry that jit-compiles (a reduced LibraEngine
+# sharing the proxy stack); still well under a minute end to end.
 SMOKE_BENCHES = [
     ("fig1_copy_overhead", "benchmarks.bench_copy_overhead"),
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("batched_datapath", "benchmarks.bench_batched_datapath"),
+    ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
 ]
 

@@ -23,7 +23,12 @@ import numpy as np
 
 from repro.kernels import ref as R
 from repro.kernels.selective_copy import selective_copy
-from repro.kernels.testing import POOL_COPY_PRIMS, jaxpr_primitives, selcopy_case
+from repro.kernels.testing import (
+    POOL_COPY_PRIMS,
+    jaxpr_primitives,
+    selcopy_case,
+    selcopy_crypto_case,
+)
 
 
 def check_parity() -> None:
@@ -46,6 +51,26 @@ def check_parity() -> None:
     print("parity: fused kernel == oracle (bit-exact, interpret mode)")
 
 
+def check_crypto_parity() -> None:
+    """The keystream operand (kTLS-analogue hw mode): fused kernel with
+    inline XOR decrypt vs ``selective_copy_crypto_ref``, bit-exact."""
+    rng = np.random.default_rng(43)
+    for b, page, pps, meta_max in [(1, 8, 2, 8), (2, 8, 4, 16),
+                                   (3, 16, 4, 16), (2, 16, 3, 32)]:
+        stream, ml, tl, pool, tables, ks = selcopy_crypto_case(
+            rng, b=b, page=page, pps=pps, meta_max=meta_max)
+        got_m, got_p = selective_copy(stream, ml, tl, pool, tables,
+                                      meta_max=meta_max, interpret=True,
+                                      reserved_scratch=True, keystream=ks)
+        want_m, want_p = R.selective_copy_crypto_ref(
+            stream, ml, tl, pool, tables, ks, meta_max=meta_max)
+        assert np.array_equal(np.array(got_m), np.array(want_m)), \
+            (b, page, pps, meta_max, "crypto-meta")
+        assert np.array_equal(np.array(got_p), np.array(want_p)), \
+            (b, page, pps, meta_max, "crypto-pool")
+    print("parity: keystream operand == crypto oracle (bit-exact)")
+
+
 def check_no_pool_copy() -> None:
     stream, ml, tl, pool, tables = selcopy_case(np.random.default_rng(7))
     fn = functools.partial(selective_copy, meta_max=16, interpret=True,
@@ -65,6 +90,7 @@ def check_no_pool_copy() -> None:
 
 if __name__ == "__main__":
     check_parity()
+    check_crypto_parity()
     check_no_pool_copy()
     print("check_kernel_parity: OK")
     sys.exit(0)

@@ -28,12 +28,24 @@ multiplexes N flows with mixed parser policies over one stack.
 **Policy (user programs)** — the eBPF analogue supplied by applications.
 
 * ``parser``         — programmable metadata-boundary policies
+* ``crypto``         — kTLS-analogue record layer (§B.1): record framing as
+                       a parser policy, keyed token cipher, sw/hw session
+                       modes (``stack.socket(..., tls='sw'|'hw')``)
 
 The free functions ``libra_recv``/``libra_send``/``libra_close``/
 ``expire_teardowns`` remain exported as the explicit-plumbing compatibility
 layer; new code should go through the facade (see docs/API.md).
 """
 from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
+from repro.core.crypto import (
+    REC_MAGIC,
+    CryptoRecordParser,
+    TlsSession,
+    open_record,
+    open_stream,
+    seal_record,
+    seal_stream,
+)
 from repro.core.egress import expire_teardowns, libra_close, libra_send
 from repro.core.ingress import libra_recv
 from repro.core.parser import (
@@ -73,6 +85,9 @@ __all__ = [
     "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",
     "build_message", "build_delimited_message", "build_chunked_message",
+    # kTLS-analogue record layer
+    "CryptoRecordParser", "TlsSession", "REC_MAGIC",
+    "seal_record", "seal_stream", "open_record", "open_stream",
     # compatibility layer (explicit plumbing)
     "libra_recv", "libra_send", "libra_close", "expire_teardowns",
 ]

@@ -106,14 +106,13 @@ class AnchorPool:
         return self.free_pages >= n_pages
 
     # -- allocation ----------------------------------------------------------
-    def _pick_shard(self, seq_idx: int) -> int:
-        # round-robin biased to the fullest freelist to keep shards balanced
-        best = max(range(self.n_shards), key=lambda s: len(self._free[s]))
-        return best
+    def _pick_shard(self) -> int:
+        # biased to the fullest freelist to keep shards balanced
+        return max(range(self.n_shards), key=lambda s: len(self._free[s]))
 
     def alloc_page(self, base_pos: int, shard: Optional[int] = None) -> PageRef:
         if shard is None:
-            shard = self._pick_shard(0)
+            shard = self._pick_shard()
         if not self._free[shard]:
             # try any shard before giving up (stripes stay roughly balanced)
             candidates = [s for s in range(self.n_shards) if self._free[s]]
@@ -188,11 +187,23 @@ class AnchorPool:
         self._budget_raise += len(staged)
         return staged
 
-    def commit_transfer(self, staged: Sequence[PageRef]) -> List[PageRef]:
-        """Phase 2: ownership now belongs to the TX side; restore budget."""
+    def _unstage(self, staged: Sequence[PageRef]) -> List[PageRef]:
+        """Restore the §A.3 budget raise for a staging list (the one copy
+        of the accounting shared by commit and abort)."""
         self._budget_raise -= len(staged)
         assert self._budget_raise >= 0
         return list(staged)
+
+    def commit_transfer(self, staged: Sequence[PageRef]) -> List[PageRef]:
+        """Phase 2: ownership now belongs to the TX side; restore budget."""
+        return self._unstage(staged)
+
+    def abort_transfer(self, staged: Sequence[PageRef]) -> List[PageRef]:
+        """Failed handoff: the egress path staged pages but never committed
+        them (e.g. the payload compose raised). Ownership stays with the RX
+        side; the §A.3 budget raise must still be restored, or it stays
+        elevated forever and the accounting cap silently widens."""
+        return self._unstage(staged)
 
     # -- device metadata ---------------------------------------------------------
     def tables_for(

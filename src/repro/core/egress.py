@@ -11,6 +11,16 @@ orchestration:
   Post-Send : cumulative byte accounting (non-blocking partial sends);
               on completion, delete the VPI entry, free pages (refcount,
               §A.4) and reset BOTH state machines (cross-datapath cleanup)
+
+Encrypted destinations (``dst_conn.crypto`` set — the kTLS analogue)
+re-encrypt outbound records under the transmitting socket's TX key: the
+inner metadata is sealed during the metadata copy, and the payload cipher
+is either a separate encrypt-and-copy pass after the gather (``sw`` mode,
+§B.1's software penalty, counted in ``CopyCounters.crypto_copied``) or
+fused into the gather itself (``hw`` mode — the NIC consumes plaintext
+pages and encrypts inline, zero extra passes). The §A.2 staging window now
+brackets the payload compose, so a failure between extract and commit
+aborts the transfer instead of leaving the §A.3 budget raised forever.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 from repro.core.anchor_pool import PageRef
+from repro.core.crypto import REC_HEADER, record_header
 from repro.core.ingress import reset_rx_from_tx
 from repro.core.state_machine import St
 from repro.core.stream import Connection, CopyCounters, TokenPool
@@ -31,6 +42,25 @@ def _extract_vpi(buf: np.ndarray, meta_len: int) -> Optional[int]:
         return None
     v = VpiRegistry.from_token(int(buf[meta_len]))
     return v if v != 0 else None
+
+
+def _tx_full_copy_crypt(crypto, buf: np.ndarray,
+                        chunk: np.ndarray) -> np.ndarray:
+    """Encrypt a full-copy TX chunk of a record frame (fallback/bypass/
+    short-payload paths). The session tracks (seq, position, end) across
+    budget-truncated calls so the keystream resumes mid-record; frames that
+    do not start with a record header pass through raw (with the same
+    continuation tracking, so a later record is never mistaken for one)."""
+    if crypto.tx_resume is None:
+        hdr = record_header(buf)
+        seq = hdr[0] if hdr is not None else None
+        pos, end = 0, len(buf)
+    else:
+        seq, pos, end = crypto.tx_resume
+    out = crypto.tx_encrypt_span(chunk, seq, pos) if seq is not None else chunk
+    pos += len(chunk)
+    crypto.tx_resume = (seq, pos, end) if pos < end else None
+    return out
 
 
 def libra_send(
@@ -50,14 +80,20 @@ def libra_send(
     ``parsed`` reuses a ParseResult already computed for ``buf``;
     ``payload_prefetched`` hands in this message's anchored payload when a
     batched forward already gathered it (one fused read for the round) —
-    it MUST be the exact ``read_payload`` result for the embedded VPI.
+    it MUST be the exact payload bytes this socket would compose itself
+    (``read_payload`` output, with the TX keystream already fused for an
+    encrypted hw-mode destination).
     """
     sm = dst_conn.tx_machine
+    crypto = dst_conn.crypto
     decision = sm.pre_send(buf, _extract_vpi, parsed=parsed)
 
     if decision.state in (St.DEFAULT, St.FALLBACK_BYPASS, St.METADATA_PARSED):
         n = len(buf) if send_budget is None else min(len(buf), send_budget)
-        dst_conn.tx_stream.append(np.asarray(buf[:n]).copy())
+        chunk = np.asarray(buf[:n]).copy()
+        if crypto is not None and n:
+            chunk = _tx_full_copy_crypt(crypto, buf, chunk)
+        dst_conn.tx_stream.append(chunk)
         counters.full_copied += n
         if decision.state != St.DEFAULT:
             done = sm.post_send(n)
@@ -81,16 +117,45 @@ def libra_send(
         owned = [PageRef(*pg) for pg in entry.pages]
         if start == 0:
             meta = np.asarray(buf[: sm.meta_len]).copy()
-            # data plane: selective copy of the new metadata only
-            counters.meta_copied += len(meta)
-            # §A.2 two-phase ownership transfer through the staging list
+            # §A.2 two-phase ownership transfer through the staging list;
+            # the payload compose sits INSIDE the stage->commit window so a
+            # failure aborts the transfer (restoring the §A.3 budget raise)
+            # instead of leaving it elevated forever
             staged = pool.alloc.stage_transfer(owned)
+            try:
+                if crypto is not None:
+                    seq = int(meta[1])
+                    imeta = len(meta) - REC_HEADER
+                    meta = crypto.seal_meta(meta)
+                # zero-copy "transmission": the NIC consumes anchored pages
+                # in place; the composed frame stays staged across partial
+                # sends
+                if payload_prefetched is not None:
+                    payload = payload_prefetched
+                elif crypto is None:
+                    payload = pool.read_payload(owned, entry.payload_len)
+                elif crypto.mode == "hw":
+                    # hw-kTLS: the TX cipher rides the gather — the NIC
+                    # encrypts inline while consuming the anchored pages
+                    payload = pool.read_payload(
+                        owned, entry.payload_len,
+                        keystream=crypto.tx_payload_keystream(
+                            seq, imeta, entry.payload_len))
+                else:
+                    # sw-kTLS: encrypt-and-copy re-touches the gathered
+                    # payload in a separate pass (§B.1)
+                    payload = pool.read_payload(owned, entry.payload_len)
+                    payload = crypto.sw_encrypt_payload(seq, imeta, payload)
+                    counters.crypto_copied += entry.payload_len
+            except BaseException:
+                pool.alloc.abort_transfer(staged)
+                raise
             owned = pool.alloc.commit_transfer(staged)
+            # data plane: selective copy of the new metadata only (counted
+            # after the commit so an aborted compose, retried later, does
+            # not double-charge the copy telemetry)
+            counters.meta_copied += len(meta)
             counters.zero_copied += entry.payload_len
-            # zero-copy "transmission": the NIC consumes anchored pages in
-            # place; the composed frame stays staged across partial sends
-            payload = (payload_prefetched if payload_prefetched is not None
-                       else pool.read_payload(owned, entry.payload_len))
             sm.staged_out = np.concatenate([meta, payload])
     out = sm.staged_out
 

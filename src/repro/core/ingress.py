@@ -15,6 +15,15 @@ transmission and resets it (cross-datapath cleanup, §3.4 box 3).
 
 Pool exhaustion follows §A.1: the prefix that fits is anchored zero-copy;
 the remainder is served through the native full-copy path.
+
+Encrypted connections (``Connection.crypto`` set — the kTLS analogue) run
+the same machine over ciphertext records: the record header + inner
+metadata are decrypted during the metadata copy, and the payload cipher is
+either a separate decrypt-and-copy pass before anchoring (``sw`` mode,
+§B.1's software kTLS penalty, counted in ``CopyCounters.crypto_copied``)
+or fused into the anchoring scatter itself (``hw`` mode, the NIC-inline
+datapath — zero extra passes). Full-copy fallbacks (short records, §A.1
+drain) decrypt in place so the application always sees plaintext.
 """
 from __future__ import annotations
 
@@ -23,6 +32,7 @@ from typing import Tuple
 import numpy as np
 
 from repro.core.anchor_pool import PoolExhausted
+from repro.core.crypto import REC_HEADER, xor_tokens
 from repro.core.state_machine import St
 from repro.core.stream import Connection, CopyCounters, TokenPool
 from repro.core.vpi import VpiRegistry
@@ -41,6 +51,7 @@ def libra_recv(
     the logical length covers metadata + anchored payload.
     """
     sm = conn.rx_machine
+    crypto = conn.crypto
 
     # §A.1 drain mode: a previous message overflowed the pool; the rest of
     # its payload takes the native copy path.
@@ -51,6 +62,13 @@ def libra_recv(
         conn.rx_advance(n)
         counters.full_copied += n
         conn.rx_drain_remaining = drain - n
+        if crypto is not None and crypto.rx_drain is not None and n:
+            # the drained ciphertext resumes its record keystream where the
+            # previous call stopped (offsets are encrypted-region positions)
+            seq, off = crypto.rx_drain
+            out = xor_tokens(out, crypto.rx_payload_keystream(seq, 0, n, off))
+            crypto.rx_drain = ((seq, off + n)
+                               if conn.rx_drain_remaining else None)
         if conn.rx_drain_remaining == 0:
             sm.reset()
         return out, n
@@ -74,6 +92,9 @@ def libra_recv(
         if parsed.ok and parsed.payload_len >= sm.min_payload \
                 and conn.rx_available() < parsed.meta_len + parsed.payload_len:
             return np.zeros((0,), np.int64), 0
+    # the window view may be invalidated by rx_advance below; capture the
+    # record seq while it is still valid
+    head_seq = int(window[1]) if len(window) >= 2 else None
 
     decision = sm.on_recv(window, buf_len, parsed=parsed)
 
@@ -82,6 +103,10 @@ def libra_recv(
         out = conn.rx_peek(n).copy()
         conn.rx_advance(n)
         counters.full_copied += n
+        if crypto is not None and parsed is not None and parsed.ok and n:
+            # a short-payload record served whole through the native path:
+            # the record layer still decrypts everything behind the header
+            out = crypto.rx_open_span(out, head_seq, 0)
         sm.reset()
         return out, n
 
@@ -90,6 +115,14 @@ def libra_recv(
         out = conn.rx_peek(n).copy()
         conn.rx_advance(n)
         counters.meta_copied += n
+        if crypto is not None and n:
+            start = sm.meta_copied - n
+            if start == 0:
+                # remember the record seq: continuations of this metadata
+                # span no longer see the header
+                crypto.rx_meta_seq = head_seq
+            if crypto.rx_meta_seq is not None:
+                out = crypto.rx_open_span(out, crypto.rx_meta_seq, start)
         return out, n
 
     if decision.state == St.WRITE_VPI:
@@ -97,6 +130,15 @@ def libra_recv(
         conn.rx_advance(decision.copy_meta)
         counters.meta_copied += len(meta)
         payload_len = sm.payload_len
+        seq = None
+        imeta = sm.meta_len - REC_HEADER
+        if crypto is not None:
+            start = sm.meta_len - decision.copy_meta
+            seq = head_seq if start == 0 else crypto.rx_meta_seq
+            crypto.rx_meta_seq = None
+            if seq is not None:
+                meta = crypto.rx_open_span(meta, seq, start)
+                crypto.stats["records_opened"] += 1
         # zero-copy window over the resident payload (view stays valid
         # until the rx_advance below)
         payload = conn.rx_peek(payload_len)
@@ -109,14 +151,34 @@ def libra_recv(
             # what is actually buffered: never advance past delivered bytes)
             n = (min(payload_len, conn.rx_available(), buf_len - len(meta))
                  if buf_len > len(meta) else 0)
-            out = np.concatenate([meta, payload[:n].copy()])
+            served = payload[:n].copy()
+            if seq is not None and n:
+                served = xor_tokens(
+                    served, crypto.rx_payload_keystream(seq, imeta, n))
+            out = np.concatenate([meta, served])
             conn.rx_advance(n)
             counters.full_copied += n
             conn.rx_drain_remaining = payload_len - n
+            if crypto is not None:
+                crypto.rx_drain = ((seq, imeta + n) if seq is not None
+                                   and conn.rx_drain_remaining else None)
             if conn.rx_drain_remaining == 0:
                 sm.reset()
             return out, len(out)
-        pool.write_payload(pages, payload)
+        if seq is None:
+            pool.write_payload(pages, payload)
+        elif crypto.mode == "sw":
+            # sw-kTLS: decrypt-and-copy into a fresh buffer, THEN anchor —
+            # the separate pass the paper's §B.1 software path cannot avoid
+            plain = crypto.sw_decrypt_payload(seq, imeta, payload)
+            counters.crypto_copied += payload_len
+            pool.write_payload(pages, plain)
+        else:
+            # hw-kTLS: the cipher rides the anchoring scatter itself — the
+            # ciphertext is decrypted exactly once, on the fly
+            pool.write_payload(
+                pages, payload,
+                keystream=crypto.rx_payload_keystream(seq, imeta, payload_len))
         counters.anchored += payload_len
         counters.allocs += 1
         conn.rx_advance(payload_len)

@@ -36,6 +36,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.core.crypto import TlsSession
 from repro.core.egress import libra_close, libra_send
 from repro.core.ingress import libra_recv
 from repro.core.parser import ParserPolicy
@@ -68,11 +69,22 @@ class LibraSocket:
 
     def __init__(self, stack, parser: ParserPolicy, *,
                  min_payload: int = MIN_PAYLOAD,
-                 send_budget: Optional[int] = None):
+                 send_budget: Optional[int] = None,
+                 tls: Optional[str] = None):
         self._stack = stack
         self.parser = parser
         self.send_budget = send_budget   # default per-call budget (None = ∞)
         self._conn = Connection(parser, stack.registry, min_payload=min_payload)
+        # kTLS-analogue session (tls='sw'|'hw'): per-direction keys derive
+        # from the stack's VPI-registry secret; the datapaths find the
+        # session on the connection, the wire-side peers through ``.tls``
+        self.tls: Optional[TlsSession] = None
+        if tls is not None:
+            self.tls = TlsSession(
+                tls,
+                stack.registry.derive_key(b"tls-rx", self._conn.conn_id),
+                stack.registry.derive_key(b"tls-tx", self._conn.conn_id))
+            self._conn.crypto = self.tls
         self._pending: Optional[_PendingSend] = None
         self._first_parse = None       # ParseResult handed to the first send
         self._parse_memo = None        # (queue fingerprint, ParseResult)

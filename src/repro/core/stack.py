@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
+from repro.core.crypto import REC_HEADER, CryptoRecordParser, keystream_batch
 from repro.core.egress import expire_teardowns
 from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolicy
 from repro.core.socket import Events, LibraSocket
@@ -46,6 +47,13 @@ class _BatchItem:
     pages: List[PageRef]
     meta: np.ndarray = None
     payload: np.ndarray = None   # zero-copy rx window (valid until advance)
+    ks: np.ndarray = None        # hw-kTLS RX keystream (fused into the scatter)
+
+
+def _fits_int32(a: np.ndarray) -> bool:
+    """True when every token survives the int32 device stream round-trip."""
+    return len(a) == 0 or (int(a.min()) >= -(1 << 31)
+                           and int(a.max()) < (1 << 31))
 
 
 class LibraStack:
@@ -64,6 +72,7 @@ class LibraStack:
                                                 grace_ticks=grace_ticks)
         self.counters = CopyCounters()
         self.parsers: Dict[str, type] = dict(BUILTIN_PARSERS)
+        self.parsers.setdefault("crypto-record", CryptoRecordParser)
         if parsers:
             self.parsers.update(parsers)
         self.now_tick = 0
@@ -82,12 +91,25 @@ class LibraStack:
 
     def socket(self, parser: ParserLike = "length-prefixed", *,
                min_payload: int = MIN_PAYLOAD,
-               send_budget: Optional[int] = None) -> LibraSocket:
+               send_budget: Optional[int] = None,
+               tls: Optional[str] = None) -> LibraSocket:
         """Open a connection on this stack. ``min_payload`` above any real
         message size forces the native full-copy path (a standard-stack
-        baseline socket); ``send_budget`` models a bounded send buffer."""
-        sock = LibraSocket(self, self.make_parser(parser),
-                           min_payload=min_payload, send_budget=send_budget)
+        baseline socket); ``send_budget`` models a bounded send buffer.
+
+        ``tls='sw'|'hw'`` runs the connection through the kTLS-analogue
+        record layer: ``parser`` becomes the *inner* protocol and the wire
+        carries encrypted records (the given parser is wrapped in a
+        :class:`CryptoRecordParser`; session keys derive from the stack's
+        registry secret). ``'sw'`` models software kTLS — separate
+        decrypt/encrypt-and-copy passes at the RX/TX boundary, no fused
+        batching; ``'hw'`` models NIC-inline kTLS — the cipher fused into
+        the selective-copy scatter/gather, zero extra passes."""
+        pol = self.make_parser(parser)
+        if tls is not None and not isinstance(pol, CryptoRecordParser):
+            pol = CryptoRecordParser(inner=pol)
+        sock = LibraSocket(self, pol, min_payload=min_payload,
+                           send_budget=send_budget, tls=tls)
         self.sockets[sock.fileno()] = sock
         return sock
 
@@ -187,6 +209,13 @@ class LibraStack:
             conn = sock.connection
             if conn.closed or conn.rx_drain_remaining > 0:
                 continue
+            if conn.crypto is not None and conn.crypto.mode == "sw":
+                # sw-kTLS: the software record layer must run between the
+                # socket queue and the pool, per message — such sockets are
+                # not admissible to the fused batch and pay the scalar
+                # decrypt-and-copy path (the §B.1 penalty: software crypto
+                # forfeits the batched-datapath amortization)
+                continue
             sm = conn.rx_machine
             if sm.state is not St.DEFAULT:
                 continue
@@ -207,24 +236,61 @@ class LibraStack:
             # drive the existing state machine: DEFAULT -> ... -> WRITE_VPI
             decision = sm.on_recv(conn.rx_window(sm.parser.lookahead), bl,
                                   parsed=parsed)
-            assert decision.state is St.WRITE_VPI, decision.state
+            if decision.state is not St.WRITE_VPI:
+                # should be unreachable given the admission checks above,
+                # but a machine that lands anywhere else must not leak the
+                # pages we just allocated: hand everything back and let the
+                # scalar path re-evaluate the socket from a clean state
+                # (nothing has been consumed from the ring yet)
+                self.alloc.free_pages_list(pages)
+                sm.reset()
+                continue
             items.append(_BatchItem(sock, bl, decision.copy_meta,
                                     sm.payload_len, pages))
         if not items:
             return {}
 
         # -- selective copy of metadata (host buffers stay int64-exact) -----
+        crypt: List[_BatchItem] = []
         for it in items:
             conn = it.sock.connection
             it.meta = conn.rx_peek(it.meta_len).copy()
             conn.rx_advance(it.meta_len)
             self.counters.meta_copied += it.meta_len
             it.payload = conn.rx_peek(it.payload_len)
+            if conn.crypto is not None:
+                crypt.append(it)
+        if crypt:
+            # hw-kTLS (sw never reaches the batch): ONE vectorized keystream
+            # sweep covers every encrypted record of the round, inner
+            # metadata + payload. The metadata span decrypts right here
+            # (those bytes are being copied to user space anyway); the
+            # payload span is fused into the batched anchoring pass below —
+            # no per-message crypto work survives in the fused round.
+            kss = keystream_batch(
+                [it.sock.connection.crypto.rx_key for it in crypt],
+                [int(it.meta[1]) for it in crypt],
+                [it.meta_len - REC_HEADER + it.payload_len for it in crypt])
+            for it, ks in zip(crypt, kss):
+                imeta = it.meta_len - REC_HEADER
+                it.meta[REC_HEADER:] = np.bitwise_xor(it.meta[REC_HEADER:],
+                                                      ks[:imeta])
+                it.ks = ks[imeta:]
+                it.sock.connection.crypto.stats["records_opened"] += 1
 
         # -- payload anchoring: ONE fused pass for the whole round ----------
+        if impl != "host" and not all(
+                _fits_int32(it.meta) and _fits_int32(it.payload)
+                for it in items):
+            # the device data plane rides an int32 stream; out-of-range
+            # int64 tokens would truncate silently — serve this round from
+            # the int64-exact host scatter instead and count the bounce
+            self.counters.device_fallbacks += 1
+            impl = "host"
         if impl == "host":
             self.pool.write_payload_batch(
-                [(it.pages, it.payload) for it in items])
+                [(it.pages, it.payload) for it in items],
+                keystreams=[it.ks for it in items])
         else:
             self._recv_batch_device(items, impl)
 
@@ -253,7 +319,9 @@ class LibraStack:
 
     def _recv_batch_device(self, items: List[_BatchItem], impl: str) -> None:
         """Flatten the round into one [B, S] batch and run the fused
-        selective-copy kernel once over the pool + reserved scratch row."""
+        selective-copy kernel once over the pool + reserved scratch row.
+        hw-kTLS rows ship their RX keystream as the kernel's ``keystream``
+        operand, so decryption is fused into the payload placement."""
         from repro.kernels import ops
 
         page = self.alloc.page_size
@@ -266,14 +334,18 @@ class LibraStack:
         meta_len = np.zeros((b,), np.int32)
         total_len = np.zeros((b,), np.int32)
         tables = np.full((b, pps), -1, np.int32)
+        ks = np.zeros((b, s), np.int32) if any(
+            it.ks is not None for it in items) else None
         for i, it in enumerate(items):
             msg = it.meta_len + it.payload_len
-            # int64 host tokens ride the int32 device stream; values must
-            # fit (callers with >31-bit tokens use impl='host')
+            # int64 host tokens ride the int32 device stream; recv_batch
+            # pre-checked the range (out-of-range rounds fall back to host)
             stream[i, : it.meta_len] = it.meta
             stream[i, it.meta_len : msg] = it.payload
             meta_len[i] = it.meta_len
             total_len[i] = msg
+            if it.ks is not None:
+                ks[i, it.meta_len : msg] = it.ks
             for j, pg in enumerate(it.pages):
                 tables[i, j] = self.alloc.flat_pid(pg)
         import jax.numpy as jnp
@@ -282,7 +354,8 @@ class LibraStack:
         new_meta, new_pool = ops.selective_copy(
             stream, meta_len, total_len,
             jnp.asarray(pool.astype(np.int32)), tables,
-            meta_max=meta_max, impl=impl, reserved_scratch=True)
+            meta_max=meta_max, impl=impl, reserved_scratch=True,
+            keystream=ks)
         del new_meta  # host buffers keep the int64-exact metadata
         # sync back ONLY the rows this batch anchored: rows untouched by the
         # kernel keep their int64-exact host content (and the copy stays
@@ -304,29 +377,67 @@ class LibraStack:
 
         Returns one ``(status, accepted)`` per send, in order:
         ``(SEND_OK, n)`` or ``(SEND_EAGAIN, 0)`` (backend busy with another
-        flow's truncated message — retry next round, as scalar)."""
+        flow's truncated message — retry next round, as scalar).
+
+        Encrypted hw-mode destinations get their TX keystream fused into
+        the batched gather (NIC-inline encrypt, still one pass); sw-mode
+        destinations are excluded from the prefetch — their encrypt pass
+        runs per message inside the scalar transmit (the §B.1 penalty)."""
         prefetch: List[Optional[np.ndarray]] = [None] * len(sends)
         peeks: List[Optional[Tuple]] = [None] * len(sends)
-        gather: List[Tuple[int, Tuple]] = []
+        gather: List[Tuple[int, Tuple, Optional[Tuple]]] = []
         for k, (src, dst, buf, budget) in enumerate(sends):
             if dst.pending_send is not None or dst.closed:
                 continue
-            peeks[k] = dst._peek_message(np.asarray(buf, np.int64))
+            buf64 = np.asarray(buf, np.int64)
+            peeks[k] = dst._peek_message(buf64)
             entry = peeks[k][2]
-            if entry is not None and \
-                    entry.payload_len >= dst.connection.tx_machine.min_payload:
-                gather.append((k, ([PageRef(*pg) for pg in entry.pages],
-                                   entry.payload_len)))
+            if entry is None or \
+                    entry.payload_len < dst.connection.tx_machine.min_payload:
+                continue
+            crypto = dst.connection.crypto
+            if crypto is not None and crypto.mode == "sw":
+                continue  # software record layer: scalar encrypt-and-copy
+            ksinfo = None
+            if crypto is not None:
+                # hw-kTLS: (session, seq, inner-meta length) — the whole
+                # record keystream is generated below in one vectorized
+                # sweep for the round (metadata span stashed for the
+                # seal_meta this transmit is about to trigger, payload span
+                # fused into the batched gather)
+                ksinfo = (crypto, int(buf64[1]), peeks[k][0] - REC_HEADER)
+            gather.append((k, ([PageRef(*pg) for pg in entry.pages],
+                               entry.payload_len), ksinfo))
         if gather:
-            payloads = self.pool.read_payload_batch([g for _, g in gather])
-            for (k, _), pv in zip(gather, payloads):
+            keystreams: List[Optional[np.ndarray]] = [None] * len(gather)
+            enc = [(i, info) for i, (_, _, info) in enumerate(gather)
+                   if info is not None]
+            if enc:
+                kss = keystream_batch(
+                    [info[0].tx_key for _, info in enc],
+                    [info[1] for _, info in enc],
+                    [info[2] + gather[i][1][1] for i, info in enc])
+                for (i, (crypto, seq, imeta)), ks in zip(enc, kss):
+                    crypto.stash_tx_meta_ks(seq, ks[:imeta])
+                    keystreams[i] = ks[imeta:]
+            payloads = self.pool.read_payload_batch(
+                [g for _, g, _ in gather], keystreams=keystreams)
+            for (k, _, _), pv in zip(gather, payloads):
                 prefetch[k] = pv
         out: List[Tuple[str, int]] = []
         for k, (src, dst, buf, budget) in enumerate(sends):
+            peeked, pf = peeks[k], prefetch[k]
+            if peeked is not None and peeked[2] is not None and \
+                    self.registry.peek(peeked[1]) is not peeked[2]:
+                # an earlier send in this round invalidated the peek (e.g.
+                # it released or tore down the same VPI): transmitting
+                # against the stale entry would mis-size the pending
+                # message and wedge the socket — drop the prefetch and let
+                # the transmit re-evaluate, exactly as scalar ``forward``
+                peeked, pf = None, None
             try:
                 n = dst._transmit(src, buf, budget,
-                                  payload_prefetched=prefetch[k],
-                                  peeked=peeks[k])
+                                  payload_prefetched=pf, peeked=peeked)
             except BlockingIOError:
                 out.append((SEND_EAGAIN, 0))
                 continue

@@ -145,18 +145,32 @@ class TokenPool:
         dest = coords[:, :1] * ps + off[None, :]
         return dest[mask], src[mask]
 
-    def write_payload(self, pages: List[PageRef], payload: np.ndarray) -> None:
+    def write_payload(self, pages: List[PageRef], payload: np.ndarray,
+                      keystream: Optional[np.ndarray] = None) -> None:
+        """Anchor a payload with one reshaped scatter. ``keystream`` fuses
+        the kTLS-analogue hw-mode cipher into that same pass: the XOR runs
+        on the gathered values inside the placement (no decrypted copy of
+        the payload ever exists outside the pool)."""
         n = len(payload)
         if n == 0 or not pages:
             return
         dest, src = self._page_coords(pages, n)
-        self._flat.reshape(-1)[dest] = np.asarray(payload)[src]
+        vals = np.asarray(payload)[src]
+        if keystream is not None:
+            vals = np.bitwise_xor(vals, np.asarray(keystream)[src])
+        self._flat.reshape(-1)[dest] = vals
 
-    def read_payload(self, pages: List[PageRef], length: int) -> np.ndarray:
+    def read_payload(self, pages: List[PageRef], length: int,
+                     keystream: Optional[np.ndarray] = None) -> np.ndarray:
+        """Gather an anchored payload in one pass; ``keystream`` fuses the
+        hw-mode TX cipher into the gather (the NIC-inline encrypt)."""
         out = np.zeros((length,), np.int64)
         if length and pages:
             dest, src = self._page_coords(pages, length)
-            out[src] = self._flat.reshape(-1)[dest]
+            vals = self._flat.reshape(-1)[dest]
+            if keystream is not None:
+                vals = np.bitwise_xor(vals, np.asarray(keystream)[src])
+            out[src] = vals
         return out
 
     # -- batched data plane (one fused pass per scheduling round) -----------
@@ -189,32 +203,57 @@ class TokenPool:
         return dest, pos
 
     def write_payload_batch(
-        self, seqs: Sequence[Tuple[Sequence[PageRef], np.ndarray]]) -> None:
+        self, seqs: Sequence[Tuple[Sequence[PageRef], np.ndarray]],
+        keystreams: Optional[Sequence[Optional[np.ndarray]]] = None) -> None:
         """Anchor a whole batch of payloads with one flattened scatter per
         cache-sized tile — the host mirror of the fused kernel's
-        single-pass payload placement."""
-        seqs = [(pages, p) for pages, p in seqs if len(p) and pages]
+        single-pass payload placement. ``keystreams`` (aligned with
+        ``seqs``, None entries = plaintext) fuses per-message hw-mode
+        decryption into the same scatter: one XOR over the concatenated
+        batch, no per-message pass."""
+        if keystreams is None:
+            keystreams = [None] * len(seqs)
+        pairs = [(pages, p, ks) for (pages, p), ks in zip(seqs, keystreams)
+                 if len(p) and pages]
         flat = self._flat.reshape(-1)
-        for i in range(0, len(seqs), self.BATCH_TILE):
-            tile = seqs[i : i + self.BATCH_TILE]
+        for i in range(0, len(pairs), self.BATCH_TILE):
+            tile = pairs[i : i + self.BATCH_TILE]
             dest, pos = self._batch_coords(
-                [(pages, len(p)) for pages, p in tile])
-            cat = np.concatenate([p for _, p in tile])
-            flat[dest] = cat[pos]
+                [(pages, len(p)) for pages, p, _ in tile])
+            cat = np.concatenate([p for _, p, _ in tile])
+            vals = cat[pos]
+            if any(ks is not None for _, _, ks in tile):
+                kcat = np.concatenate(
+                    [ks if ks is not None else np.zeros(len(p), np.int64)
+                     for _, p, ks in tile])
+                vals = np.bitwise_xor(vals, kcat[pos])
+            flat[dest] = vals
 
     def read_payload_batch(
-        self, seqs: Sequence[Tuple[Sequence[PageRef], int]]) -> List[np.ndarray]:
+        self, seqs: Sequence[Tuple[Sequence[PageRef], int]],
+        keystreams: Optional[Sequence[Optional[np.ndarray]]] = None,
+    ) -> List[np.ndarray]:
         """One fused gather per cache-sized tile of anchored payloads;
-        returns one array per (pages, length) request."""
+        returns one array per (pages, length) request. ``keystreams``
+        fuses per-message hw-mode TX encryption into the gather."""
+        if keystreams is None:
+            keystreams = [None] * len(seqs)
         flat = self._flat.reshape(-1)
         outs: List[np.ndarray] = []
         for i in range(0, len(seqs), self.BATCH_TILE):
-            tile = seqs[i : i + self.BATCH_TILE]
+            tile = list(seqs[i : i + self.BATCH_TILE])
+            kss = list(keystreams[i : i + self.BATCH_TILE])
             lens = [ln for _, ln in tile]
             out = np.zeros((sum(lens),), np.int64)
             if any(ln and pages for pages, ln in tile):
                 dest, pos = self._batch_coords(tile)
-                out[pos] = flat[dest]
+                vals = flat[dest]
+                if any(ks is not None for ks in kss):
+                    kcat = np.concatenate(
+                        [ks if ks is not None else np.zeros(ln, np.int64)
+                         for (_, ln), ks in zip(tile, kss)])
+                    vals = np.bitwise_xor(vals, kcat[pos])
+                out[pos] = vals
             outs.extend(np.split(out, np.cumsum(lens)[:-1]))
         return outs
 
@@ -228,13 +267,24 @@ class CopyCounters:
     zero_copied: int = 0        # Meta SKB-Trans: ownership-transferred tokens
     vpi_injected: int = 0
     allocs: int = 0             # Meta Alloc events
+    # sw-kTLS-analogue tokens re-touched by SEPARATE crypto passes (§B.1
+    # encrypt-and-copy / decrypt-and-copy); hw mode fuses the cipher into
+    # the selective-copy pass and never increments this
+    crypto_copied: int = 0
+    # batched rounds bounced from the int32 device data plane back to the
+    # int64-exact host scatter (out-of-range tokens detected pre-dispatch);
+    # an event count, not a copy volume — excluded from snapshot()
+    device_fallbacks: int = 0
 
     def total_user_copies(self) -> int:
-        return self.meta_copied + self.full_copied
+        return self.meta_copied + self.full_copied + self.crypto_copied
 
     def snapshot(self) -> Tuple[int, ...]:
+        """Copy-volume identity tuple (host/device impls and batched/scalar
+        schedules must agree on it; event counters stay out)."""
         return (self.meta_copied, self.full_copied, self.anchored,
-                self.zero_copied, self.vpi_injected, self.allocs)
+                self.zero_copied, self.vpi_injected, self.allocs,
+                self.crypto_copied)
 
 
 class Connection:
@@ -259,6 +309,9 @@ class Connection:
         # §A.1 drain mode: tokens of an overflowed message still owed to the
         # native copy path (set by the ingress datapath on pool exhaustion)
         self.rx_drain_remaining = 0
+        # kTLS-analogue session (repro.core.crypto.TlsSession) — None for
+        # plaintext connections; set by the socket facade when tls= is given
+        self.crypto = None
 
     # -- socket plumbing -----------------------------------------------------
     def deliver(self, data: np.ndarray) -> None:

@@ -50,6 +50,17 @@ class VpiRegistry:
         self.stats = {"registered": 0, "hits": 0, "misses": 0, "released": 0,
                       "deferred": 0, "collisions": 0}
 
+    # -- key derivation ----------------------------------------------------
+    def derive_key(self, label: bytes, *context: int) -> bytes:
+        """Derive a subordinate secret (e.g. a kTLS-analogue session key)
+        from the registry secret — same trust root as the VPI handles, so
+        control-plane code can hold neither pool addresses nor keystreams."""
+        h = hashlib.blake2b(key=self._secret, digest_size=16)
+        h.update(label)
+        for c in context:
+            h.update(struct.pack("<q", int(c)))
+        return h.digest()
+
     # -- handle generation ------------------------------------------------
     def _make_vpi(self) -> int:
         while True:

@@ -51,18 +51,27 @@ def paged_attention(q, pool, tables, page_pos, seq_lens, *, window=0,
 
 
 def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
-                   impl="auto", reserved_scratch=False):
+                   impl="auto", reserved_scratch=False, keystream=None):
     """``reserved_scratch=True`` marks the pool's last row as the scratch
     page :class:`AnchorPool` reserved at allocation time — the fused kernel
     then runs with zero pool-sized copies (tables must never reference it).
-    The oracle needs no flag: it never touches a row tables don't name."""
+    The oracle needs no flag: it never touches a row tables don't name.
+
+    ``keystream`` ([B, S] int32, zeros outside the payload region) is the
+    kTLS-analogue hw mode: payload tokens are XORed with it inside the
+    anchoring pass (NIC-inline decrypt, zero extra passes)."""
     impl = _resolve(impl)
     if impl == "ref":
-        return _ref.selective_copy_ref(stream, meta_len, total_len, pool,
-                                       tables, meta_max=meta_max)
+        if keystream is None:
+            return _ref.selective_copy_ref(stream, meta_len, total_len, pool,
+                                           tables, meta_max=meta_max)
+        return _ref.selective_copy_crypto_ref(
+            stream, meta_len, total_len, pool, tables,
+            jnp.asarray(keystream), meta_max=meta_max)
+    ks = None if keystream is None else jnp.asarray(keystream)
     return _selcopy_pallas(stream, meta_len, total_len, pool, tables,
                            meta_max=meta_max, interpret=(impl == "interpret"),
-                           reserved_scratch=reserved_scratch)
+                           reserved_scratch=reserved_scratch, keystream=ks)
 
 
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):

@@ -108,6 +108,44 @@ def selective_copy_ref(
     return meta_buf, new_pool
 
 
+def selective_copy_crypto_ref(
+    stream: jax.Array,    # [B, S] int32 ciphertext token stream
+    meta_len: jax.Array,  # [B] metadata boundary from the parser policy
+    total_len: jax.Array, # [B] message length in the stream
+    pool: jax.Array,      # [P, page] anchored payload pages
+    tables: jax.Array,    # [B, pps] destination page ids (-1 unused)
+    keystream: jax.Array, # [B, S] per-token keystream (0 outside payload)
+    *,
+    meta_max: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """hw-kTLS RX-Prog data plane: identical to :func:`selective_copy_ref`
+    except payload tokens are XORed with ``keystream`` *inside* the
+    anchoring scatter — the NIC-inline decrypt, fused into the single
+    placement pass. The metadata compaction stays raw (record headers are
+    plaintext; inner-metadata decryption happens host-side during the user
+    copy, where the bytes are being touched anyway)."""
+    b, s = stream.shape
+    p_, page = pool.shape
+    pps = tables.shape[1]
+    idx = jnp.arange(meta_max)
+    meta_buf = jnp.where(idx[None, :] < meta_len[:, None],
+                         jnp.take_along_axis(
+                             stream, jnp.minimum(idx[None, :], s - 1), axis=1),
+                         0)
+    plain = jnp.bitwise_xor(stream, keystream.astype(stream.dtype))
+    t = jnp.arange(s)
+    rel = t[None, :] - meta_len[:, None]
+    valid = (rel >= 0) & (t[None, :] < total_len[:, None])
+    pg = jnp.clip(rel // page, 0, pps - 1)
+    dest_page = jnp.take_along_axis(tables, pg, axis=1)
+    dest_off = rel % page
+    flat_dest = jnp.where(valid & (dest_page >= 0),
+                          dest_page * page + dest_off, p_ * page)
+    new_pool = pool.reshape(-1).at[flat_dest.reshape(-1)].set(
+        plain.reshape(-1).astype(pool.dtype), mode="drop").reshape(p_, page)
+    return meta_buf, new_pool
+
+
 def mlstm_scan_ref(q, k, v, log_i, log_f):
     """Sequential mLSTM oracle. q/k/v [B, H, S, dh]; gates [B, H, S].
     Returns h [B, H, S, dh]."""

@@ -25,6 +25,15 @@ pool-sized copy at all** (no ``concatenate``; the donation stays a true
 in-place update). The legacy mode (``reserved_scratch=False``) appends a
 dummy row per call for callers that still hold a scratch-less pool.
 
+**kTLS-analogue hw mode**: an optional ``keystream`` operand (same [B, S]
+layout as the stream) is XORed into the payload tokens *inside* the
+anchoring step — the NIC-inline decrypt, fused into the same single pass
+(paper §B.1: hardware kTLS adds zero extra passes). The metadata step
+stays raw: record headers are plaintext and inner-metadata decryption
+happens host-side during the user copy. Plaintext calls (``keystream
+None``) compile exactly the pre-crypto kernel — no extra operand, no
+extra VMEM traffic. Matches ``kernels.ref.selective_copy_crypto_ref``.
+
 Layout: stream [B, S] int32; pool [P(+1), page] int32; tables [B, pps].
 """
 from __future__ import annotations
@@ -37,8 +46,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _fused_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, pool_in_ref,
-                  meta_ref, pool_ref, *, page: int, s: int, meta_max: int):
+def _fused_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, *rest,
+                  page: int, s: int, meta_max: int, has_ks: bool):
+    if has_ks:
+        ks_ref, pool_in_ref, meta_ref, pool_ref = rest
+    else:
+        pool_in_ref, meta_ref, pool_ref = rest
     b = pl.program_id(0)
     j = pl.program_id(1)   # 0 = metadata step; j >= 1 anchors payload page j-1
     mlen = mlen_ref[b]
@@ -58,6 +71,10 @@ def _fused_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, pool_in_ref,
     # row index as a size-1 dslice: older pallas interpret-mode discharge
     # rules reject plain-int indices mixed with dynamic slices
     toks = pl.load(stream_ref, (pl.dslice(0, 1), pl.dslice(start, page)))[0]
+    if has_ks:
+        # hw-kTLS: decrypt on the fly, inside the one placement pass
+        kst = pl.load(ks_ref, (pl.dslice(0, 1), pl.dslice(start, page)))[0]
+        toks = jnp.bitwise_xor(toks, kst)
     rel = jj * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
     valid = (j > 0) & (pid >= 0) & (rel + mlen < tlen)
     # always write the block: invalid lanes / skipped pages pass the original
@@ -78,9 +95,11 @@ def selective_copy(
     meta_max: int,
     interpret: bool = False,
     reserved_scratch: bool = False,
+    keystream: jax.Array = None,   # [B, S] int32 (hw-kTLS) or None
 ):
     """Returns (meta_buf [B, meta_max], new_pool). Matches
-    kernels.ref.selective_copy_ref.
+    kernels.ref.selective_copy_ref (selective_copy_crypto_ref when a
+    ``keystream`` is supplied).
 
     With ``reserved_scratch=True`` the pool's LAST row is the scratch page
     reserved by :attr:`AnchorPool.scratch_page` at allocation time: nothing
@@ -91,6 +110,9 @@ def selective_copy(
     page = pool.shape[1]
     pps = tables.shape[1]
     assert s % page == 0, (s, page)
+    has_ks = keystream is not None
+    if has_ks:
+        assert keystream.shape == stream.shape, (keystream.shape, stream.shape)
 
     if reserved_scratch:
         pool_ext = pool                     # last row IS the reserved scratch
@@ -108,15 +130,22 @@ def selective_copy(
         pid = tbl[b_, jnp.maximum(j - 1, 0)]
         return (jnp.where((j == 0) | (pid < 0), scratch, pid), 0)
 
+    stream_spec = pl.BlockSpec((1, s), lambda b_, j, ml, tl, tbl: (b_, 0))
+    in_specs = [stream_spec]
+    operands = [stream]
+    if has_ks:
+        in_specs.append(stream_spec)        # keystream rides the stream layout
+        operands.append(keystream)
+    in_specs.append(pl.BlockSpec((1, page), _pool_index))
+    operands.append(pool_ext)
+
     meta, new_pool = pl.pallas_call(
-        functools.partial(_fused_kernel, page=page, s=s, meta_max=meta_max),
+        functools.partial(_fused_kernel, page=page, s=s, meta_max=meta_max,
+                          has_ks=has_ks),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(b, 1 + pps),
-            in_specs=[
-                pl.BlockSpec((1, s), lambda b_, j, ml, tl, tbl: (b_, 0)),
-                pl.BlockSpec((1, page), _pool_index),
-            ],
+            in_specs=in_specs,
             out_specs=[
                 pl.BlockSpec((1, meta_max), lambda b_, j, ml, tl, tbl: (b_, 0)),
                 pl.BlockSpec((1, page), _pool_index),
@@ -126,9 +155,11 @@ def selective_copy(
             jax.ShapeDtypeStruct((b, meta_max), stream.dtype),
             jax.ShapeDtypeStruct((p_ext, page), pool.dtype),
         ],
-        input_output_aliases={4: 1},  # pool donated -> in-place anchoring
+        # pool donated -> in-place anchoring (operand index counts the 3
+        # scalar-prefetch args, the stream, and the optional keystream)
+        input_output_aliases={(5 if has_ks else 4): 1},
         interpret=interpret,
-    )(meta_len, total_len, tables, stream, pool_ext)
+    )(meta_len, total_len, tables, *operands)
     if reserved_scratch:
         return meta, new_pool
     return meta, new_pool[: p_ext - 1]

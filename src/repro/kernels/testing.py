@@ -40,6 +40,21 @@ def selcopy_case(rng: np.random.Generator, b: int = 2, page: int = 8,
             jnp.array(total_len, jnp.int32), pool, jnp.array(tables))
 
 
+def selcopy_crypto_case(rng: np.random.Generator, b: int = 2, page: int = 8,
+                        pps: int = 4, meta_max: int = 16) -> Tuple:
+    """A :func:`selcopy_case` plus a [B, S] int32 keystream operand — 31-bit
+    values on the payload lanes (the kTLS-analogue hw mode), zero elsewhere,
+    exactly as the batched datapath builds it."""
+    stream, ml, tl, pool, tables = selcopy_case(rng, b=b, page=page, pps=pps,
+                                                meta_max=meta_max)
+    s = stream.shape[1]
+    ks = rng.integers(0, 1 << 31, (b, s)).astype(np.int32)
+    pos = np.arange(s)[None, :]
+    payload_lane = (pos >= np.array(ml)[:, None]) & (pos < np.array(tl)[:, None])
+    ks = np.where(payload_lane, ks, 0).astype(np.int32)
+    return stream, ml, tl, pool, tables, jnp.array(ks)
+
+
 def jaxpr_primitives(jaxpr) -> List[str]:
     """All primitive names in a jaxpr, recursing through call/closed-call
     params (pjit bodies etc.)."""

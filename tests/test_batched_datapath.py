@@ -273,6 +273,145 @@ def test_runtime_batched_matches_scalar_end_to_end():
             assert np.array_equal(a, b), kw
 
 
+def _shared_dst_scenario(batched, *, budgets):
+    """Two messages routed to ONE backend socket in a single round."""
+    stack = _stack()
+    shared = stack.socket("length-prefixed")
+    srcs = [stack.socket("length-prefixed") for _ in range(2)]
+    bufs = []
+    rng = np.random.default_rng(3)
+    for s in srcs:
+        s.deliver(build_message(np.arange(3), rng.integers(1000, 2000, 40)))
+        bufs.append(s.recv(1 << 20)[0])
+    sends = list(zip(srcs, [shared, shared], bufs, budgets))
+    if batched:
+        out = stack.forward_batch(sends)
+    else:
+        out = []
+        for s, d, b, bud in sends:
+            try:
+                out.append(("ok", s.forward(d, b, budget=bud)))
+            except BlockingIOError:
+                out.append(("eagain", 0))
+    return out, stack.counters.snapshot(), shared.pending_send is not None
+
+
+def test_forward_batch_shared_destination_matches_scalar():
+    """Regression (stale-peek bug): two sends in one round targeting the
+    same destination must produce exactly the scalar outcomes + counters —
+    EAGAIN when the first send truncates, sequential completion when it
+    does not."""
+    for budgets in ((20, 20), (None, 20), (None, None)):
+        s_out, s_snap, s_pend = _shared_dst_scenario(False, budgets=budgets)
+        b_out, b_snap, b_pend = _shared_dst_scenario(True, budgets=budgets)
+        assert s_out == b_out, budgets
+        assert s_snap == b_snap, budgets
+        assert s_pend == b_pend, budgets
+
+
+def test_forward_batch_multicast_release_matches_scalar():
+    """Regression: the same VPI forwarded to TWO destinations in one round.
+    The first transmit releases the entry; the second's peek is stale — it
+    must be re-evaluated at transmit time (scalar semantics: the dead VPI
+    rides the bypass path) instead of mis-sizing the pending message and
+    wedging the socket forever."""
+    def run(batched):
+        stack = _stack()
+        d1, d2 = stack.socket("length-prefixed"), stack.socket("length-prefixed")
+        src = stack.socket("length-prefixed")
+        src.deliver(build_message(np.arange(3), RNG.integers(1000, 2000, 40)))
+        buf, _ = src.recv(1 << 20)
+        if batched:
+            out = stack.forward_batch([(src, d1, buf, None),
+                                       (src, d2, buf, None)])
+        else:
+            out = [("ok", src.forward(d, buf)) for d in (d1, d2)]
+        return (out, stack.counters.snapshot(),
+                d1.pending_send is not None, d2.pending_send is not None)
+
+    scalar, batched = run(False), run(True)
+    assert scalar == batched
+    assert batched[3] is False     # the wedge: d2 stuck pending forever
+
+
+def test_recv_batch_inconsistent_machine_frees_pages():
+    """Regression: a machine that does not land in WRITE_VPI (impossible
+    unless a parser violates purity, but a bare assert used to leak the
+    freshly allocated pages) must hand the pages back and leave the socket
+    to the scalar path."""
+    from repro.core.state_machine import RxDecision, St
+
+    stack = _stack()
+    sock = stack.socket("length-prefixed")
+    sock.deliver(build_message(np.arange(4), RNG.integers(1000, 2000, 40)))
+    free_before = stack.alloc.free_pages
+    sm = sock.connection.rx_machine
+    orig = sm.on_recv
+    sm.on_recv = lambda *a, **k: RxDecision(St.METADATA_PARSED, copy_meta=0)
+    res = stack.recv_batch([sock])
+    assert res == {}                                   # not serviced
+    assert stack.alloc.free_pages == free_before       # nothing leaked
+    assert sm.state is St.DEFAULT                      # reset, ring untouched
+    sm.on_recv = orig
+    buf, n = sock.recv(1 << 20)                        # scalar path recovers
+    assert n == 3 + 4 + 40
+
+
+def test_recv_batch_device_overflow_falls_back_to_host():
+    """Regression: int64 tokens that do not fit the int32 device stream
+    used to truncate silently in the kernel impls — the round must bounce
+    to the int64-exact host scatter and count the event."""
+    stack = _stack()
+    big = stack.socket("length-prefixed")
+    huge = np.array([2 ** 40 + 5, -(2 ** 35), 2 ** 31, 7] * 4, np.int64)
+    big.deliver(build_message(np.arange(3), huge))
+    small = stack.socket("length-prefixed")
+    small.deliver(build_message(np.arange(4), RNG.integers(0, 9, 48)))
+    res = stack.recv_batch([big, small], impl="ref")
+    assert len(res) == 2                               # both serviced
+    assert stack.counters.device_fallbacks == 1
+    (pages, ln), = big.connection.anchored.values()
+    assert np.array_equal(stack.pool.read_payload(pages, ln), huge)
+    # an in-range round afterwards still uses the device plane (no sticky
+    # fallback) and the counter does not move
+    ok = stack.socket("length-prefixed")
+    ok.deliver(build_message(np.arange(4), RNG.integers(0, 9, 32)))
+    stack.recv_batch([ok], impl="ref")
+    assert stack.counters.device_fallbacks == 1
+
+
+def test_abort_transfer_restores_budget():
+    """§A.2/§A.3 regression: a transfer staged but never committed used to
+    leave the send-side budget raised forever; the egress failure path now
+    aborts it."""
+    alloc = AnchorPool(2, 8, 8)
+    pages = alloc.alloc_sequence(20)
+    staged = alloc.stage_transfer(pages)
+    assert alloc._budget_raise == len(staged)
+    alloc.abort_transfer(staged)
+    assert alloc._budget_raise == 0
+
+    # end to end: a payload compose that raises mid-handoff aborts the
+    # staging, and the same message transmits cleanly on retry
+    stack = _stack()
+    src, dst = stack.socket_pair("length-prefixed")
+    payload = RNG.integers(1000, 2000, 40)
+    src.deliver(build_message(np.arange(3), payload))
+    buf, _ = src.recv(1 << 20)
+    orig = stack.pool.read_payload
+    stack.pool.read_payload = lambda *a, **k: (_ for _ in ()).throw(
+        RuntimeError("compose failed"))
+    with pytest.raises(RuntimeError):
+        src.forward(dst, buf)
+    stack.pool.read_payload = orig
+    assert stack.alloc._budget_raise == 0              # aborted, not leaked
+    dst.connection.tx_machine.reset()                  # abandon the half-send
+    dst._pending = None
+    n = src.forward(dst, buf)
+    assert n == 3 + 3 + 40
+    assert np.array_equal(dst.tx_wire()[-40:], payload)
+
+
 def test_forward_batch_eagain_on_shared_backend():
     stack = _stack()
     shared = stack.socket("length-prefixed")
