@@ -1,6 +1,7 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
 import os
 import time
 from typing import Callable, Dict, List, Optional, Tuple
@@ -44,12 +45,15 @@ BUILDERS = {
 }
 
 
-def stream_stack(pages: int = 4096, page_size: int = 16) -> LibraStack:
+def stream_stack(pages: int = 4096, page_size: int = 16,
+                 device_pool: bool = True) -> LibraStack:
     return LibraStack(n_shards=4, pages_per_shard=pages // 4,
-                      page_size=page_size, secret=b"bench")
+                      page_size=page_size, secret=b"bench",
+                      device_pool=device_pool)
 
 
 def run_stream(*, pages: int = 8192, page_size: int = 16,
+               device_pool: bool = True,
                **load_kw) -> Tuple[LibraStack, ProxyRuntime, int, float]:
     """Build a stack, pre-load a proxy workload (see :func:`load_proxy`),
     time a full run, shut down, and assert the pool drained. The shared
@@ -59,7 +63,8 @@ def run_stream(*, pages: int = 8192, page_size: int = 16,
     (``n_conns * n_msgs``) so msgs/s is comparable across parser mixes;
     chunked flows forward several frames per application message
     (``rt.messages_forwarded()`` counts frames)."""
-    stack = stream_stack(pages=pages, page_size=page_size)
+    stack = stream_stack(pages=pages, page_size=page_size,
+                         device_pool=device_pool)
     rt = load_proxy(stack, **load_kw)
     t0 = time.perf_counter()
     rt.run()
@@ -120,5 +125,50 @@ def prompts_for(vocab: int, n: int, length: int, seed: int = 0):
     return [rng.integers(1, vocab - 1, length) for _ in range(n)]
 
 
+# -- machine-readable trajectory artifacts (BENCH_<name>.json) ---------------
+
+_ARTIFACT_ROWS: List[dict] = []
+
+
+def record(name: str, **fields) -> None:
+    """Add a structured result row for the running bench module.
+    ``benchmarks/run.py`` collects the rows into a ``BENCH_<module>.json``
+    artifact after the module finishes, so the perf trajectory (msgs/s,
+    copy-counter snapshots, impl, transfer telemetry) stays machine-
+    readable across PRs. Benches with richer data than the CSV line call
+    this directly; every :func:`csv` line is recorded automatically."""
+    _ARTIFACT_ROWS.append({"name": name, **fields})
+
+
+def counters_fields(stack) -> Dict[str, int]:
+    """The CopyCounters snapshot + pool transfer telemetry of a stack as
+    flat JSON-friendly fields (for :func:`record`)."""
+    c = stack.counters
+    out = {"meta_copied": c.meta_copied, "full_copied": c.full_copied,
+           "anchored": c.anchored, "zero_copied": c.zero_copied,
+           "vpi_injected": c.vpi_injected, "allocs": c.allocs,
+           "crypto_copied": c.crypto_copied,
+           "device_fallbacks": c.device_fallbacks}
+    out.update({f"xfer_{k}": v for k, v in stack.pool.xfer.items()})
+    return out
+
+
+def flush_artifact(bench: str, out_dir: str) -> Optional[str]:
+    """Write (and clear) the collected rows as ``BENCH_<bench>.json``.
+    Returns the path, or None when the module recorded nothing."""
+    global _ARTIFACT_ROWS
+    rows, _ARTIFACT_ROWS = _ARTIFACT_ROWS, []
+    if not rows:
+        return None
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "unix_time": time.time(),
+                   "smoke": is_smoke(), "rows": rows},
+                  f, indent=1, default=str)
+    return path
+
+
 def csv(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
+    record(name, us_per_call=float(us), derived=derived)

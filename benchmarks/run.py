@@ -1,7 +1,13 @@
 """Benchmark harness: one module per paper table/figure, plus the roofline
 summary derived from the dry-run artifacts.
 
-Prints ``name,us_per_call,derived`` CSV lines per benchmark.
+Prints ``name,us_per_call,derived`` CSV lines per benchmark, and writes
+each module's structured rows to ``results/bench/BENCH_<name>.json`` (via
+``benchmarks.common.record``/``flush_artifact``) so the perf trajectory —
+msgs/s, copy-counter snapshots, impl, transfer telemetry — is machine-
+readable across PRs. Committing the refreshed artifacts with a PR is the
+intended convention (they ARE the trajectory); treat diffs in them as
+perf data, not noise.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig6]
 """
@@ -76,6 +82,11 @@ def main() -> None:
         os.environ["LIBRA_BENCH_SMOKE"] = "1"
         benches = SMOKE_BENCHES
 
+    from benchmarks import common
+
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    artifact_dir = os.path.join(here, "results", "bench")
+
     failures = 0
     for name, mod in benches:
         if args.only and args.only not in name:
@@ -86,8 +97,13 @@ def main() -> None:
             importlib.import_module(mod).main()
         except Exception as e:  # noqa: BLE001
             failures += 1
+            common.record("ERROR", error=f"{type(e).__name__}: {e}")
             print(f"{name},0.0,ERROR {type(e).__name__}: {e}")
-        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        path = common.flush_artifact(name, artifact_dir)
+        took = time.time() - t0
+        print(f"# {name} done in {took:.1f}s"
+              + (f" -> {os.path.relpath(path, here)}" if path else ""),
+              flush=True)
     if not args.smoke and (not args.only or "roofline" in (args.only or "")):
         print("# --- roofline (from dry-run artifacts) ---")
         roofline_summary()

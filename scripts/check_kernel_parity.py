@@ -1,15 +1,18 @@
-"""CI gate: fused selective-copy kernel vs the pure-jnp oracle.
+"""CI gate: the fused selective-copy/gather kernels vs the pure-jnp
+oracles.
 
-Two checks (seconds-fast, CPU-only), sharing case/walk machinery with
+Checks (seconds-fast, CPU-only), sharing case/walk machinery with
 tests/test_kernels.py via :mod:`repro.kernels.testing`:
 
-1. **Interpret-mode parity** — the fused Pallas kernel body (executed on
-   CPU via ``interpret=True``) must match ``kernels.ref.selective_copy_ref``
-   bit-exactly across a shape/boundary sweep, in both legacy and
-   reserved-scratch modes.
-2. **Zero-realloc hot path** — the ``reserved_scratch=True`` jaxpr must
-   contain no ``concatenate``/``pad`` (the pre-fusion implementation copied
-   the whole pool per call to append a dummy row).
+1. **Interpret-mode parity** — the fused Pallas kernel bodies (executed on
+   CPU via ``interpret=True``) must match their ``kernels.ref`` oracles
+   bit-exactly across a shape/boundary sweep: ingress ``selective_copy``
+   (legacy + reserved-scratch modes, plus the hw-kTLS ``keystream``
+   operand) and the egress ``selective_gather`` (± keystream).
+2. **Zero-realloc / in-place hot paths** — neither kernel's jaxpr may
+   contain ``concatenate``/``pad`` (a pool-sized copy): the ingress kernel
+   runs over the reserved scratch row, the gather reads the resident pool
+   where it lives.
 
 Run: ``PYTHONPATH=src python scripts/check_kernel_parity.py``
 """
@@ -22,12 +25,13 @@ import jax
 import numpy as np
 
 from repro.kernels import ref as R
-from repro.kernels.selective_copy import selective_copy
+from repro.kernels.selective_copy import selective_copy, selective_gather
 from repro.kernels.testing import (
     POOL_COPY_PRIMS,
     jaxpr_primitives,
     selcopy_case,
     selcopy_crypto_case,
+    selgather_case,
 )
 
 
@@ -71,6 +75,34 @@ def check_crypto_parity() -> None:
     print("parity: keystream operand == crypto oracle (bit-exact)")
 
 
+def check_gather_parity() -> None:
+    """The egress gather kernel (resident-pool readback, with and without
+    the TX keystream operand) vs ``selective_gather_ref``, bit-exact."""
+    rng = np.random.default_rng(44)
+    for b, page, pps in [(1, 8, 2), (2, 8, 4), (3, 16, 4), (2, 16, 3)]:
+        pool, tables, lengths, ks = selgather_case(rng, b=b, page=page,
+                                                   pps=pps)
+        for k in (None, ks):
+            got = selective_gather(pool, tables, lengths, interpret=True,
+                                   keystream=k)
+            want = R.selective_gather_ref(pool, tables, lengths, k)
+            assert np.array_equal(np.array(got), np.array(want)), \
+                (b, page, pps, k is not None, "gather")
+    print("parity: egress gather == oracle (bit-exact, +keystream)")
+
+
+def check_gather_no_pool_copy() -> None:
+    pool, tables, lengths, ks = selgather_case(np.random.default_rng(8))
+    for k in (None, ks):
+        fn = functools.partial(selective_gather, interpret=True, keystream=k)
+        names = jaxpr_primitives(jax.make_jaxpr(fn)(pool, tables,
+                                                    lengths).jaxpr)
+        bad = set(names) & set(POOL_COPY_PRIMS)
+        assert not bad, f"pool-sized copy in the gather hot path: {bad}"
+        assert names.count("pallas_call") == 1
+    print("zero-copy: gather jaxpr reads the resident pool in place")
+
+
 def check_no_pool_copy() -> None:
     stream, ml, tl, pool, tables = selcopy_case(np.random.default_rng(7))
     fn = functools.partial(selective_copy, meta_max=16, interpret=True,
@@ -91,6 +123,8 @@ def check_no_pool_copy() -> None:
 if __name__ == "__main__":
     check_parity()
     check_crypto_parity()
+    check_gather_parity()
     check_no_pool_copy()
+    check_gather_no_pool_copy()
     print("check_kernel_parity: OK")
     sys.exit(0)

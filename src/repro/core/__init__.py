@@ -46,6 +46,7 @@ from repro.core.crypto import (
     seal_record,
     seal_stream,
 )
+from repro.core.device_pool import DevicePool, DeviceRangeError
 from repro.core.egress import expire_teardowns, libra_close, libra_send
 from repro.core.ingress import libra_recv
 from repro.core.parser import (
@@ -80,7 +81,8 @@ __all__ = [
     "AnchorPool", "PageRef", "PoolExhausted",
     "VpiRegistry", "VpiEntry", "VPI_BYTES",
     "RxStateMachine", "TxStateMachine", "St",
-    "Connection", "TokenPool", "CopyCounters", "RxRing",
+    "Connection", "TokenPool", "DevicePool", "DeviceRangeError",
+    "CopyCounters", "RxRing",
     # policy
     "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",

@@ -110,25 +110,34 @@ class AnchorPool:
         # biased to the fullest freelist to keep shards balanced
         return max(range(self.n_shards), key=lambda s: len(self._free[s]))
 
+    def _take_page(self, shard: int, base_pos: int) -> PageRef:
+        """Unchecked single-page pop — the ONE copy of the placement
+        policy (preferred shard, else fullest freelist) shared by
+        alloc_page and alloc_batch. The caller has already verified a
+        free page exists somewhere."""
+        if not self._free[shard]:
+            shard = max(range(self.n_shards),
+                        key=lambda s: len(self._free[s]))
+        pid = self._free[shard].pop()
+        self._refcount[(shard, pid)] = 1
+        return PageRef(shard, pid, base_pos)
+
     def alloc_page(self, base_pos: int, shard: Optional[int] = None) -> PageRef:
         if shard is None:
             shard = self._pick_shard()
-        if not self._free[shard]:
-            # try any shard before giving up (stripes stay roughly balanced)
-            candidates = [s for s in range(self.n_shards) if self._free[s]]
-            if not candidates:
-                raise PoolExhausted()
-            shard = max(candidates, key=lambda s: len(self._free[s]))
-        pid = self._free[shard].pop()
-        self._refcount[(shard, pid)] = 1
+        if self.free_pages == 0:
+            raise PoolExhausted()
+        pg = self._take_page(shard, base_pos)
         self.accounted_pages += 1
         self.stats["allocs"] += 1
-        return PageRef(shard, pid, base_pos)
+        return pg
 
     def alloc_sequence(self, seq_len: int, striped: bool = True) -> List[PageRef]:
         """Allocate pages for a sequence of ``seq_len`` tokens, striping
-        page p onto shard p % n_shards (flash-decode locality layout)."""
-        n = -(-max(seq_len, 1) // self.page_size)
+        page p onto shard p % n_shards (flash-decode locality layout).
+        A zero-length sequence owns no pages (nothing to anchor — it must
+        not consume a page of pool budget)."""
+        n = -(-max(seq_len, 0) // self.page_size)
         if not self.can_admit(n):
             self.stats["fallbacks"] += 1
             raise PoolExhausted()
@@ -144,6 +153,44 @@ class AnchorPool:
             self.stats["fallbacks"] += 1
             raise
         return pages
+
+    def alloc_batch(self, sizes: Sequence[int]) -> List[Optional[List[PageRef]]]:
+        """Bulk page allocation for one batched round: allocate pages for
+        every sequence of ``sizes`` in a single pass over the freelists
+        (no per-item call/exception machinery on the hot path).
+
+        Admission is greedy in order — an item that cannot be admitted
+        (per-sequence §A.1 cap, §A.3 budget, or pool exhaustion) yields
+        ``None`` in its slot (that message falls back to the scalar path)
+        without disturbing the items around it. Placement is identical to
+        per-item :meth:`alloc_sequence` calls in the same order, so batched
+        and scalar schedules agree on the pool layout byte-for-byte."""
+        out: List[Optional[List[PageRef]]] = []
+        allocs = 0
+        for seq_len in sizes:
+            n = -(-max(seq_len, 0) // self.page_size)
+            if not self.can_admit(n):
+                self.stats["fallbacks"] += 1
+                out.append(None)
+                continue
+            pages = [self._take_page(p % self.n_shards, p * self.page_size)
+                     for p in range(n)]
+            self.accounted_pages += n
+            allocs += n
+            out.append(pages)
+        self.stats["allocs"] += allocs
+        return out
+
+    def free_batch(self, seqs: Sequence[Optional[Sequence[PageRef]]]) -> int:
+        """Bulk refcount-release for a round's page lists (``None`` entries
+        are skipped). Returns the number of page references released."""
+        freed = 0
+        for pages in seqs:
+            if not pages:
+                continue
+            self.free_pages_list(pages)
+            freed += len(pages)
+        return freed
 
     # -- refcounts / free -----------------------------------------------------
     def retain(self, pages: Sequence[PageRef]) -> None:
@@ -238,20 +285,24 @@ class AnchorPool:
         page_size: int,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Per-request (write_shard, write_slot) for appending at
-        ``positions[i]`` — the page covering that position must exist."""
+        ``positions[i]`` — exactly ONE page of the sequence must cover that
+        position. Overlapping pages are a corrupted table (two pages would
+        both claim the write) and assert instead of silently resolving
+        last-match-wins."""
         b = len(seqs)
         wsh = np.zeros((b,), np.int32)
         wsl = np.zeros((b,), np.int32)
         for i, (pages, pos) in enumerate(zip(seqs, positions)):
             slot_ctr = [0] * n_shards
-            found = False
+            matches = 0
             for pg in pages:
                 s = slot_ctr[pg.shard]
                 slot_ctr[pg.shard] += 1
                 if pg.base_pos <= pos < pg.base_pos + page_size:
                     wsh[i], wsl[i] = pg.shard, s
-                    found = True
-            assert found, (i, pos, [p.base_pos for p in pages])
+                    matches += 1
+            assert matches == 1, \
+                (i, pos, matches, [p.base_pos for p in pages])
         return wsh, wsl
 
     def token_coords(

@@ -115,6 +115,11 @@ class DelimiterParser:
         if len(window) < end + 1:
             return ParseResult(False, need_more=True)
         payload_len = int(window[end])
+        if payload_len < 0:
+            # corrupt/hostile content-length: a negative value would flow
+            # into the RX machine as a negative skip_payload and rewind the
+            # ring (re-delivering stream bytes) — unparseable, full copy
+            return ParseResult(False)
         return ParseResult(True, meta_len=end + 1, payload_len=payload_len,
                            consumed=end + 1)
 
@@ -133,6 +138,10 @@ class ChunkedParser:
         if int(window[0]) != CHUNK_MAGIC:
             return ParseResult(False)
         clen = int(window[1])
+        if clen < 0:
+            # hostile chunk length: same negative-rewind hazard as the
+            # delimiter parser — reject instead of passing it downstream
+            return ParseResult(False)
         return ParseResult(True, meta_len=2, payload_len=clen, consumed=2)
 
 

@@ -274,16 +274,21 @@ class ProxyRuntime:
 
     def __init__(self, stack: LibraStack, *, scheduler: str = "round-robin",
                  tick_every: int = 16, batched: bool = False,
-                 batch_impl: str = "host", batch_tile: int = 64):
+                 batch_impl: str = "host",
+                 batch_tile: Optional[int] = None):
         assert scheduler in self.SCHEDULERS, scheduler
         self.stack = stack
         self.scheduler = scheduler
         self.tick_every = tick_every
         self.batched = batched
-        self.batch_impl = batch_impl   # recv_batch data-plane impl
+        self.batch_impl = batch_impl   # recv_batch/forward_batch data plane
         # channels fused per recv/forward pass: one round is processed in
         # tiles so a tile's anchored pages are transmitted while still
-        # cache-hot (0 = whole round in one pass)
+        # cache-hot. None (default) = adaptive — the tile is sized each
+        # round from the ready set's live footprint (message pages ×
+        # page_size vs the pool's cache budget), so tiny messages fuse by
+        # the hundred while page-heavy rounds fall back to small tiles;
+        # an int pins the tile (0 = whole round in one pass)
         self.batch_tile = batch_tile
         self.channels: List[ProxyChannel] = []
         self.rounds = 0
@@ -349,10 +354,32 @@ class ProxyRuntime:
                 batch.append(ch)
         # one fused recv/forward pass per tile: a tile's anchored pages are
         # forwarded while still cache-hot instead of after the whole round
-        tile = self.batch_tile if self.batch_tile > 0 else len(batch)
-        for i in range(0, len(batch), max(tile, 1)):
+        if self.batch_tile is None:
+            tile = self._adaptive_tile(batch)
+        else:
+            tile = self.batch_tile if self.batch_tile > 0 else len(batch)
+        tile = max(tile, 1)
+        for i in range(0, len(batch), tile):
             progressed += self._service_tile(batch[i : i + tile])
         return progressed
+
+    def _adaptive_tile(self, batch: List[ProxyChannel]) -> int:
+        """Tile size from the round's live footprint, via the pool's one
+        footprint→tile policy (:meth:`TokenPool.tile_for_footprint`), so
+        round tiling and the pool's internal scatter/gather tiling never
+        desynchronize. Uses the memoised parse results, so sizing costs no
+        extra window scans."""
+        page = self.stack.alloc.page_size
+        pages = n = 0
+        for ch in batch:
+            res = ch.src.parse_pending()
+            if res.ok and res.payload_len > 0:
+                pages += -(-res.payload_len // page)
+                n += 1
+        if n == 0:
+            return max(len(batch), 1)
+        return self.stack.pool.tile_for_footprint(pages, n,
+                                                  cap=max(len(batch), 1))
 
     def _service_tile(self, batch: List[ProxyChannel]) -> int:
         if not batch:
@@ -397,7 +424,7 @@ class ProxyRuntime:
             senders.append(ch)
         if sends:
             t1 = time.perf_counter()
-            outcomes = self.stack.forward_batch(sends)
+            outcomes = self.stack.forward_batch(sends, impl=self.batch_impl)
             dp_elapsed += time.perf_counter() - t1
             for (ch, (_src, dst, out, _b), (status, n)) in zip(
                     senders, sends, outcomes):

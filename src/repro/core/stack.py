@@ -21,8 +21,9 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
+from repro.core.anchor_pool import AnchorPool, PageRef
 from repro.core.crypto import REC_HEADER, CryptoRecordParser, keystream_batch
+from repro.core.device_pool import DevicePool, DeviceRangeError
 from repro.core.egress import expire_teardowns
 from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolicy
 from repro.core.socket import Events, LibraSocket
@@ -64,10 +65,17 @@ class LibraStack:
                  grace_ticks: int = 5, secret: Optional[bytes] = None,
                  alloc: Optional[AnchorPool] = None,
                  registry: Optional[VpiRegistry] = None,
-                 parsers: Optional[Dict[str, type]] = None):
+                 parsers: Optional[Dict[str, type]] = None,
+                 device_pool: bool = True):
         self.alloc = alloc or AnchorPool(n_shards, pages_per_shard, page_size,
                                          max_pages_per_seq=max_pages_per_seq)
-        self.pool = TokenPool(self.alloc)
+        # device_pool=True (default): the payload pool stays resident on the
+        # device across batched rounds (dirty-row-tracked host mirror for the
+        # scalar paths — residency itself is lazy, so host-only workloads pay
+        # nothing). device_pool=False keeps the legacy host pool that bounces
+        # the whole pool per device-impl round (pool_syncs telemetry).
+        self.pool = (DevicePool(self.alloc) if device_pool
+                     else TokenPool(self.alloc))
         self.registry = registry or VpiRegistry(secret=secret,
                                                 grace_ticks=grace_ticks)
         self.counters = CopyCounters()
@@ -189,8 +197,12 @@ class LibraStack:
         Any other value is forwarded to :func:`repro.kernels.ops.selective_copy`
         (``'auto'``/``'ref'``/``'interpret'``/``'pallas'``): the round is
         flattened into one ``[B, S]`` int32 batch and the fused kernel runs
-        over the pool's reserved scratch row (on TPU the donation keeps the
-        device pool in place; the host repro pays one sync copy-back).
+        over the pool's reserved scratch row. With the default
+        :class:`DevicePool` the pool is **resident across rounds** — only
+        the round's O(batch) operands cross the host/device boundary and
+        nothing syncs back (rows materialize lazily for scalar readers);
+        the legacy host pool (``device_pool=False``) pays one whole-pool
+        bounce per round (``pool.xfer['pool_syncs']``).
 
         ``buf_len`` is one size for all sockets or a per-fd mapping.
         Returns ``{fd: (buffer, logical_len)}`` for the serviced sockets;
@@ -204,7 +216,7 @@ class LibraStack:
                 return buf_len.get(sock.fileno(), 1 << 20)
             return buf_len
 
-        items: List[_BatchItem] = []
+        cands: List[Tuple[LibraSocket, object, int]] = []
         for sock in socks:
             conn = sock.connection
             if conn.closed or conn.rx_drain_remaining > 0:
@@ -227,26 +239,45 @@ class LibraStack:
             if conn.rx_available() < parsed.meta_len + parsed.payload_len:
                 continue  # NIC DMA incomplete: never anchor holes
             bl = _bl(sock)
-            if bl < parsed.meta_len + 1:
-                continue  # cannot reach WRITE_VPI in one evaluation
-            try:
-                pages = self.alloc.alloc_sequence(parsed.payload_len)
-            except PoolExhausted:
+            if bl < parsed.meta_len + parsed.payload_len:
+                # the WHOLE logical message must fit the user buffer: a
+                # buf_len-capped round would hand back a truncated logical
+                # length and leave a FAST_PATH continuation straddling the
+                # batch/scalar boundary — scalar ``recv`` owns truncated
+                # delivery end to end (§3.3), the batch services only
+                # complete messages (every result below is machine-complete)
+                continue
+            cands.append((sock, parsed, bl))
+        if not cands:
+            return {}
+
+        # ONE freelist pass allocates the whole round (placement identical
+        # to per-item alloc_sequence calls, so the pool layout — and every
+        # downstream byte — matches the scalar schedule exactly)
+        page_lists = self.alloc.alloc_batch(
+            [parsed.payload_len for _, parsed, _ in cands])
+        items: List[_BatchItem] = []
+        leaked: List[List[PageRef]] = []
+        for (sock, parsed, bl), pages in zip(cands, page_lists):
+            if pages is None:
                 continue  # §A.1 overflow is the scalar path's business
+            sm = sock.connection.rx_machine
             # drive the existing state machine: DEFAULT -> ... -> WRITE_VPI
-            decision = sm.on_recv(conn.rx_window(sm.parser.lookahead), bl,
-                                  parsed=parsed)
+            decision = sm.on_recv(sock.connection.rx_window(sm.parser.lookahead),
+                                  bl, parsed=parsed)
             if decision.state is not St.WRITE_VPI:
                 # should be unreachable given the admission checks above,
                 # but a machine that lands anywhere else must not leak the
                 # pages we just allocated: hand everything back and let the
                 # scalar path re-evaluate the socket from a clean state
                 # (nothing has been consumed from the ring yet)
-                self.alloc.free_pages_list(pages)
+                leaked.append(pages)
                 sm.reset()
                 continue
             items.append(_BatchItem(sock, bl, decision.copy_meta,
                                     sm.payload_len, pages))
+        if leaked:
+            self.alloc.free_batch(leaked)
         if not items:
             return {}
 
@@ -287,12 +318,15 @@ class LibraStack:
             # the int64-exact host scatter instead and count the bounce
             self.counters.device_fallbacks += 1
             impl = "host"
+        if impl != "host" and not self._recv_batch_device(items, impl):
+            # the round's destination rows hold host-truth content that
+            # does not survive the int32 device dtype: int64-exact host path
+            self.counters.device_fallbacks += 1
+            impl = "host"
         if impl == "host":
             self.pool.write_payload_batch(
                 [(it.pages, it.payload) for it in items],
                 keystreams=[it.ks for it in items])
-        else:
-            self._recv_batch_device(items, impl)
 
         # -- scatter back through per-socket bookkeeping --------------------
         results: Dict[int, Tuple[np.ndarray, int]] = {}
@@ -311,19 +345,23 @@ class LibraStack:
             buf = np.concatenate(
                 [it.meta, np.array([VpiRegistry.to_token(vpi)], np.int64)])
             self.counters.vpi_injected += 1
-            logical = min(it.meta_len + it.payload_len, it.buf_len)
-            sm.on_payload_consumed(logical - it.meta_len)
+            # admission guaranteed logical room for the whole message, so
+            # the credit always completes the machine (scalar ``recv`` owns
+            # buf_len-truncated logical delivery)
+            logical = it.meta_len + it.payload_len
+            sm.on_payload_consumed(it.payload_len)
             self._note_anchor_owner(it.sock)
             results[it.sock.fileno()] = (buf, logical)
         return results
 
-    def _recv_batch_device(self, items: List[_BatchItem], impl: str) -> None:
+    def _recv_batch_device(self, items: List[_BatchItem], impl: str) -> bool:
         """Flatten the round into one [B, S] batch and run the fused
-        selective-copy kernel once over the pool + reserved scratch row.
-        hw-kTLS rows ship their RX keystream as the kernel's ``keystream``
-        operand, so decryption is fused into the payload placement."""
-        from repro.kernels import ops
-
+        selective-copy kernel once through the pool's device entry point
+        (resident :class:`DevicePool` by default: O(batch) up, nothing
+        back; legacy host pool: one whole-pool bounce). hw-kTLS rows ship
+        their RX keystream as the kernel's ``keystream`` operand, so
+        decryption is fused into the payload placement. Returns False when
+        the round must bounce to the int64-exact host scatter."""
         page = self.alloc.page_size
         b = len(items)
         pps = max(len(it.pages) for it in items)
@@ -348,31 +386,29 @@ class LibraStack:
                 ks[i, it.meta_len : msg] = it.ks
             for j, pg in enumerate(it.pages):
                 tables[i, j] = self.alloc.flat_pid(pg)
-        import jax.numpy as jnp
-
-        pool = self.pool.flat_with_scratch
-        new_meta, new_pool = ops.selective_copy(
-            stream, meta_len, total_len,
-            jnp.asarray(pool.astype(np.int32)), tables,
-            meta_max=meta_max, impl=impl, reserved_scratch=True,
-            keystream=ks)
-        del new_meta  # host buffers keep the int64-exact metadata
-        # sync back ONLY the rows this batch anchored: rows untouched by the
-        # kernel keep their int64-exact host content (and the copy stays
-        # O(batch), not O(pool)). On TPU the donation makes this a no-op.
-        touched = np.unique(tables[tables >= 0])
-        pool[touched] = np.asarray(new_pool)[touched]
+        try:
+            self.pool.anchor_batch_device(stream, meta_len, total_len,
+                                          tables, meta_max=meta_max,
+                                          impl=impl, keystream=ks)
+        except DeviceRangeError:
+            return False
+        return True
 
     def forward_batch(
         self,
         sends: Sequence[Tuple[Optional[LibraSocket], LibraSocket,
                               np.ndarray, Optional[int]]],
+        *,
+        impl: str = "host",
     ) -> List[Tuple[str, int]]:
         """Batched proxy forwarding: ``sends`` is a list of
         ``(src_sock, dst_sock, buf, budget)``. The anchored payloads of all
         FAST_PATH-eligible messages are fetched with ONE fused gather
-        (:meth:`TokenPool.read_payload_batch`) and handed to each socket's
-        normal transmit path, so counters, staging, partial-send resume and
+        (:meth:`TokenPool.read_payload_batch`, or — ``impl`` other than
+        ``'host'`` on the resident :class:`DevicePool` — the fused
+        :func:`~repro.kernels.ops.selective_gather` kernel reading the
+        anchored pages on-device) and handed to each socket's normal
+        transmit path, so counters, staging, partial-send resume and
         cross-datapath cleanup behave exactly as scalar ``forward``.
 
         Returns one ``(status, accepted)`` per send, in order:
@@ -420,8 +456,8 @@ class LibraStack:
                 for (i, (crypto, seq, imeta)), ks in zip(enc, kss):
                     crypto.stash_tx_meta_ks(seq, ks[:imeta])
                     keystreams[i] = ks[imeta:]
-            payloads = self.pool.read_payload_batch(
-                [g for _, g, _ in gather], keystreams=keystreams)
+            payloads = self._gather_payloads([g for _, g, _ in gather],
+                                             keystreams, impl)
             for (k, _, _), pv in zip(gather, payloads):
                 prefetch[k] = pv
         out: List[Tuple[str, int]] = []
@@ -443,6 +479,61 @@ class LibraStack:
                 continue
             out.append((SEND_OK, n))
         return out
+
+    def _gather_payloads(
+        self,
+        seqs: List[Tuple[List[PageRef], int]],
+        keystreams: List[Optional[np.ndarray]],
+        impl: str,
+    ) -> List[np.ndarray]:
+        """Fetch one round's anchored payloads: the fused device gather off
+        the resident pool when eligible, the host gather otherwise.
+        Byte-identical either way (the gather oracle mirrors
+        ``read_payload``); ineligible/bounced rounds stay int64-exact."""
+        page = self.alloc.page_size
+        if impl != "host" and isinstance(self.pool, DevicePool) and all(
+                all(pg.base_pos == j * page for j, pg in enumerate(pages))
+                for pages, _ in seqs):
+            # the kernel addresses payload position [j*page, (j+1)*page)
+            # through table slot j — only contiguously-anchored sequences
+            # (the allocator's invariant layout) are device-ELIGIBLE; a
+            # non-contiguous page list (exotic registry contents) is not a
+            # bounce and does not count a device_fallback, it simply never
+            # qualifies for the device plane
+            try:
+                return self._forward_batch_device(seqs, keystreams, impl)
+            except DeviceRangeError:
+                # a requested row holds host-truth tokens outside int32:
+                # the int64-exact host gather serves the round
+                self.counters.device_fallbacks += 1
+        return self.pool.read_payload_batch(seqs, keystreams=keystreams)
+
+    def _forward_batch_device(
+        self,
+        seqs: List[Tuple[List[PageRef], int]],
+        keystreams: List[Optional[np.ndarray]],
+        impl: str,
+    ) -> List[np.ndarray]:
+        """Flatten the round into [B, pps] tables + [B] lengths and run the
+        fused egress gather once against the resident device pool. TX
+        keystreams (payload-relative, 31-bit) ride the kernel's
+        ``keystream`` operand — NIC-inline encrypt, zero extra passes."""
+        page = self.alloc.page_size
+        b = len(seqs)
+        pps = max((len(pages) for pages, _ in seqs), default=1) or 1
+        tables = np.full((b, pps), -1, np.int32)
+        lengths = np.zeros((b,), np.int32)
+        ks = (np.zeros((b, pps * page), np.int32)
+              if any(k is not None for k in keystreams) else None)
+        for i, (pages, ln) in enumerate(seqs):
+            lengths[i] = ln
+            for j, pg in enumerate(pages):
+                tables[i, j] = self.alloc.flat_pid(pg)
+            if ks is not None and keystreams[i] is not None:
+                ks[i, :ln] = keystreams[i]
+        block = self.pool.gather_batch_device(tables, lengths, impl=impl,
+                                              keystream=ks)
+        return [block[i, :ln] for i, (_, ln) in enumerate(seqs)]
 
     # -- facade bookkeeping (called by LibraSocket) --------------------------
     def _note_anchor_owner(self, sock: LibraSocket) -> None:

@@ -15,9 +15,12 @@ Datapath invariants kept allocation-free:
   zero-copy views.
 * :class:`TokenPool` — payload placement/readback are single reshaped
   scatter/gather ops (no per-page Python loop), with batched variants that
-  fuse a whole recv/forward round into one indexed assignment. The pool
+  fuse a whole recv/forward round into one indexed assignment, tiled
+  adaptively by live footprint (:meth:`TokenPool.batch_tile`). The pool
   carries the one scratch row :attr:`AnchorPool.scratch_page` reserves so
-  the fused device kernel needs no per-call pool copy.
+  the fused device kernel needs no per-call pool copy. The device-resident
+  variant (:class:`repro.core.device_pool.DevicePool`, the stack default)
+  keeps the pool on the device across batched rounds.
 """
 from __future__ import annotations
 
@@ -121,8 +124,21 @@ class TokenPool:
         total = alloc.n_shards * alloc.pages_per_shard
         self._flat = np.zeros((total + 1, alloc.page_size), np.int64)
         # real pages view: writes through to the same storage
-        self.data = self._flat[:total].reshape(
+        self._data_view = self._flat[:total].reshape(
             alloc.n_shards, alloc.pages_per_shard, alloc.page_size)
+        # host<->device traffic telemetry (tokens). ``pool_syncs`` counts
+        # O(pool)-sized boundary crossings — the failure mode the resident
+        # :class:`~repro.core.device_pool.DevicePool` eliminates; this host
+        # pool pays one per device-impl round (see anchor_batch_device).
+        self.xfer: Dict[str, int] = {"h2d_tokens": 0, "d2h_tokens": 0,
+                                     "pool_syncs": 0, "device_rounds": 0,
+                                     "resident_init_tokens": 0}
+
+    @property
+    def data(self) -> np.ndarray:
+        """[n_shards, pages_per_shard, page] view of the host pool (writes
+        through to the same storage)."""
+        return self._data_view
 
     @property
     def flat_with_scratch(self) -> np.ndarray:
@@ -175,9 +191,32 @@ class TokenPool:
 
     # -- batched data plane (one fused pass per scheduling round) -----------
 
-    # messages fused per scatter/gather: big enough to amortize dispatch,
-    # small enough that the index temporaries stay cache-resident
-    BATCH_TILE = 64
+    #: bytes of cache one scatter/gather tile aims to stay inside: a tile's
+    #: live footprint (page values + the int32 index temporaries, ~16 bytes
+    #: per token) should remain L2-resident while it is built and consumed.
+    #: The tile size adapts to the round's actual message footprint instead
+    #: of a hardcoded message count (tiny messages fuse by the thousand,
+    #: page-heavy ones fall back to small tiles).
+    cache_budget = 1 << 20
+
+    def tile_for_footprint(self, n_pages: int, n_msgs: int,
+                           cap: int = 4096) -> int:
+        """The one footprint→tile policy (shared by the pool's internal
+        scatter/gather tiling and the runtime's round tiling): messages
+        per tile such that one tile's pages stay inside
+        :attr:`cache_budget` at ~16 bytes/token."""
+        if n_msgs == 0 or n_pages == 0:
+            return max(n_msgs, 1)
+        per_msg = max(n_pages / n_msgs, 1.0) * self.alloc.page_size * 16
+        return int(np.clip(self.cache_budget // per_msg, 1, cap))
+
+    def batch_tile(self, seqs: Sequence[Tuple[Sequence[PageRef], object]],
+                   ) -> int:
+        """Messages fused per scatter/gather tile, sized from the round's
+        live footprint (``pages × page_size`` per message vs
+        :attr:`cache_budget`)."""
+        return self.tile_for_footprint(
+            sum(len(pages) for pages, _ in seqs), len(seqs))
 
     def _batch_coords(self, seqs: Sequence[Tuple[Sequence[PageRef], int]],
                       ) -> Tuple[np.ndarray, np.ndarray]:
@@ -216,8 +255,9 @@ class TokenPool:
         pairs = [(pages, p, ks) for (pages, p), ks in zip(seqs, keystreams)
                  if len(p) and pages]
         flat = self._flat.reshape(-1)
-        for i in range(0, len(pairs), self.BATCH_TILE):
-            tile = pairs[i : i + self.BATCH_TILE]
+        tile_n = self.batch_tile([(pages, p) for pages, p, _ in pairs])
+        for i in range(0, len(pairs), tile_n):
+            tile = pairs[i : i + tile_n]
             dest, pos = self._batch_coords(
                 [(pages, len(p)) for pages, p, _ in tile])
             cat = np.concatenate([p for _, p, _ in tile])
@@ -240,9 +280,10 @@ class TokenPool:
             keystreams = [None] * len(seqs)
         flat = self._flat.reshape(-1)
         outs: List[np.ndarray] = []
-        for i in range(0, len(seqs), self.BATCH_TILE):
-            tile = list(seqs[i : i + self.BATCH_TILE])
-            kss = list(keystreams[i : i + self.BATCH_TILE])
+        tile_n = self.batch_tile(seqs)
+        for i in range(0, len(seqs), tile_n):
+            tile = list(seqs[i : i + tile_n])
+            kss = list(keystreams[i : i + tile_n])
             lens = [ln for _, ln in tile]
             out = np.zeros((sum(lens),), np.int64)
             if any(ln and pages for pages, ln in tile):
@@ -256,6 +297,41 @@ class TokenPool:
                 out[pos] = vals
             outs.extend(np.split(out, np.cumsum(lens)[:-1]))
         return outs
+
+    # -- device data plane (fused kernel entry points) -----------------------
+
+    def anchor_batch_device(self, stream: np.ndarray, meta_len: np.ndarray,
+                            total_len: np.ndarray, tables: np.ndarray, *,
+                            meta_max: int, impl: str,
+                            keystream: Optional[np.ndarray] = None) -> None:
+        """Run one batched ingress round through the fused selective-copy
+        kernel. This host-resident pool pays the legacy price the paper's
+        kernel-resident design exists to avoid: the WHOLE pool crosses the
+        host/device boundary up (``astype(int32)``) and the touched rows
+        sync back — one ``pool_syncs`` event per round. The resident
+        :class:`~repro.core.device_pool.DevicePool` overrides this with the
+        zero-O(pool) path."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops
+
+        pool = self.flat_with_scratch
+        dev = jnp.asarray(pool.astype(np.int32))
+        self.xfer["h2d_tokens"] += pool.size + stream.size + tables.size \
+            + (keystream.size if keystream is not None else 0)
+        new_meta, new_pool = ops.selective_copy(
+            stream, meta_len, total_len, dev, tables,
+            meta_max=meta_max, impl=impl, reserved_scratch=True,
+            keystream=keystream)
+        del new_meta  # host buffers keep the int64-exact metadata
+        # sync back ONLY the rows this batch anchored: rows untouched by the
+        # kernel keep their int64-exact host content
+        touched = np.unique(tables[tables >= 0])
+        host_pool = np.asarray(new_pool)
+        self.xfer["d2h_tokens"] += host_pool.size
+        pool[touched] = host_pool[touched]
+        self.xfer["pool_syncs"] += 1
+        self.xfer["device_rounds"] += 1
 
 
 @dataclasses.dataclass

@@ -17,6 +17,7 @@ from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
 from repro.kernels.paged_attention import paged_attention as _paged_pallas
 from repro.kernels.selective_copy import selective_copy as _selcopy_pallas
+from repro.kernels.selective_copy import selective_gather as _selgather_pallas
 
 
 def _on_tpu() -> bool:
@@ -72,6 +73,21 @@ def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
     return _selcopy_pallas(stream, meta_len, total_len, pool, tables,
                            meta_max=meta_max, interpret=(impl == "interpret"),
                            reserved_scratch=reserved_scratch, keystream=ks)
+
+
+def selective_gather(pool, tables, lengths, *, impl="auto", keystream=None):
+    """Egress mirror of :func:`selective_copy`: one fused gather of each
+    message's anchored payload out of the resident pool ([B, pps*page],
+    zero past the lengths). The pool's last row must be the reserved
+    scratch page (invalid table entries route there). ``keystream``
+    (payload-relative [B, pps*page] int32) fuses hw-kTLS TX encryption
+    into the gather."""
+    impl = _resolve(impl)
+    ks = None if keystream is None else jnp.asarray(keystream)
+    if impl == "ref":
+        return _ref.selective_gather_ref(pool, tables, lengths, ks)
+    return _selgather_pallas(pool, tables, lengths,
+                             interpret=(impl == "interpret"), keystream=ks)
 
 
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):

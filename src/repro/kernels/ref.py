@@ -146,6 +146,29 @@ def selective_copy_crypto_ref(
     return meta_buf, new_pool
 
 
+def selective_gather_ref(
+    pool: jax.Array,      # [P+1, page] anchored payload pages (+ scratch row)
+    tables: jax.Array,    # [B, pps] source page ids (-1 unused)
+    lengths: jax.Array,   # [B] payload lengths
+    keystream: Optional[jax.Array] = None,  # [B, pps*page] or None
+) -> jax.Array:
+    """TX-Prog data plane: gather each message's anchored payload out of
+    the pool in one pass. ``out[i, :lengths[i]]`` holds the payload (page
+    ``tables[i, j]`` supplies positions ``[j*page, (j+1)*page)``); lanes
+    past the length — and lanes of invalid (-1) table slots — are zero.
+    ``keystream`` (payload-relative) is XORed into the gathered tokens
+    inside the same pass (hw-kTLS NIC-inline TX encrypt)."""
+    p_, page = pool.shape
+    b, pps = tables.shape
+    out = pool[jnp.clip(tables, 0)].reshape(b, pps * page)
+    pos = jnp.arange(pps * page)
+    valid = (jnp.repeat(tables >= 0, page, axis=1)
+             & (pos[None, :] < lengths[:, None]))
+    if keystream is not None:
+        out = jnp.bitwise_xor(out, keystream.astype(out.dtype))
+    return jnp.where(valid, out, 0)
+
+
 def mlstm_scan_ref(q, k, v, log_i, log_f):
     """Sequential mLSTM oracle. q/k/v [B, H, S, dh]; gates [B, H, S].
     Returns h [B, H, S, dh]."""

@@ -1,4 +1,5 @@
-"""Selective-copy ingress Pallas TPU kernel (RX-Prog data plane).
+"""Selective-copy ingress + gather egress Pallas TPU kernels (the RX-Prog
+and TX-Prog data planes).
 
 One **fused** kernel performs both halves of the paper's ingress action in a
 single pass over the stream:
@@ -33,6 +34,13 @@ stays raw: record headers are plaintext and inner-metadata decryption
 happens host-side during the user copy. Plaintext calls (``keystream
 None``) compile exactly the pre-crypto kernel — no extra operand, no
 extra VMEM traffic. Matches ``kernels.ref.selective_copy_crypto_ref``.
+
+:func:`selective_gather` is the egress mirror: one fused pass reads each
+message's anchored pages back out of the **resident** pool (read-only, no
+donation, no pool-sized copy) into a dense [B, pps*page] payload block,
+with the same optional ``keystream`` operand fusing the hw-kTLS TX encrypt
+into the gather — together the two kernels close the batched datapath loop
+entirely on-device.
 
 Layout: stream [B, S] int32; pool [P(+1), page] int32; tables [B, pps].
 """
@@ -163,3 +171,77 @@ def selective_copy(
     if reserved_scratch:
         return meta, new_pool
     return meta, new_pool[: p_ext - 1]
+
+
+def _gather_kernel(len_ref, tables_ref, pool_ref, *rest,
+                   page: int, has_ks: bool):
+    if has_ks:
+        ks_ref, out_ref = rest
+    else:
+        (out_ref,) = rest
+    b = pl.program_id(0)
+    j = pl.program_id(1)   # output page slot j covers payload [j*page, ...)
+    pid = tables_ref[b, j]
+    ln = len_ref[b]
+    rel = j * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = (pid >= 0) & (rel < ln)
+    toks = pool_ref[0, :]
+    if has_ks:
+        # hw-kTLS TX: encrypt inline while consuming the anchored page —
+        # the same fused single pass as the ingress decrypt
+        toks = jnp.bitwise_xor(toks, ks_ref[0, :])
+    out_ref[0, :] = jnp.where(valid, toks, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def selective_gather(
+    pool: jax.Array,      # [P+1, page] int32; last row = reserved scratch
+    tables: jax.Array,    # [B, pps] int32 source page ids (-1 unused)
+    lengths: jax.Array,   # [B] int32 payload lengths
+    *,
+    interpret: bool = False,
+    keystream: jax.Array = None,   # [B, pps*page] int32 (hw-kTLS TX) or None
+):
+    """Egress half of the paper's data plane: gather each message's anchored
+    payload out of the resident pool in one fused pass — the TX-Prog mirror
+    of :func:`selective_copy`'s payload anchoring. Returns ``out [B,
+    pps*page]`` where ``out[i, :lengths[i]]`` is message ``i``'s payload
+    (page ``tables[i, j]`` supplies payload positions ``[j*page, (j+1)*
+    page)``) and every lane past the length is zero. The pool is read-only
+    (nothing is donated); invalid table entries (-1) are routed to the
+    reserved scratch row and masked, so no real page is ever touched by a
+    non-owner step and the call performs **no pool-sized copy**.
+
+    ``keystream`` (payload-relative, zeros past each length) is XORed into
+    the gathered tokens inside the same pass — NIC-inline TX encryption,
+    zero extra passes. Matches ``kernels.ref.selective_gather_ref``."""
+    p_ext, page = pool.shape
+    b, pps = tables.shape
+    scratch = p_ext - 1
+    has_ks = keystream is not None
+    if has_ks:
+        assert keystream.shape == (b, pps * page), \
+            (keystream.shape, (b, pps * page))
+
+    def _pool_index(b_, j, ln, tbl):
+        pid = tbl[b_, j]
+        return (jnp.where(pid < 0, scratch, pid), 0)
+
+    in_specs = [pl.BlockSpec((1, page), _pool_index)]
+    operands = [pool]
+    if has_ks:
+        in_specs.append(pl.BlockSpec((1, page), lambda b_, j, ln, tbl: (b_, j)))
+        operands.append(keystream)
+
+    out = pl.pallas_call(
+        functools.partial(_gather_kernel, page=page, has_ks=has_ks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, pps),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, page), lambda b_, j, ln, tbl: (b_, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, pps * page), pool.dtype),
+        interpret=interpret,
+    )(lengths, tables, *operands)
+    return out

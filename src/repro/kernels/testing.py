@@ -55,6 +55,31 @@ def selcopy_crypto_case(rng: np.random.Generator, b: int = 2, page: int = 8,
     return stream, ml, tl, pool, tables, jnp.array(ks)
 
 
+def selgather_case(rng: np.random.Generator, b: int = 2, page: int = 8,
+                   pps: int = 4, p_total: int = 0) -> Tuple:
+    """(pool_with_scratch, tables, lengths, keystream) for the egress
+    gather kernel: random page contents, random per-row lengths in
+    [0, pps*page], valid table prefixes, a payload-relative 31-bit
+    keystream zeroed past each length (exactly as forward_batch builds
+    it)."""
+    p_total = p_total or b * pps + 2
+    pool = jnp.array(rng.integers(1, 1000, (p_total + 1, page)), jnp.int32)
+    tables = np.full((b, pps), -1, np.int32)
+    lengths = []
+    ctr = 0
+    for i in range(b):
+        ln = int(rng.integers(0, pps * page + 1))
+        lengths.append(ln)
+        for j in range(-(-ln // page)):
+            tables[i, j] = ctr % p_total
+            ctr += 1
+    ks = rng.integers(0, 1 << 31, (b, pps * page)).astype(np.int32)
+    pos = np.arange(pps * page)[None, :]
+    ks = np.where(pos < np.array(lengths)[:, None], ks, 0).astype(np.int32)
+    return (pool, jnp.array(tables), jnp.array(lengths, jnp.int32),
+            jnp.array(ks))
+
+
 def jaxpr_primitives(jaxpr) -> List[str]:
     """All primitive names in a jaxpr, recursing through call/closed-call
     params (pjit bodies etc.)."""

@@ -143,15 +143,33 @@ def test_tokenpool_batched_roundtrip_matches_scalar():
 def test_tokenpool_batched_tiles_large_batches():
     alloc = AnchorPool(4, 256, 8)
     pool = TokenPool(alloc)
-    n = TokenPool.BATCH_TILE * 2 + 3     # spans multiple tiles
+    # adaptive tiling: shrink the cache budget so this batch is forced to
+    # span several tiles (1 page × 8 tokens × 16 B = 128 B per message)
+    pool.cache_budget = 128 * 16
     seqs = []
-    for i in range(n):
+    for i in range(50):
         pages = alloc.alloc_sequence(3)
         seqs.append((pages, np.full(3, i)))
+    assert pool.batch_tile([(pg, 3) for pg, _ in seqs]) == 16
     pool.write_payload_batch(seqs)
     got = pool.read_payload_batch([(pg, 3) for pg, _ in seqs])
     for i, g in enumerate(got):
         assert np.array_equal(g, np.full(3, i))
+
+
+def test_tokenpool_adaptive_tile_tracks_footprint():
+    """The tile adapts to live footprint: page-heavy messages get small
+    tiles, tiny ones fuse broadly — pages × page_size vs cache_budget."""
+    alloc = AnchorPool(4, 256, 16)
+    pool = TokenPool(alloc)
+    big = [(alloc.alloc_sequence(16 * 16), 16 * 16) for _ in range(4)]
+    small = [(alloc.alloc_sequence(8), 8) for _ in range(4)]
+    t_big, t_small = pool.batch_tile(big), pool.batch_tile(small)
+    assert t_big < t_small
+    assert t_big == pool.cache_budget // (16 * 16 * 16)
+    assert 1 <= t_big and t_small <= 4096
+    for pages, _ in big + small:
+        alloc.free_pages_list(pages)
 
 
 def test_tokenpool_reserves_scratch_row():
@@ -264,7 +282,12 @@ def test_runtime_batched_matches_scalar_end_to_end():
         assert stack.alloc.free_pages == stack.alloc.total_pages
         return stack.counters.snapshot(), wires, msgs
 
-    for kw in ({}, {"budget": 20}, {"recv_buf": 4}):
+    # recv_buf values 12/30 sit INSIDE [meta_len+1, meta_len+payload_len)
+    # for some protocols — the truncated-buffer regression range: the batch
+    # must hand such sockets to scalar recv (which owns capped logical
+    # delivery) and stay byte/counter-identical end to end
+    for kw in ({}, {"budget": 20}, {"recv_buf": 4}, {"recv_buf": 12},
+               {"recv_buf": 30, "budget": 16}):
         cs, ws, ms = run(False, **kw)
         cb, wb, mb = run(True, **kw)
         assert cs == cb, kw

@@ -1,0 +1,350 @@
+"""Device-resident batched datapath: the pool stays on the device across
+rounds (zero O(pool) host<->device copies per round, asserted by transfer
+instrumentation, not eyeball), dirty-row-tracked lazy host views, the
+fused egress gather in forward_batch, and int32-range bounces."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    DevicePool,
+    LibraStack,
+    ProxyRuntime,
+    build_chunked_message,
+    build_delimited_message,
+    build_message,
+    open_stream,
+)
+from repro.core.stream import TokenPool
+
+RNG = np.random.default_rng(41)
+
+BUILDERS = {
+    "length-prefixed": build_message,
+    "delimiter": build_delimited_message,
+    "chunked": lambda m, p: build_chunked_message(
+        [p[i : i + 24] for i in range(0, len(p), 24)]),
+}
+
+
+def _stack(device_pool=True, **kw):
+    kw.setdefault("n_shards", 4)
+    kw.setdefault("pages_per_shard", 64)
+    kw.setdefault("page_size", 16)
+    kw.setdefault("secret", b"dp")
+    return LibraStack(device_pool=device_pool, **kw)
+
+
+def _run_proxy(*, device_pool=True, batched=True, impl="host", tls=None,
+               n_chans=4, n_msgs=3, payload=72, seed=7,
+               protos=("length-prefixed", "delimiter", "chunked")):
+    stack = _stack(device_pool=device_pool, pages_per_shard=128)
+    rt = ProxyRuntime(stack, tick_every=8, batched=batched, batch_impl=impl)
+    rng = np.random.default_rng(seed)
+    dsts = []
+    for i in range(n_chans):
+        proto = protos[i % len(protos)]
+        if tls and proto == "chunked":
+            proto = "length-prefixed"
+        src, dst = stack.socket_pair(proto, tls=tls)
+        rt.channel(src, dst, name=f"{proto}-{i}")
+        dsts.append(dst)
+        frames = [BUILDERS[proto](rng.integers(100, 200, 6),
+                                  rng.integers(1000, 2000, payload))
+                  for _ in range(n_msgs)]
+        if tls:
+            src.deliver(src.tls.seal_frames(frames, src.parser.inner))
+        else:
+            for f in frames:
+                src.deliver(f)
+    rt.run()
+    if tls:
+        wires = [open_stream(d.tls.tx_key, d.tx_wire()) for d in dsts]
+    else:
+        wires = [d.tx_wire() for d in dsts]
+    msgs = rt.messages_forwarded()
+    snap = stack.counters.snapshot()
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    return stack, wires, msgs, snap
+
+
+# ---------------------------------------------------------------------------
+# the acceptance property: zero O(pool) boundary crossings per round
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+def test_resident_rounds_cross_no_pool_sized_data(impl):
+    """recv_batch + forward_batch through the device data plane: every
+    per-round transfer is O(batch); the only O(pool) crossing is the
+    one-time residency snapshot. Asserted from the byte instrumentation
+    every transfer in DevicePool is routed through."""
+    stack, _, msgs, _ = _run_proxy(impl=impl)
+    pool = stack.pool
+    assert isinstance(pool, DevicePool)
+    assert msgs == 21          # chunked flows forward one frame per chunk
+    x = pool.xfer
+    pool_tokens = pool.flat_with_scratch.size
+    assert x["device_rounds"] > 0
+    assert x["pool_syncs"] == 0                      # NO whole-pool bounce
+    assert x["resident_init_tokens"] == pool_tokens  # exactly one snapshot
+    # per-round traffic is O(batch): far below one pool crossing per round
+    per_round = (x["h2d_tokens"] + x["d2h_tokens"]) / x["device_rounds"]
+    assert per_round < pool_tokens / 4
+    # and in total the resident path moved less than ONE pool's worth of
+    # data across all rounds combined (the legacy path moves 2/round)
+    assert x["h2d_tokens"] + x["d2h_tokens"] < pool_tokens
+
+
+def test_legacy_host_pool_pays_pool_syncs():
+    """Contrast gate: the pre-residency pool bounces the whole pool across
+    the boundary once per device-impl round — the exact cost DevicePool
+    deletes. Keeps the zero-sync assertion above honest."""
+    stack, _, msgs, _ = _run_proxy(device_pool=False, impl="ref")
+    pool = stack.pool
+    assert not isinstance(pool, DevicePool)
+    assert msgs == 21
+    x = pool.xfer
+    pool_tokens = pool.flat_with_scratch.size
+    assert x["pool_syncs"] > 0
+    assert x["pool_syncs"] == x["device_rounds"]
+    # each sync moved at least a whole pool of tokens up
+    assert x["h2d_tokens"] >= x["pool_syncs"] * pool_tokens
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: device plane == host plane == scalar, bytes + counters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["host", "ref", "interpret"])
+def test_resident_batched_matches_scalar_end_to_end(impl):
+    s_stack, s_wires, s_msgs, s_snap = _run_proxy(batched=False, impl="host")
+    b_stack, b_wires, b_msgs, b_snap = _run_proxy(batched=True, impl=impl)
+    assert s_msgs == b_msgs
+    assert s_snap == b_snap
+    assert b_stack.counters.device_fallbacks == 0
+    for a, b in zip(s_wires, b_wires):
+        assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("impl", ["host", "interpret"])
+def test_resident_hw_ktls_matches_scalar(impl):
+    """Encrypted hw-mode rounds ride the resident plane end to end: the RX
+    keystream fused into the anchoring kernel, the TX keystream fused into
+    the gather kernel — decrypted wires byte-identical to scalar."""
+    s_stack, s_wires, s_msgs, s_snap = _run_proxy(batched=False, impl="host",
+                                                  tls="hw")
+    b_stack, b_wires, b_msgs, b_snap = _run_proxy(batched=True, impl=impl,
+                                                  tls="hw")
+    assert s_msgs == b_msgs
+    assert s_snap == b_snap
+    for a, b in zip(s_wires, b_wires):
+        assert np.array_equal(a, b)
+    if impl != "host":
+        assert b_stack.pool.xfer["pool_syncs"] == 0
+        assert b_stack.pool.xfer["device_rounds"] > 0
+
+
+def test_forward_batch_device_gather_matches_host_gather():
+    """The fused egress gather must hand each transmit the exact bytes
+    read_payload would compose — wires identical between impl='host' and
+    the kernel path, same stack."""
+    for impl in ("ref", "interpret"):
+        stack = _stack()
+        srcs, sends = [], []
+        rng = np.random.default_rng(3)
+        payloads = []
+        for _ in range(3):
+            src, dst = stack.socket_pair("length-prefixed")
+            p = rng.integers(1000, 2000, 56)
+            payloads.append(p)
+            src.deliver(build_message(np.arange(4), p))
+            buf, _ = src.recv(1 << 20)
+            sends.append((src, dst, buf, None))
+            srcs.append((src, dst))
+        out = stack.forward_batch(sends, impl=impl)
+        assert all(st == "ok" for st, _ in out)
+        for (src, dst), p in zip(srcs, payloads):
+            assert np.array_equal(dst.tx_wire()[-56:], p), impl
+        assert stack.pool.xfer["device_rounds"] > 0
+        assert stack.pool.xfer["pool_syncs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# dirty-row tracking: lazy host views, host<->device interleaving
+# ---------------------------------------------------------------------------
+
+def test_device_rounds_materialize_lazily_for_host_views():
+    stack = _stack()
+    socks = [stack.socket("length-prefixed") for _ in range(3)]
+    rng = np.random.default_rng(9)
+    payloads = [rng.integers(1000, 2000, 40) for _ in socks]
+    for s, p in zip(socks, payloads):
+        s.deliver(build_message(np.arange(4), p))
+    res = stack.recv_batch(socks, impl="ref")
+    assert len(res) == 3
+    pool = stack.pool
+    # truth lives on the device until somebody asks
+    assert len(pool.dirty_rows()) > 0
+    d2h_before = pool.xfer["d2h_tokens"]
+    # scalar read materializes exactly the rows it needs
+    (pages, ln), = socks[0].connection.anchored.values()
+    assert np.array_equal(pool.read_payload(pages, ln), payloads[0])
+    assert pool.xfer["d2h_tokens"] > d2h_before
+    assert len(pool.dirty_rows()) > 0          # others still device-truth
+    # whole-pool view pulls the rest; afterwards nothing is dirty
+    _ = pool.data
+    assert len(pool.dirty_rows()) == 0
+    # and the materialized pool equals a host-impl run byte-for-byte
+    stack_h = _stack()
+    socks_h = [stack_h.socket("length-prefixed") for _ in range(3)]
+    for s, p in zip(socks_h, payloads):
+        s.deliver(build_message(np.arange(4), p))
+    stack_h.recv_batch(socks_h, impl="host")
+    assert np.array_equal(pool.data, stack_h.pool.data)
+
+
+def test_host_writes_interleave_with_device_rounds():
+    """Scalar (host-path) anchoring between device rounds: host-dirty rows
+    upload lazily when a later device gather needs them; payloads stay
+    byte-exact in both directions."""
+    stack = _stack(n_shards=1, pages_per_shard=8)
+    rng = np.random.default_rng(13)
+    # round 1: device round anchors + forwards (pool becomes resident)
+    s1, d1 = stack.socket_pair("length-prefixed")
+    p1 = rng.integers(1000, 2000, 64)
+    s1.deliver(build_message(np.arange(3), p1))
+    r = stack.recv_batch([s1], impl="ref")
+    buf, _ = r[s1.fileno()]
+    s1.forward(d1, buf)
+    assert np.array_equal(d1.tx_wire()[-64:], p1)
+    # round 2: scalar recv anchors via the host scatter (host-dirty rows)
+    s2, d2 = stack.socket_pair("length-prefixed")
+    p2 = rng.integers(3000, 4000, 64)
+    s2.deliver(build_message(np.arange(3), p2))
+    buf2, _ = s2.recv(1 << 20)
+    h2d_before = stack.pool.xfer["h2d_tokens"]
+    # round 3: the device gather serves those host-dirty rows — they are
+    # uploaded lazily (O(rows)) and the wire bytes come out exact
+    out = stack.forward_batch([(s2, d2, buf2, None)], impl="ref")
+    assert out[0][0] == "ok"
+    assert np.array_equal(d2.tx_wire()[-64:], p2)
+    assert stack.pool.xfer["h2d_tokens"] > h2d_before   # lazy upload ran
+    assert stack.pool.xfer["pool_syncs"] == 0
+    assert stack.counters.device_fallbacks == 0
+
+
+def test_out_of_range_rows_bounce_round_to_host():
+    """Rows holding int64 tokens outside int32 stay host-truth; a device
+    round that would overwrite or gather them bounces to the int64-exact
+    host path and counts the fallback — values survive exactly."""
+    stack = _stack(n_shards=1, pages_per_shard=6)
+    huge = np.array([2 ** 40 + 5, -(2 ** 35), 2 ** 31, 7] * 8, np.int64)
+    big = stack.socket("length-prefixed")
+    big.deliver(build_message(np.arange(3), huge))
+    big.recv(1 << 20)                        # host-path anchor (huge rows)
+    # make the pool resident via an unrelated device round
+    other = stack.socket("length-prefixed")
+    other.deliver(build_message(np.arange(3), RNG.integers(0, 9, 16)))
+    assert len(stack.recv_batch([other], impl="ref")) == 1
+    assert stack.counters.device_fallbacks == 0
+    # device gather of the huge payload must bounce, not truncate
+    (vpi, (pages, ln)), = big.connection.anchored.items()
+    from repro.core.vpi import VpiRegistry
+    dst = stack.socket("length-prefixed")
+    buf = np.concatenate([np.array([17, 3, len(huge)], np.int64),
+                          np.arange(3),
+                          np.array([VpiRegistry.to_token(vpi)], np.int64)])
+    out = stack.forward_batch([(big, dst, buf, None)], impl="ref")
+    assert out[0][0] == "ok"
+    assert stack.counters.device_fallbacks == 1
+    assert np.array_equal(dst.tx_wire()[-len(huge):], huge)
+
+
+def test_int64_rows_survive_device_round_reusing_them():
+    """A freed huge-token row re-allocated by a device round: the round
+    must bounce (host-dirty upload would truncate) and the new payload
+    anchors int64-exact via the host scatter."""
+    stack = _stack(n_shards=1, pages_per_shard=2)   # tiny: force row reuse
+    # resident device round first
+    a = stack.socket("length-prefixed")
+    a.deliver(build_message(np.arange(3), RNG.integers(0, 9, 16)))
+    ra = stack.recv_batch([a], impl="ref")
+    assert len(ra) == 1
+    dst = stack.socket("length-prefixed")
+    buf, _ = ra[a.fileno()]
+    a.forward(dst, buf)                      # frees row for reuse
+    # huge scalar anchor into the freed row, then free it again
+    big = stack.socket("length-prefixed")
+    huge = np.array([2 ** 40 + 1] * 16, np.int64)
+    big.deliver(build_message(np.arange(3), huge))
+    bbuf, _ = big.recv(1 << 20)
+    big.forward(dst, bbuf)
+    assert np.array_equal(dst.tx_wire()[-16:], huge)
+    # device round re-using that row: upload would truncate -> bounce
+    c = stack.socket("length-prefixed")
+    pc = RNG.integers(0, 9, 16)
+    c.deliver(build_message(np.arange(3), pc))
+    rc = stack.recv_batch([c], impl="ref")
+    assert len(rc) == 1
+    assert stack.counters.device_fallbacks >= 1
+    (pages, ln), = c.connection.anchored.values()
+    assert np.array_equal(stack.pool.read_payload(pages, ln), pc)
+
+
+def test_whole_pool_view_writes_stay_coherent_with_device_rounds():
+    """Regression: ``pool.data``/``flat_with_scratch`` keep TokenPool's
+    write-through contract, and a write through the view cannot be
+    observed — handing one out must conservatively mark the pool
+    host-truth so a later device gather re-uploads and emits the NEW
+    bytes instead of the stale resident row."""
+    stack = _stack()
+    src, dst = stack.socket_pair("length-prefixed")
+    p = RNG.integers(1000, 2000, 32)
+    src.deliver(build_message(np.arange(3), p))
+    r = stack.recv_batch([src], impl="ref")   # device round: rows device-truth
+    buf, _ = r[src.fileno()]
+    (pages, ln), = src.connection.anchored.values()
+    row = stack.alloc.flat_pid(pages[0])
+    patched = np.array([9001, 9002, 9003, 9004], np.int64)
+    view = stack.pool.data                    # whole-pool write-through view
+    view.reshape(-1, stack.alloc.page_size)[row, :4] = patched
+    out = stack.forward_batch([(src, dst, buf, None)], impl="ref")
+    assert out[0][0] == "ok"
+    assert np.array_equal(dst.tx_wire()[-ln:][:4], patched)
+    assert stack.pool.xfer["pool_syncs"] == 0
+
+
+def test_residency_is_lazy_for_host_only_workloads():
+    """A stack that never runs a device-impl round must never create the
+    device array (no jax dispatch, no snapshot upload)."""
+    stack, _, msgs, _ = _run_proxy(batched=True, impl="host")
+    assert msgs == 21
+    assert isinstance(stack.pool, DevicePool)
+    assert not stack.pool.resident
+    assert stack.pool.xfer["resident_init_tokens"] == 0
+    assert stack.pool.xfer["h2d_tokens"] == 0
+
+
+# ---------------------------------------------------------------------------
+# strict batch admission: recv_batch only returns complete messages
+# ---------------------------------------------------------------------------
+
+def test_recv_batch_requires_full_logical_room():
+    """Regression (truncated-buffer accounting): a buf_len in
+    [meta_len+1, meta_len+payload_len) used to let the batch anchor the
+    payload and advance the ring while handing back a capped logical
+    length, leaving a FAST_PATH continuation straddling the batch/scalar
+    boundary. The batch now services only messages with room for the full
+    logical length — truncated delivery stays a scalar-recv concern."""
+    stack = _stack()
+    sock = stack.socket("length-prefixed")
+    payload = RNG.integers(1000, 2000, 40)
+    sock.deliver(build_message(np.arange(3), payload))
+    # meta_len = 6, message logical = 46: the gap range must not batch
+    for bl in (7, 10, 45):
+        assert stack.recv_batch([sock], bl) == {}
+        assert sock.connection.rx_machine.payload_consumed == 0
+    res = stack.recv_batch([sock], 46)
+    buf, logical = res[sock.fileno()]
+    assert logical == 46                      # never a capped logical
+    assert sock.connection.rx_machine.complete()

@@ -212,6 +212,75 @@ def test_selective_copy_hot_path_has_no_pool_copy():
 
 
 # ---------------------------------------------------------------------------
+# selective gather (egress mirror)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,page,pps", [(1, 8, 2), (2, 8, 4), (3, 16, 3),
+                                        (4, 8, 1)])
+@pytest.mark.parametrize("with_ks", [False, True])
+def test_selective_gather_matches_ref(b, page, pps, with_ks):
+    """The fused egress gather (interpret mode) is bit-exact with its
+    oracle, with and without the hw-kTLS TX keystream operand."""
+    from repro.kernels.selective_copy import selective_gather
+    from repro.kernels.testing import selgather_case
+
+    pool, tables, lengths, ks = selgather_case(
+        np.random.default_rng(11 * b + pps), b=b, page=page, pps=pps)
+    k = ks if with_ks else None
+    got = selective_gather(pool, tables, lengths, interpret=True, keystream=k)
+    want = R.selective_gather_ref(pool, tables, lengths, k)
+    assert np.array_equal(np.array(got), np.array(want))
+    # semantic check: each valid page slot j carries payload span
+    # [j*page, (j+1)*page) of its source page, XORed with the keystream
+    host = np.array(got)
+    for i in range(b):
+        ln = int(lengths[i])
+        assert not host[i, ln:].any()            # zero past the length
+        for j, pid in enumerate(np.array(tables[i])):
+            lo, hi = j * page, min((j + 1) * page, ln)
+            if pid < 0 or hi <= lo:
+                continue
+            want_span = np.array(pool[pid, : hi - lo])
+            if with_ks:
+                want_span = np.bitwise_xor(want_span,
+                                           np.array(ks[i, lo:hi]))
+            assert np.array_equal(host[i, lo:hi], want_span)
+
+
+def test_selective_gather_reads_pool_in_place():
+    """The gather's jaxpr must contain one fused dispatch and no
+    pool-sized copy (no concatenate/pad): the resident pool is read
+    where it lives."""
+    import functools
+
+    from repro.kernels.selective_copy import selective_gather
+    from repro.kernels.testing import (
+        POOL_COPY_PRIMS,
+        jaxpr_primitives,
+        selgather_case,
+    )
+
+    pool, tables, lengths, ks = selgather_case(np.random.default_rng(0))
+    for k in (None, ks):
+        fn = functools.partial(selective_gather, interpret=True, keystream=k)
+        names = jaxpr_primitives(jax.make_jaxpr(fn)(pool, tables,
+                                                    lengths).jaxpr)
+        assert names.count("pallas_call") == 1
+        assert not set(names) & set(POOL_COPY_PRIMS)
+
+
+def test_selective_gather_ops_dispatch():
+    from repro.kernels.testing import selgather_case
+
+    pool, tables, lengths, ks = selgather_case(np.random.default_rng(5))
+    want = R.selective_gather_ref(pool, tables, lengths, ks)
+    for impl in ("ref", "interpret"):
+        got = ops.selective_gather(pool, tables, lengths, impl=impl,
+                                   keystream=ks)
+        assert np.array_equal(np.array(got), np.array(want)), impl
+
+
+# ---------------------------------------------------------------------------
 # mlstm scan
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,137 @@
+"""Hostile-header regressions: corrupt (negative) length tokens in the
+wire metadata must never reach the RX machine as a parsed frame.
+
+Before the fix, ``DelimiterParser``/``ChunkedParser`` accepted negative
+payload lengths (unlike ``LengthPrefixedParser``): the state machine's
+``0 <= payload_len < min_payload`` short-payload guard passes negatives
+straight through to METADATA_PARSED → WRITE_VPI, producing a negative
+``skip_payload`` whose ``rx_advance`` REWINDS ``RxRing.consumed`` and
+re-delivers stream bytes (and drives ``CopyCounters.anchored`` negative).
+"""
+import numpy as np
+
+from repro.core import (
+    ChunkedParser,
+    DelimiterParser,
+    LengthPrefixedParser,
+    LibraStack,
+)
+from repro.core.parser import CHUNK_MAGIC, DELIM, MAGIC
+from repro.core.state_machine import RxStateMachine, St
+
+RNG = np.random.default_rng(77)
+
+
+def _delim_frame(payload_len):
+    return np.concatenate([np.array([7, 7], np.int64),
+                           np.array(DELIM, np.int64),
+                           np.array([payload_len], np.int64)])
+
+
+def _chunk_frame(chunk_len):
+    return np.array([CHUNK_MAGIC, chunk_len], np.int64)
+
+
+# ---------------------------------------------------------------------------
+# parser level: negative lengths are unparseable, not frames
+# ---------------------------------------------------------------------------
+
+def test_parsers_reject_negative_payload_lengths():
+    for parser, window in [
+        (DelimiterParser(), _delim_frame(-5)),
+        (ChunkedParser(), _chunk_frame(-9)),
+        (LengthPrefixedParser(), np.array([MAGIC, 2, -3, 9, 9], np.int64)),
+        (LengthPrefixedParser(), np.array([MAGIC, -2, 3, 9, 9], np.int64)),
+    ]:
+        res = parser.parse(window)
+        assert not res.ok, (parser.name, window)
+        assert not res.need_more, (parser.name, window)
+
+    # sanity: the same frames with sane lengths still parse
+    assert DelimiterParser().parse(
+        np.concatenate([_delim_frame(2), np.array([1, 2])])).ok
+    assert ChunkedParser().parse(
+        np.concatenate([_chunk_frame(2), np.array([1, 2])])).ok
+
+
+# ---------------------------------------------------------------------------
+# state machine with hostile headers: full-copy fallback, no negative skip
+# ---------------------------------------------------------------------------
+
+def test_rx_machine_full_copies_hostile_headers():
+    for parser, frame in [(DelimiterParser(), _delim_frame(-5)),
+                          (ChunkedParser(), _chunk_frame(-9))]:
+        sm = RxStateMachine(parser)
+        window = np.concatenate([frame, np.array([101, 102, 103], np.int64)])
+        decision = sm.on_recv(window, 1 << 20)
+        assert decision.state is St.DEFAULT, parser.name
+        assert decision.skip_payload == 0, parser.name
+        assert decision.full_copy == len(window), parser.name
+        assert sm.payload_len >= 0, parser.name
+
+
+# ---------------------------------------------------------------------------
+# end to end: the ring never rewinds, counters never go negative
+# ---------------------------------------------------------------------------
+
+def _hostile_stream_case(proto, hostile, follow_builder):
+    stack = LibraStack(n_shards=1, pages_per_shard=8, page_size=16,
+                       secret=b"hh")
+    sock = stack.socket(proto)
+    sock.deliver(hostile)
+    follow = follow_builder()
+    sock.deliver(follow)
+    seen = []
+    for _ in range(16):
+        buf, n = sock.recv(1 << 20)
+        ring = sock.connection.rx_ring
+        # the invariant the old code broke: consumed is monotonic and the
+        # anchoring telemetry never goes negative
+        assert ring.consumed >= 0
+        assert stack.counters.anchored >= 0
+        assert sock.connection.rx_machine.payload_len >= 0
+        if n == 0 and len(buf) == 0:
+            break
+        seen.append(np.asarray(buf))
+    stream = np.concatenate(seen) if seen else np.zeros(0, np.int64)
+    return stack, sock, stream, follow
+
+
+def test_hostile_delimiter_header_never_rewinds_ring():
+    hostile = _delim_frame(-5)
+    stack, sock, stream, follow = _hostile_stream_case(
+        "delimiter", hostile,
+        lambda: np.concatenate([np.array([8, 8], np.int64),
+                                np.array(DELIM, np.int64),
+                                np.array([4], np.int64),
+                                RNG.integers(100, 200, 4)]))
+    # every delivered byte surfaced exactly once (no re-delivery): the
+    # hostile header went down the full-copy path, the sane frame parsed
+    assert len(stream) == len(hostile) + len(follow)
+    assert np.array_equal(stream[: len(hostile)], hostile)
+    assert sock.connection.rx_ring.consumed == len(stream)
+    assert stack.counters.anchored == 0       # nothing hostile anchored
+
+
+def test_hostile_chunk_length_never_rewinds_ring():
+    hostile = _chunk_frame(-9)
+    stack, sock, stream, follow = _hostile_stream_case(
+        "chunked", hostile,
+        lambda: np.concatenate([_chunk_frame(3),
+                                RNG.integers(100, 200, 3),
+                                _chunk_frame(0)]))
+    assert len(stream) == len(hostile) + len(follow)
+    assert np.array_equal(stream[: len(hostile)], hostile)
+    assert sock.connection.rx_ring.consumed == len(stream)
+    assert stack.counters.anchored == 0
+
+
+def test_hostile_headers_not_admitted_to_recv_batch():
+    stack = LibraStack(n_shards=1, pages_per_shard=8, page_size=16,
+                       secret=b"hh")
+    d = stack.socket("delimiter")
+    d.deliver(_delim_frame(-5))
+    c = stack.socket("chunked")
+    c.deliver(_chunk_frame(-9))
+    assert stack.recv_batch([d, c]) == {}
+    assert stack.counters.anchored == 0

@@ -1,0 +1,181 @@
+"""Property tests (hypothesis, with the deterministic fallback shim) for
+the two allocation-free substrates of the batched datapath:
+
+* :class:`RxRing` — push/advance/slide/doubling preserve contents and
+  ``fingerprint()``, peek views are clamped, compaction never fires below
+  ``min_compact``;
+* :class:`AnchorPool.alloc_batch`/``free_batch`` — refcount and §A.3
+  budget conservation, placement identical to sequential
+  ``alloc_sequence`` calls.
+"""
+import numpy as np
+
+from repro.core import AnchorPool
+from repro.core.stream import RxRing
+
+from _hypothesis_compat import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# RxRing invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 64), st.lists(st.integers(0, 24), max_size=40),
+       st.data())
+def test_rx_ring_matches_list_model(min_compact, pushes, data):
+    """Under arbitrary interleaved push/advance traffic the ring behaves
+    exactly like an unbounded list with a read cursor — across slides,
+    compactions and capacity doublings."""
+    ring = RxRing(capacity=16, min_compact=min_compact)
+    model = []                      # unread region
+    pushed = consumed = 0
+    rng_val = 0
+    for n in pushes:
+        data_arr = np.arange(rng_val, rng_val + n)
+        rng_val += n
+        ring.push(data_arr)
+        model.extend(data_arr.tolist())
+        pushed += n
+        take = data.draw(st.integers(0, len(model)))
+        # peek views are clamped to the unread region, any request size
+        probe = data.draw(st.integers(0, 3 * (len(model) + 1)))
+        view = ring.peek(probe)
+        assert len(view) == min(probe, len(model))
+        assert view.tolist() == model[:len(view)]
+        ring.advance(take)
+        del model[:take]
+        consumed += take
+        assert len(ring) == len(model)
+        assert ring.fingerprint() == (consumed, pushed)
+        assert ring.peek(1 << 30).tolist() == model
+    # amortized capacity bound: proportional to the peak live region, not
+    # to the total history
+    peak = max((len(ring), 16, min_compact * 2, *(2 * n for n in pushes)))
+    assert ring.capacity <= max(4 * peak, 16)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 80))
+def test_rx_ring_never_compacts_below_min_compact(min_compact, n):
+    """``advance`` only slides once the dead prefix reaches ``min_compact``
+    (and dominates the live region) — small dead prefixes stay put so tiny
+    queues never pay per-advance copies."""
+    ring = RxRing(capacity=256, min_compact=min_compact)
+    ring.push(np.arange(n))
+    step = max(1, min_compact // 4)
+    advanced = 0
+    while advanced + step <= min(n, min_compact - 1):
+        ring.advance(step)
+        advanced += step
+        # dead prefix below min_compact: the buffer offset must be intact
+        # (no slide happened), proving compaction never fired
+        assert ring._head == advanced
+    assert ring.peek(1 << 30).tolist() == list(range(advanced, n))
+
+
+def test_rx_ring_doubling_preserves_contents_and_fingerprint():
+    ring = RxRing(capacity=16)
+    ring.push(np.arange(10))
+    ring.advance(4)
+    before = ring.peek(1 << 30).copy()
+    fp = ring.fingerprint()
+    ring.push(np.arange(100, 400))          # forces repeated doubling
+    assert ring.capacity >= 306
+    assert ring.fingerprint() == (fp[0], fp[1] + 300)
+    assert np.array_equal(ring.peek(1 << 30)[:6], before)
+
+
+# ---------------------------------------------------------------------------
+# alloc_batch / free_batch conservation
+# ---------------------------------------------------------------------------
+
+def _pool():
+    return AnchorPool(4, 16, 8, max_pages_per_seq=6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 80), min_size=0, max_size=20))
+def test_alloc_batch_matches_sequential_alloc_sequence(sizes):
+    """Bulk allocation must produce byte-identical placement to per-item
+    alloc_sequence calls (pool layout parity between batched and scalar
+    schedules), including which items fail admission."""
+    bulk, seq = _pool(), _pool()
+    got = bulk.alloc_batch(sizes)
+    want = []
+    for ln in sizes:
+        try:
+            want.append(seq.alloc_sequence(ln))
+        except Exception:
+            want.append(None)
+    assert got == want
+    assert bulk.free_pages == seq.free_pages
+    assert bulk.accounted_pages == seq.accounted_pages
+    assert bulk._refcount == seq._refcount
+    assert bulk.stats == seq.stats
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 80), min_size=1, max_size=20), st.data())
+def test_alloc_free_batch_conserves_refcounts_and_budget(sizes, data):
+    pool = _pool()
+    total, budget0 = pool.free_pages, pool.accounted_pages
+    lists = pool.alloc_batch(sizes)
+    live = [pg for pg in lists if pg]
+    n_pages = sum(len(pg) for pg in live)
+    assert pool.free_pages == total - n_pages
+    assert pool.accounted_pages == budget0 + n_pages
+    # every allocated page has refcount 1 and appears exactly once
+    flat = [(p.shard, p.local_pid) for pg in live for p in pg]
+    assert len(flat) == len(set(flat))
+    assert all(pool._refcount[key] == 1 for key in flat)
+    # retain a random subset (prefix sharing), then bulk-free everything
+    shared = [pg for pg in live if data.draw(st.integers(0, 1))]
+    for pg in shared:
+        pool.retain(pg)
+    freed = pool.free_batch(lists)
+    assert freed == n_pages
+    # retained lists are still live (refcount 1 now), rest fully returned
+    assert pool.accounted_pages == budget0 + sum(len(pg) for pg in shared)
+    assert pool.free_batch(shared) == sum(len(pg) for pg in shared)
+    assert pool.free_pages == total
+    assert pool.accounted_pages == budget0
+    assert pool._refcount == {}
+
+
+def test_alloc_batch_partial_admission_skips_only_losers():
+    pool = AnchorPool(1, 4, 8)              # 4 pages total
+    got = pool.alloc_batch([8, 999 * 8, 8, 8 * 3])
+    assert got[0] is not None and got[2] is not None
+    assert got[1] is None                   # too big for the pool
+    assert got[3] is None                   # 3 pages left-but-2-free: no
+    assert pool.free_pages == 2
+    assert pool.stats["fallbacks"] == 2
+    pool.free_batch(got)
+    assert pool.free_pages == 4
+
+
+def test_alloc_sequence_zero_len_owns_no_pages():
+    """Regression: zero-length payloads used to burn a whole page
+    (max(seq_len, 1)); they must not consume pool budget at all."""
+    pool = _pool()
+    free0, acct0 = pool.free_pages, pool.accounted_pages
+    assert pool.alloc_sequence(0) == []
+    assert pool.alloc_batch([0, 0]) == [[], []]
+    assert (pool.free_pages, pool.accounted_pages) == (free0, acct0)
+    assert pool.stats["allocs"] == 0
+
+
+def test_write_coords_asserts_on_overlapping_pages():
+    """Regression: overlapping pages used to resolve silently as
+    last-match-wins; a corrupted table must assert instead."""
+    import pytest
+
+    from repro.core import PageRef
+
+    ok = [[PageRef(0, 0, 0), PageRef(1, 0, 8)]]
+    wsh, wsl = AnchorPool.write_coords(ok, [9], n_shards=2, page_size=8)
+    assert (wsh[0], wsl[0]) == (1, 0)
+    overlapping = [[PageRef(0, 0, 0), PageRef(1, 0, 4)]]   # both cover pos 5
+    with pytest.raises(AssertionError):
+        AnchorPool.write_coords(overlapping, [5], n_shards=2, page_size=8)
