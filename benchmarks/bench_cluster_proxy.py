@@ -1,0 +1,186 @@
+"""Multi-worker cluster proxy throughput (the scale-out experiment).
+
+Three questions, machine-readable answers:
+
+1. **Worker scaling** — the same batched proxy workload on a
+   ``LibraCluster`` of W ∈ {1, 2, 4} workers, 0% cross-worker flows.
+   Workers are independent event loops; on real cores they run
+   concurrently, so the single-process repro reports the **ideal-parallel
+   wall clock**: ``max`` over per-worker completion times
+   (``ClusterRuntime.run_parallel``). The acceptance line is ≥2.5x msgs/s
+   at 4 workers vs 1.
+2. **Steering policy** — consistent-hash vs app-defined (round-robin)
+   placement at W=4: balance (per-worker share) and its effect on the
+   parallel wall clock.
+3. **Cross-worker handoff** — fraction sweep f ∈ {0, 0.25, 0.5, 1.0} at
+   W=2, interleaved scheduling (no parallel credit): zero-copy grants vs
+   the one-copy ``cross_worker_copied`` fallback, plus the identity check
+   — aggregate CopyCounters equal to a single-stack run of the SAME
+   workload at every fraction (byte identity is asserted in
+   tests/test_cluster.py).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import counters_fields, csv, is_smoke, record
+from repro.core import (
+    ClusterRuntime,
+    LibraCluster,
+    LibraStack,
+    ProxyRuntime,
+    build_message,
+)
+
+STACK_KW = dict(n_shards=4, pages_per_shard=1024, page_size=16)
+
+
+def _frames(n_chans: int, n_msgs: int, payload: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [[build_message(rng.integers(100, 200, 6),
+                           rng.integers(1000, 2000, payload))
+             for _ in range(n_msgs)]
+            for _ in range(n_chans)]
+
+
+def _load_cluster(cl, crt, frames, cross_fraction=0.0):
+    w = len(cl.workers)
+    dsts = []
+    for i, chan_frames in enumerate(frames):
+        sw = i % w
+        dw = (sw + 1) % w if i < cross_fraction * len(frames) else sw
+        src = cl.socket(worker=sw)
+        dst = cl.socket(worker=dw)
+        crt.channel(src, dst, name=f"ch{i}")
+        dsts.append(dst)
+        for f in chan_frames:
+            src.deliver(f)
+    return dsts
+
+
+def _counters_sum(cl):
+    agg = cl.counters_aggregate()
+    out = {"meta_copied": agg.meta_copied, "full_copied": agg.full_copied,
+           "anchored": agg.anchored, "zero_copied": agg.zero_copied,
+           "vpi_injected": agg.vpi_injected, "allocs": agg.allocs,
+           "crypto_copied": agg.crypto_copied,
+           "cross_worker_grants": agg.cross_worker_grants,
+           "cross_worker_copied": agg.cross_worker_copied}
+    return out
+
+
+def main() -> None:
+    smoke = is_smoke()
+    n_chans = 24 if smoke else 96
+    n_msgs = 4 if smoke else 12
+    payload = 64 if smoke else 192
+    reps = 2 if smoke else 3
+    total_msgs = n_chans * n_msgs
+
+    # -- 1. worker scaling (batched, 0% cross-worker, ideal-parallel) -------
+    frames = _frames(n_chans, n_msgs, payload)
+    base_tput = None
+    for workers in (1, 2, 4):
+        best = None
+        for r in range(reps):
+            cl = LibraCluster(workers, secret=b"bench",
+                              steering="app",
+                              app_fn=lambda flow, n: flow[1] % n,
+                              **STACK_KW)
+            crt = ClusterRuntime(cl, batched=True, work_stealing=False)
+            for i, chan_frames in enumerate(frames):
+                src, dst = cl.socket_pair(flow=("ch", i))
+                crt.channel(src, dst, name=f"ch{i}")
+                for f in chan_frames:
+                    src.deliver(f)
+            msgs, times = crt.run_parallel()
+            wall = max(times)
+            if best is None or wall < best[0]:
+                best = (wall, msgs, cl, times)
+            crt.shutdown()
+        wall, msgs, cl, times = best
+        assert msgs == total_msgs, (msgs, total_msgs)
+        tput = msgs / max(wall, 1e-9)
+        if workers == 1:
+            base_tput = tput
+        speedup = tput / max(base_tput, 1e-9)
+        csv(f"cluster_proxy_w{workers}_batched", 1e6 / max(tput, 1e-9),
+            f"msgs_per_s={tput:.0f} ideal_parallel_wall_us={wall * 1e6:.0f} "
+            f"speedup_vs_1w={speedup:.2f}x "
+            f"worker_walls_us={'/'.join(f'{t * 1e6:.0f}' for t in times)}")
+        record(f"cluster_proxy_w{workers}_batched_counters",
+               workers=workers, msgs_per_s=tput, speedup_vs_1w=speedup,
+               steering="app", cross_fraction=0.0, **_counters_sum(cl))
+
+    # -- 2. steering: consistent hash vs app-defined at W=4 ------------------
+    for steer_name, steer_kw in (
+            ("hash", dict(steering="hash")),
+            ("app_rr", dict(steering="app",
+                            app_fn=lambda flow, n: flow[1] % n))):
+        best = None
+        for _ in range(reps):
+            cl = LibraCluster(4, secret=b"bench", **steer_kw, **STACK_KW)
+            crt = ClusterRuntime(cl, batched=True, work_stealing=False)
+            for i, chan_frames in enumerate(frames):
+                src, dst = cl.socket_pair(flow=("ch", i))
+                crt.channel(src, dst, name=f"ch{i}")
+                for f in chan_frames:
+                    src.deliver(f)
+            msgs, times = crt.run_parallel()
+            wall = max(times)
+            crt.shutdown()
+            if best is None or wall < best[0]:
+                best = (wall, msgs, cl)
+        wall, msgs, cl = best
+        share = cl.steering.stats["per_worker"]
+        tput = msgs / max(wall, 1e-9)
+        csv(f"cluster_proxy_steering_{steer_name}", 1e6 / max(tput, 1e-9),
+            f"msgs_per_s={tput:.0f} per_worker_flows={'/'.join(map(str, share))} "
+            f"imbalance={max(share) / max(sum(share) / len(share), 1e-9):.2f}")
+        record(f"cluster_proxy_steering_{steer_name}_counters",
+               workers=4, msgs_per_s=tput, steering=steer_name,
+               per_worker_flows=list(share), **_counters_sum(cl))
+
+    # -- 3. cross-worker fraction sweep at W=2 (interleaved, with identity) --
+    stack = LibraStack(secret=b"bench", **STACK_KW)
+    rt = ProxyRuntime(stack, batched=True)
+    for i, chan_frames in enumerate(frames):
+        src, dst = stack.socket_pair()
+        rt.channel(src, dst, name=f"ch{i}")
+        for f in chan_frames:
+            src.deliver(f)
+    rt.run()
+    single_snap = stack.counters.snapshot()
+    rt.shutdown()
+
+    for frac in (0.0, 0.25, 0.5, 1.0):
+        best = None
+        for _ in range(reps):
+            cl = LibraCluster(2, secret=b"bench", **STACK_KW)
+            crt = ClusterRuntime(cl, batched=True)
+            _load_cluster(cl, crt, frames, cross_fraction=frac)
+            t0 = time.perf_counter()
+            msgs = crt.run()
+            dt = time.perf_counter() - t0
+            identical = cl.counters_aggregate().snapshot() == single_snap
+            if best is None or dt < best[0]:
+                best = (dt, msgs, cl, identical)
+            crt.shutdown()
+        dt, msgs, cl, identical = best
+        tput = msgs / max(dt, 1e-9)
+        csv(f"cluster_proxy_cross_{int(frac * 100)}pct",
+            1e6 / max(tput, 1e-9),
+            f"msgs_per_s={tput:.0f} grants={cl.stats['grants']} "
+            f"copies={cl.stats['copies']} "
+            f"counters_match_single_stack={identical}")
+        record(f"cluster_proxy_cross_{int(frac * 100)}pct_counters",
+               workers=2, cross_fraction=frac, msgs_per_s=tput,
+               counters_match_single_stack=bool(identical),
+               grants=cl.stats["grants"], copies=cl.stats["copies"],
+               **_counters_sum(cl))
+
+
+if __name__ == "__main__":
+    main()

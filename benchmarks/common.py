@@ -148,7 +148,9 @@ def counters_fields(stack) -> Dict[str, int]:
            "anchored": c.anchored, "zero_copied": c.zero_copied,
            "vpi_injected": c.vpi_injected, "allocs": c.allocs,
            "crypto_copied": c.crypto_copied,
-           "device_fallbacks": c.device_fallbacks}
+           "device_fallbacks": c.device_fallbacks,
+           "cross_worker_grants": c.cross_worker_grants,
+           "cross_worker_copied": c.cross_worker_copied}
     out.update({f"xfer_{k}": v for k, v in stack.pool.xfer.items()})
     return out
 

@@ -24,6 +24,7 @@ BENCHES = [
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("batched_datapath", "benchmarks.bench_batched_datapath"),
+    ("cluster_proxy", "benchmarks.bench_cluster_proxy"),
     ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
     ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
@@ -39,6 +40,7 @@ SMOKE_BENCHES = [
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("batched_datapath", "benchmarks.bench_batched_datapath"),
+    ("cluster_proxy", "benchmarks.bench_cluster_proxy"),
     ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
 ]

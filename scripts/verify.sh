@@ -14,6 +14,9 @@ python scripts/check_kernel_parity.py
 echo "== smoke: benchmarks/run.py --smoke =="
 python -m benchmarks.run --smoke
 
+echo "== bench trend gate: fresh artifacts vs committed baselines =="
+python scripts/check_bench_trend.py
+
 if [[ "${1:-}" != "--fast" ]]; then
   echo "== smoke: examples/quickstart.py =="
   python examples/quickstart.py

@@ -13,7 +13,12 @@ multiplexes N flows with mixed parser policies over one stack.
 * ``stack``          — :class:`LibraStack` (shared kernel state + clock)
 * ``socket``         — :class:`LibraSocket` (POSIX-shaped connection facade)
 * ``runtime``        — :class:`ProxyRuntime` / :class:`ProxyChannel`
-                       (readiness sets, scheduling, send budgets, ticks)
+                       (readiness sets, round-robin/priority/DRR
+                       scheduling, send budgets, ticks)
+* ``cluster``        — :class:`LibraCluster` / :class:`SteeringPolicy` /
+                       :class:`ClusterRuntime`: N-worker scale-out with
+                       RSS-style flow steering, the cross-worker VPI
+                       grant protocol, and work-stealing scheduling
 
 **Mechanism (datapaths)** — the selective-copy machinery itself.
 
@@ -37,12 +42,15 @@ The free functions ``libra_recv``/``libra_send``/``libra_close``/
 layer; new code should go through the facade (see docs/API.md).
 """
 from repro.core.anchor_pool import AnchorPool, PageRef, PoolExhausted
+from repro.core.cluster import ClusterRuntime, LibraCluster, SteeringPolicy
 from repro.core.crypto import (
     REC_MAGIC,
     CryptoRecordParser,
+    RecordAuthError,
     TlsSession,
     open_record,
     open_stream,
+    record_tag,
     seal_record,
     seal_stream,
 )
@@ -77,6 +85,7 @@ __all__ = [
     "LibraStack", "LibraSocket", "Events",
     "ProxyRuntime", "ProxyChannel", "ChannelStats", "LatencyHistogram",
     "SEND_OK", "SEND_EAGAIN",
+    "LibraCluster", "SteeringPolicy", "ClusterRuntime",
     # mechanism
     "AnchorPool", "PageRef", "PoolExhausted",
     "VpiRegistry", "VpiEntry", "VPI_BYTES",
@@ -88,8 +97,8 @@ __all__ = [
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",
     "build_message", "build_delimited_message", "build_chunked_message",
     # kTLS-analogue record layer
-    "CryptoRecordParser", "TlsSession", "REC_MAGIC",
-    "seal_record", "seal_stream", "open_record", "open_stream",
+    "CryptoRecordParser", "TlsSession", "REC_MAGIC", "RecordAuthError",
+    "seal_record", "seal_stream", "open_record", "open_stream", "record_tag",
     # compatibility layer (explicit plumbing)
     "libra_recv", "libra_send", "libra_close", "expire_teardowns",
 ]

@@ -67,7 +67,10 @@ class AnchorPool:
         self._budget_raise = 0
         # deferred frees (§A.4)
         self._deferred: List[Tuple[int, List[PageRef]]] = []
-        self.stats = {"allocs": 0, "frees": 0, "fallbacks": 0, "deferred_frees": 0}
+        # pages currently pinned by outbound cross-worker grants (gauge)
+        self.granted_out_pages = 0
+        self.stats = {"allocs": 0, "frees": 0, "fallbacks": 0,
+                      "deferred_frees": 0, "exports": 0, "export_releases": 0}
 
     # -- capacity ----------------------------------------------------------
     @property
@@ -224,6 +227,26 @@ class AnchorPool:
                 kept.append((deadline, pages))
         self._deferred = kept
         return n
+
+    # -- cross-worker grant pinning (multi-worker §A.4 extension) --------------
+    def export_grant(self, pages: Sequence[PageRef]) -> None:
+        """Pin ``pages`` for a zero-copy grant handed to another worker:
+        each page gains a refcount (exactly like §A.4 prefix sharing), so
+        the owner socket's teardown grace can expire — dropping the
+        *original* reference — without the granted payload ever hitting
+        the freelist. The pin is accounted (§A.3) against THIS pool: the
+        memory stays resident here until the grantee releases it."""
+        self.retain(pages)
+        self.granted_out_pages += len(pages)
+        self.stats["exports"] += 1
+
+    def release_export(self, pages: Sequence[PageRef]) -> None:
+        """Drop a grant pin (grantee's egress completed, or the grant was
+        abandoned). The pages return to the freelist only when every other
+        reference — including the owner's own — is gone."""
+        self.free_pages_list(pages)
+        self.granted_out_pages -= len(pages)
+        self.stats["export_releases"] += 1
 
     # -- §A.2/§A.3 two-phase ownership transfer --------------------------------
     def stage_transfer(self, pages: Sequence[PageRef]) -> List[PageRef]:

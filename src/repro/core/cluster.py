@@ -1,0 +1,503 @@
+"""``LibraCluster`` — multi-worker scale-out of the Libra stack.
+
+One :class:`~repro.core.stack.LibraStack` is the paper's single-core
+kernel instance: one anchor pool, one VPI map, one scheduler round.  Real
+L7 deployments steer flows across many queues/cores *before* the proxy
+sees them (RSS / application-defined receive-side dispatching) and keep
+per-core state partitioned (XLB-style).  This module is that layer:
+
+* :class:`SteeringPolicy` — the RSS analogue.  ``mode='hash'`` places a
+  flow by **consistent hashing** its 4-tuple-analogue key onto a ring of
+  virtual nodes (adding/removing a worker re-steers only ~1/N of flows);
+  ``mode='app'`` delegates to an application callable (the RSD idea:
+  steering is programmable, like the parser policies).  Live re-steering
+  is supported and counted (``resteer``).
+* :class:`LibraCluster` — owns N independent workers (each a full
+  ``LibraStack``: own pool, own registry, own clock) plus the steering
+  layer.  ``cluster.socket(flow=...)`` / ``socket_pair`` place endpoints
+  transparently; the returned sockets are ordinary :class:`LibraSocket`\\ s.
+* **Cross-worker handoff (the VPI grant protocol)** — a proxied flow whose
+  src and dst land on different workers must move an anchored payload from
+  worker A's pool to worker B's egress *without a user-space bounce*:
+
+  - **zero-copy grant** (default): B's registry imports a grant entry that
+    *references* A's pages (``VpiRegistry.import_grant``); A pins them with
+    an extra refcount (``AnchorPool.export_grant``) so the grant safely
+    outlives even A's §A.4 teardown grace.  B's egress composes the frame
+    straight out of A's pool (``LibraStack.pool_for_entry`` routing; the
+    batched path runs the fused gather against A's resident device pool —
+    the peer-to-peer DMA analogue).  Completion forwards teardown back to
+    A.  Counted in ``CopyCounters.cross_worker_grants``.
+  - **one-copy fallback**: when B's pool sits above its watermark (a
+    congested egress worker should not pin a peer's memory across a long
+    backlog), the payload is gathered once out of A's pool at handoff time,
+    A's anchor is released immediately (relieving the owner), and the grant
+    entry carries the bytes itself (``entry.stash``).  The copied tokens
+    are counted in ``CopyCounters.cross_worker_copied`` — separately from
+    the Fig. 9 categories, so a cluster run stays **counter-identical** to
+    a single-stack run at any cross-worker fraction.
+
+* :class:`ClusterRuntime` — drives one :class:`ProxyRuntime` per worker
+  round-robin, with **work stealing**: a worker whose ready set is empty
+  services ready channels stolen from the most-backlogged peer (scalar
+  quanta — channels are self-contained, so stealing changes *where* a
+  quantum runs, never its bytes or counters).  Aggregated counters and
+  latency summaries across workers; ``run_parallel`` reports per-worker
+  wall times for the ideal-parallel throughput model (the workers are
+  independent event loops — on real cores they run concurrently; the
+  single-process repro emulates that by taking the slowest worker's
+  critical path).
+"""
+from __future__ import annotations
+
+import bisect
+import hashlib
+import struct
+from typing import Callable, Dict, List, Optional, Tuple, Union
+
+from repro.core.anchor_pool import PageRef
+from repro.core.runtime import ProxyChannel, ProxyRuntime
+from repro.core.socket import LibraSocket
+from repro.core.stack import LibraStack, ParserLike
+from repro.core.stream import CopyCounters
+
+#: steering callable signature for mode='app': (flow_key, n_workers) -> int
+AppSteer = Callable[[object, int], int]
+
+
+def _stable_hash(secret: bytes, obj: object) -> int:
+    """Position on the steering ring: keyed blake2b of a stable encoding
+    of the flow key (repr — flow keys are meant to be plain tuples/ints/
+    strings, the 4-tuple analogue)."""
+    h = hashlib.blake2b(repr(obj).encode(), key=secret, digest_size=8)
+    return struct.unpack("<Q", h.digest())[0]
+
+
+class SteeringPolicy:
+    """RSS-style flow steering: flow key -> worker id.
+
+    ``hash`` mode is a consistent-hash ring with ``replicas`` virtual
+    nodes per worker — the same flow maps to the same worker across
+    re-registration and across policy instances built with the same
+    parameters, and resizing the worker set moves only ~1/N of flows.
+    ``app`` mode delegates to ``app_fn(flow, n_workers)`` (the
+    application-defined receive-side dispatching analogue).
+
+    ``stats`` records live steering behaviour: per-worker placements,
+    total decisions, and — across :meth:`resteer` calls — how many tracked
+    flows actually moved.
+    """
+
+    MODES = ("hash", "app")
+
+    def __init__(self, n_workers: int, mode: str = "hash",
+                 app_fn: Optional[AppSteer] = None, replicas: int = 64,
+                 secret: bytes = b"libra-steer"):
+        assert mode in self.MODES, mode
+        assert n_workers >= 1, n_workers
+        if mode == "app" and app_fn is None:
+            raise ValueError("mode='app' needs an app_fn(flow, n_workers)")
+        self.mode = mode
+        self.app_fn = app_fn
+        self.replicas = replicas
+        self.secret = secret
+        self.n_workers = n_workers
+        self._ring: List[Tuple[int, int]] = []
+        self._build_ring()
+        # flow -> worker placements observed so far (live re-steer stats)
+        self.placements: Dict[object, int] = {}
+        self.stats = {"steered": 0, "resteers": 0, "moved": 0,
+                      "per_worker": [0] * n_workers}
+
+    def _build_ring(self) -> None:
+        ring = []
+        for w in range(self.n_workers):
+            for r in range(self.replicas):
+                ring.append((_stable_hash(self.secret, ("vnode", w, r)), w))
+        ring.sort()
+        self._ring = ring
+        self._ring_keys = [h for h, _ in ring]   # bisect array, built once
+
+    def worker_for(self, flow: object, track: bool = True) -> int:
+        """Steer ``flow`` (any hashable 4-tuple analogue) to a worker.
+        ``track=False`` skips the placement record — used for one-shot
+        auto-generated flow keys that can never recur, so a long-lived
+        cluster's placement map stays bounded by *named* flows."""
+        if self.mode == "app":
+            w = int(self.app_fn(flow, self.n_workers)) % self.n_workers
+        else:
+            pos = _stable_hash(self.secret, flow)
+            i = bisect.bisect_right(self._ring_keys, pos) % len(self._ring)
+            w = self._ring[i][1]
+        self.stats["steered"] += 1
+        self.stats["per_worker"][w] += 1
+        if track:
+            self.placements[flow] = w
+        return w
+
+    def forget(self, flow: object) -> None:
+        """Drop a tracked flow (its connection closed) from the placement
+        map, so resteer stats cover only live flows."""
+        self.placements.pop(flow, None)
+
+    def resteer(self, n_workers: Optional[int] = None,
+                mode: Optional[str] = None,
+                app_fn: Optional[AppSteer] = None) -> int:
+        """Live policy change (worker set resize / mode swap). Re-evaluates
+        every tracked flow and returns how many moved (also accumulated in
+        ``stats['moved']``) — with consistent hashing a resize moves only
+        ~1/N of flows; a mode swap can move anything."""
+        if mode is not None:
+            assert mode in self.MODES, mode
+        if (mode or self.mode) == "app" and (app_fn or self.app_fn) is None:
+            # validate BEFORE mutating any state: a hash->app swap without
+            # a callable must not die mid-resteer with stats half-reset
+            raise ValueError("mode='app' needs an app_fn(flow, n_workers)")
+        if n_workers is not None:
+            self.n_workers = n_workers
+        if mode is not None:
+            self.mode = mode
+        if app_fn is not None:
+            self.app_fn = app_fn
+        self._build_ring()
+        self.stats["per_worker"] = ([0] * self.n_workers)
+        self.stats["resteers"] += 1
+        moved = 0
+        old = dict(self.placements)
+        for flow, prev in old.items():
+            if self.worker_for(flow) != prev:
+                moved += 1
+        self.stats["moved"] += moved
+        return moved
+
+
+class LibraCluster:
+    """N independent :class:`LibraStack` workers + flow steering + the
+    cross-worker VPI grant interconnect. Constructor keyword arguments
+    other than the ones below are forwarded to every worker stack
+    (``pages_per_shard``, ``page_size``, ``device_pool``, ...)."""
+
+    def __init__(self, n_workers: int = 2, *,
+                 steering: Union[str, SteeringPolicy] = "hash",
+                 app_fn: Optional[AppSteer] = None,
+                 secret: Optional[bytes] = None,
+                 grace_ticks: int = 5,
+                 **stack_kw):
+        assert n_workers >= 1, n_workers
+        self.workers: List[LibraStack] = []
+        for i in range(n_workers):
+            wsecret = (None if secret is None
+                       else hashlib.blake2b(struct.pack("<q", i), key=secret,
+                                            digest_size=16).digest())
+            w = LibraStack(secret=wsecret, grace_ticks=grace_ticks,
+                           **stack_kw)
+            w.worker_id = i
+            w.pool.pool_id = f"libra-worker-{i}"
+            w.interconnect = self
+            self.workers.append(w)
+        for w in self.workers:
+            for peer in self.workers:
+                if peer is not w:
+                    w.register_peer_pool(peer.pool)
+        self.steering = (steering if isinstance(steering, SteeringPolicy)
+                         else SteeringPolicy(n_workers, mode=steering,
+                                             app_fn=app_fn))
+        assert self.steering.n_workers == n_workers, \
+            (self.steering.n_workers, n_workers)
+        self._flow_serial = 0
+        self._worker_by_pool = {w.pool.pool_id: w for w in self.workers}
+        # cross-worker handoff telemetry (cluster-wide; the per-stack
+        # CopyCounters carry the same events on the destination worker)
+        self.stats = {"grants": 0, "grant_pages": 0,
+                      "copies": 0, "copied_tokens": 0, "adopt_misses": 0,
+                      "grants_reclaimed": 0}
+
+    # -- placement -----------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.workers)
+
+    def _next_flow(self) -> Tuple[str, int]:
+        self._flow_serial += 1
+        return ("flow", self._flow_serial)
+
+    def worker_for(self, flow: object) -> LibraStack:
+        return self.workers[self.steering.worker_for(flow)]
+
+    def socket(self, parser: ParserLike = "length-prefixed", *,
+               flow: Optional[object] = None,
+               worker: Optional[int] = None, **kw) -> LibraSocket:
+        """Open a connection somewhere on the cluster: ``worker`` pins it,
+        ``flow`` steers it through the policy, neither auto-assigns a fresh
+        flow key. The returned socket is an ordinary :class:`LibraSocket`
+        (its ``worker_id`` tells where it landed)."""
+        if worker is not None:
+            stack = self.workers[worker]
+        elif flow is not None:
+            stack = self.workers[self.steering.worker_for(flow)]
+        else:
+            stack = self.workers[self.steering.worker_for(
+                self._next_flow(), track=False)]
+        return stack.socket(parser, **kw)
+
+    def socket_pair(self, parser: ParserLike = "length-prefixed", *,
+                    flow: Optional[object] = None,
+                    **kw) -> Tuple[LibraSocket, LibraSocket]:
+        """A (client-side, backend-side) pair of ONE proxied flow — both
+        endpoints land on the same worker (flow affinity, the RSS
+        property). Cross-worker channels arise when a channel pairs
+        sockets of *different* flows."""
+        track = flow is not None
+        if flow is None:
+            flow = self._next_flow()
+        w = self.steering.worker_for(flow, track=track)
+        stack = self.workers[w]
+        return stack.socket(parser, **kw), stack.socket(parser, **kw)
+
+    # -- the VPI grant interconnect -----------------------------------------
+    def find_owner(self, vpi: int,
+                   exclude: Optional[LibraStack] = None
+                   ) -> Optional[LibraStack]:
+        """The worker whose registry holds ``vpi`` live (TEARDOWN entries
+        do not count: their §A.4 grace belongs to the owner)."""
+        for w in self.workers:
+            if w is exclude:
+                continue
+            if w.registry.peek(vpi) is not None:
+                return w
+        return None
+
+    def grant_into(self, dst_stack: LibraStack, vpi: int) -> Optional[int]:
+        """Adopt ``vpi`` — anchored on some peer worker — into
+        ``dst_stack``'s registry so its egress can transmit the payload.
+        Returns the destination-side VPI, or None when no live owner
+        exists cluster-wide (stale handle: the caller's FALLBACK_BYPASS
+        takes over, exactly as single-stack).
+
+        Zero-copy grant by default; the counted one-copy fallback when the
+        destination pool is above its watermark (see module docstring)."""
+        owner = self.find_owner(vpi, exclude=dst_stack)
+        if owner is None:
+            self.stats["adopt_misses"] += 1
+            return None
+        entry = owner.registry.peek(vpi)
+        pages = list(entry.pages)
+        if entry.stash is not None:
+            # the owner entry is itself a one-copy handoff: forward the
+            # stashed bytes as-is (self-contained — no pool, no pin, no
+            # additional copy; the bytes already left the owning pool)
+            return dst_stack.registry.import_grant(
+                owner.registry, vpi, dst_stack.pool.pool_id, [],
+                entry.payload_len, stash=entry.stash)
+        if entry.grant is not None:
+            # the owner entry is itself a zero-copy grant: FLATTEN the
+            # chain — pin and reference the ROOT pool/registry directly so
+            # completion always releases the true owner, never a
+            # middleman's bookkeeping (the middleman's grant lives on,
+            # released by its own transmit or the shutdown reclaim)
+            root = entry.grant
+            root_worker = self._worker_by_pool.get(entry.pool_id, owner)
+            root_worker.alloc.export_grant([PageRef(*pg) for pg in pages])
+            new_vpi = dst_stack.registry.import_grant(
+                root.owner_registry, root.owner_vpi, entry.pool_id, pages,
+                entry.payload_len)
+            dst_stack.counters.cross_worker_grants += 1
+            self.stats["grants"] += 1
+            self.stats["grant_pages"] += len(pages)
+            return new_vpi
+        if dst_stack.alloc.above_watermark():
+            # one-copy fallback: gather once out of the owner's pool, free
+            # the owner's anchor immediately (the copy IS the handoff), and
+            # ship the bytes on the grant entry itself
+            refs = [PageRef(*pg) for pg in pages]
+            payload = owner.pool.read_payload(refs, entry.payload_len)
+            dst_stack.counters.cross_worker_copied += entry.payload_len
+            self.stats["copies"] += 1
+            self.stats["copied_tokens"] += entry.payload_len
+            new_vpi = dst_stack.registry.import_grant(
+                owner.registry, vpi, dst_stack.pool.pool_id, [],
+                entry.payload_len, stash=payload)
+            owner_sock = owner._anchor_owner(vpi)
+            if owner.registry.release(vpi):
+                owner.alloc.free_pages_list(refs)
+            if owner_sock is not None:
+                owner_sock.connection.anchored.pop(vpi, None)
+            return new_vpi
+        # zero-copy grant: pin the owner's pages, reference them from the
+        # destination registry, forward teardown on completion (egress)
+        owner.alloc.export_grant([PageRef(*pg) for pg in pages])
+        new_vpi = dst_stack.registry.import_grant(
+            owner.registry, vpi, owner.pool.pool_id, pages,
+            entry.payload_len)
+        dst_stack.counters.cross_worker_grants += 1
+        self.stats["grants"] += 1
+        self.stats["grant_pages"] += len(pages)
+        return new_vpi
+
+    # -- cluster-wide lifecycle / telemetry ----------------------------------
+    def reclaim_abandoned_grants(self) -> int:
+        """Release cross-worker handoff entries that will never transmit
+        (their grantee socket closed, or shutdown abandoned the message
+        holding the granted VPI). Drops each zero-copy grant's pin on the
+        owner's pool — the egress completion that normally does this can
+        no longer happen — and removes the entry; stash entries just go.
+        Returns the number of entries reclaimed. Called by
+        :meth:`ClusterRuntime.shutdown` after every socket is closed and
+        grace periods have drained (the single-stack analogue: staged
+        frames abandoned on closed sockets die at shutdown)."""
+        reclaimed = 0
+        for w in self.workers:
+            for entry in w.registry.handoffs():
+                if entry.grant is not None:
+                    owner = self._worker_by_pool.get(entry.pool_id)
+                    if owner is not None:
+                        owner.alloc.release_export(
+                            [PageRef(*pg) for pg in entry.pages])
+                w.registry.drop(entry.vpi)
+                reclaimed += 1
+        self.stats["grants_reclaimed"] += reclaimed
+        return reclaimed
+
+    def tick(self, n: int = 1) -> int:
+        return sum(w.tick(n) for w in self.workers)
+
+    def drain(self) -> int:
+        return sum(w.drain() for w in self.workers)
+
+    def close_all(self) -> int:
+        return sum(w.close_all() for w in self.workers)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(w.pages_in_use for w in self.workers)
+
+    def counters_aggregate(self) -> CopyCounters:
+        """Cluster-wide CopyCounters (field-wise sum over workers) — the
+        quantity that must be identical to a single-stack run of the same
+        workload, at any cross-worker fraction."""
+        agg = CopyCounters()
+        for w in self.workers:
+            for f in CopyCounters.__dataclass_fields__:
+                setattr(agg, f, getattr(agg, f) + getattr(w.counters, f))
+        return agg
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"LibraCluster(workers={len(self.workers)}, "
+                f"steering={self.steering.mode}, "
+                f"grants={self.stats['grants']}, "
+                f"copies={self.stats['copies']})")
+
+
+class ClusterRuntime:
+    """One :class:`ProxyRuntime` per worker, driven round-robin, with
+    optional work stealing between idle and backlogged workers."""
+
+    def __init__(self, cluster: LibraCluster, *,
+                 work_stealing: bool = True, steal_batch: int = 4,
+                 **rt_kw):
+        self.cluster = cluster
+        self.runtimes = [ProxyRuntime(w, **rt_kw) for w in cluster.workers]
+        self.work_stealing = work_stealing
+        self.steal_batch = steal_batch
+        self.rounds = 0
+        self.stats = {"steals": 0, "stolen_quanta": 0}
+
+    # -- registration --------------------------------------------------------
+    def channel(self, src: LibraSocket, dst, **kw) -> ProxyChannel:
+        """Create a channel and register it on the runtime of the worker
+        that owns ``src`` (ingress locality: the receive side is where the
+        flow was steered; a dst on another worker makes the channel
+        cross-worker and exercises the grant protocol)."""
+        rt = self.runtimes[src.worker_id]
+        return rt.channel(src, dst, **kw)
+
+    @property
+    def channels(self) -> List[ProxyChannel]:
+        return [c for rt in self.runtimes for c in rt.channels]
+
+    # -- scheduling ----------------------------------------------------------
+    def step(self) -> int:
+        """One cluster round: each worker runtime takes one scheduling
+        round over its own channels; with work stealing, a worker whose
+        ready set is empty first services up to ``steal_batch`` ready
+        channels of the most-backlogged peer (scalar quanta — a channel
+        is self-contained, so the bytes and counters it produces are
+        identical wherever the quantum runs)."""
+        progressed = 0
+        stolen: set = set()
+        if not self.work_stealing:
+            for rt in self.runtimes:
+                progressed += rt.step()
+            self.rounds += 1
+            return progressed
+        # one readiness evaluation per channel per round: the same lists
+        # drive both the stealing decision and each runtime's step
+        readys = [rt.poll() for rt in self.runtimes]
+        for i, rdy in enumerate(readys):
+            if rdy:
+                continue
+            donor = max(range(len(readys)),
+                        key=lambda j: len([c for c in readys[j]
+                                           if c not in stolen]))
+            avail = [c for c in readys[donor] if c not in stolen]
+            if len(avail) < 2:
+                continue  # nothing worth stealing (donor keeps its one)
+            take = avail[-(min(self.steal_batch, len(avail) // 2)):]
+            self.stats["steals"] += 1
+            for ch in take:
+                stolen.add(ch)
+                self.stats["stolen_quanta"] += 1
+                progressed += bool(ch.service())
+        for rt, rdy in zip(self.runtimes, readys):
+            progressed += rt.step(
+                skip=stolen if stolen else None,
+                ready=[c for c in rdy if c not in stolen])
+        self.rounds += 1
+        return progressed
+
+    def run(self, max_rounds: int = 10 ** 6) -> int:
+        """Interleaved cluster loop until no worker has ready work."""
+        rounds = 0
+        while rounds < max_rounds:
+            if self.step() == 0:
+                break
+            rounds += 1
+        return self.messages_forwarded()
+
+    def run_parallel(self, max_rounds: int = 10 ** 6
+                     ) -> Tuple[int, List[float]]:
+        """Run each worker's runtime to completion independently and
+        return ``(messages_forwarded, per-worker wall seconds)``. The
+        workers are independent event loops (cross-worker forwards are
+        driven entirely by the src-side channel), so on real cores they
+        run concurrently; the single-process repro emulates the parallel
+        wall clock as ``max(per-worker seconds)`` — the critical path."""
+        import time
+
+        times: List[float] = []
+        for rt in self.runtimes:
+            t0 = time.perf_counter()
+            rt.run(max_rounds)
+            times.append(time.perf_counter() - t0)
+        return self.messages_forwarded(), times
+
+    def shutdown(self) -> int:
+        deferred = sum(rt.shutdown() for rt in self.runtimes)
+        # grants whose transmit was abandoned by the shutdown would pin
+        # their owner's pages forever — reclaim them now that every
+        # socket is closed and every grace period has drained
+        self.cluster.reclaim_abandoned_grants()
+        return deferred
+
+    # -- telemetry -----------------------------------------------------------
+    def messages_forwarded(self) -> int:
+        return sum(rt.messages_forwarded() for rt in self.runtimes)
+
+    def logical_bytes(self) -> int:
+        return sum(rt.logical_bytes() for rt in self.runtimes)
+
+    def latency_summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        for i, rt in enumerate(self.runtimes):
+            for name, s in rt.latency_summary().items():
+                out[f"w{i}/{name}"] = s
+        return out

@@ -9,12 +9,25 @@ This module is the token-level mirror of that record layer:
 
 * **Record framing** (:class:`CryptoRecordParser`) — a TLS-record analogue
   wrapping any inner parser's frames. The wire carries
-  ``[REC_MAGIC, seq, inner_meta_len, payload_len]`` (the plaintext record
-  header) followed by the encrypted inner frame. For the selective-copy
-  machinery the record header + encrypted inner metadata are *metadata*
-  (copied to user space, decrypted on the way) and the encrypted payload is
-  the *anchored* region — so the whole existing RX/TX state machinery runs
-  unmodified over ciphertext.
+  ``[REC_MAGIC, seq, inner_meta_len, payload_len, tag]`` (the plaintext
+  record header) followed by the encrypted inner frame. For the
+  selective-copy machinery the record header + encrypted inner metadata are
+  *metadata* (copied to user space, decrypted on the way) and the encrypted
+  payload is the *anchored* region — so the whole existing RX/TX state
+  machinery runs unmodified over ciphertext.
+* **Per-record auth tag** — ``tag`` is a truncated (31-bit) keyed blake2b
+  over ``(seq, inner plaintext frame)``: the GCM-tag analogue. Because it
+  authenticates the *plaintext*, a proxy re-sealing a record under its TX
+  key preserves the tag byte-for-byte (same plaintext, same seq) — egress
+  pays zero tag recomputation, mirroring NIC-inline kTLS where the device
+  re-tags in the DMA pass. Ingress verifies before anchoring: ``sw`` mode
+  checks the tag on its decrypt-and-copy pass, ``hw`` mode folds the check
+  into the batched keystream sweep (no separate per-message pass). A
+  mismatch rejects the record — pages freed, stream advanced —
+  via :class:`RecordAuthError` / a dropped batch slot. The MAC key defaults
+  to a fixed domain-separation constant (integrity modeling; a real AEAD
+  would derive it per session — the repro's point is the datapath cost,
+  not the key schedule).
 * **Token cipher** — a reversible XOR stream cipher whose per-record
   keystream is derived from the owning stack's :class:`VpiRegistry` secret
   (blake2b seed, splitmix64 expansion). Keystream tokens are 31-bit, so a
@@ -60,13 +73,22 @@ from repro.core.parser import (
 
 #: record content-type marker (TLS ApplicationData is 23)
 REC_MAGIC = 23
-#: plaintext record header: [REC_MAGIC, seq, inner_meta_len, payload_len]
-REC_HEADER = 4
+#: plaintext record header: [REC_MAGIC, seq, inner_meta_len, payload_len, tag]
+REC_HEADER = 5
+#: header slot carrying the truncated-blake2b record auth tag
+TAG_SLOT = 4
 #: keystream tokens are 31-bit so ciphertext = plaintext XOR keystream keeps
 #: int32-safe plaintext tokens int32-safe (the device stream constraint)
 KS_MASK = 0x7FFFFFFF
+#: default MAC domain-separation key (see module docstring)
+DEFAULT_MAC_KEY = b"libra-record-mac"
 
 TLS_MODES = ("sw", "hw")
+
+
+class RecordAuthError(Exception):
+    """A record's auth tag did not verify — the record was rejected (bytes
+    consumed past it, nothing anchored / anchored pages freed)."""
 
 
 # ---------------------------------------------------------------------------
@@ -139,6 +161,17 @@ def xor_tokens(tokens: np.ndarray, ks: np.ndarray) -> np.ndarray:
     return np.bitwise_xor(np.asarray(tokens, np.int64), ks)
 
 
+def record_tag(mac_key: bytes, seq: int, body_plain: np.ndarray) -> int:
+    """Truncated-blake2b record auth tag over the *plaintext* record body
+    (the inner frame: inner metadata + payload), domain-separated by the
+    record ``seq``. 31-bit so the tag token — part of the plaintext header —
+    rides the int32 device stream untouched."""
+    h = hashlib.blake2b(key=mac_key, digest_size=8)
+    h.update(struct.pack("<q", int(seq)))
+    h.update(np.ascontiguousarray(np.asarray(body_plain, np.int64)).tobytes())
+    return struct.unpack("<Q", h.digest())[0] & KS_MASK
+
+
 # ---------------------------------------------------------------------------
 # record framing (the ParserPolicy)
 # ---------------------------------------------------------------------------
@@ -158,10 +191,10 @@ class CryptoRecordParser:
     lookahead: int = DEFAULT_LOOKAHEAD
 
     def parse(self, window: np.ndarray) -> ParseResult:
+        if len(window) and int(window[0]) != REC_MAGIC:
+            return ParseResult(False)   # not a record boundary: reject now
         if len(window) < REC_HEADER:
             return ParseResult(False, need_more=True)
-        if int(window[0]) != REC_MAGIC:
-            return ParseResult(False)
         inner_meta = int(window[2])
         payload_len = int(window[3])
         if inner_meta < 0 or payload_len < 0 \
@@ -187,33 +220,39 @@ def record_header(buf: np.ndarray) -> Optional[Tuple[int, int, int]]:
 # ---------------------------------------------------------------------------
 
 def seal_record(key: bytes, frame: np.ndarray, parser: ParserPolicy,
-                seq: int) -> np.ndarray:
+                seq: int, mac_key: bytes = DEFAULT_MAC_KEY) -> np.ndarray:
     """Wrap one inner ``frame`` (a full [meta..., payload...] message of
-    ``parser``'s protocol) into an encrypted wire record under ``key``."""
+    ``parser``'s protocol) into an encrypted, tagged wire record under
+    ``key``."""
     frame = np.asarray(frame, np.int64)
     res = parser.parse(frame)
     assert res.ok and res.payload_len >= 0, \
         "seal_record needs a complete, parseable inner frame"
     assert res.meta_len + res.payload_len == len(frame), \
         (res.meta_len, res.payload_len, len(frame))
-    hdr = np.array([REC_MAGIC, seq, res.meta_len, res.payload_len], np.int64)
+    hdr = np.array([REC_MAGIC, seq, res.meta_len, res.payload_len,
+                    record_tag(mac_key, seq, frame)], np.int64)
     body = xor_tokens(frame, keystream(key, seq, len(frame)))
     return np.concatenate([hdr, body])
 
 
 def seal_stream(key: bytes, frames: Sequence[np.ndarray],
-                parser: ParserPolicy, seq0: int = 0) -> np.ndarray:
+                parser: ParserPolicy, seq0: int = 0,
+                mac_key: bytes = DEFAULT_MAC_KEY) -> np.ndarray:
     """Seal consecutive inner frames into a record stream (seq0, seq0+1, …)."""
-    recs = [seal_record(key, f, parser, seq0 + i)
+    recs = [seal_record(key, f, parser, seq0 + i, mac_key=mac_key)
             for i, f in enumerate(frames)]
     if not recs:
         return np.zeros((0,), np.int64)
     return np.concatenate(recs)
 
 
-def open_record(key: bytes, wire: np.ndarray) -> Tuple[np.ndarray, int]:
+def open_record(key: bytes, wire: np.ndarray,
+                mac_key: bytes = DEFAULT_MAC_KEY,
+                verify: bool = True) -> Tuple[np.ndarray, int]:
     """Decrypt the record at the head of ``wire``; returns
-    ``(inner_frame, tokens_consumed)``."""
+    ``(inner_frame, tokens_consumed)``. ``verify=True`` (default) checks
+    the record auth tag and raises :class:`RecordAuthError` on mismatch."""
     hdr = record_header(wire)
     assert hdr is not None, "open_record: not a record boundary"
     seq, inner_meta, payload_len = hdr
@@ -221,16 +260,22 @@ def open_record(key: bytes, wire: np.ndarray) -> Tuple[np.ndarray, int]:
     end = REC_HEADER + body_len
     assert len(wire) >= end, (len(wire), end)
     body = xor_tokens(wire[REC_HEADER:end], keystream(key, seq, body_len))
+    if verify and record_tag(mac_key, seq, body) != int(wire[TAG_SLOT]):
+        raise RecordAuthError(f"record seq={seq}: auth tag mismatch")
     return body, end
 
 
-def open_stream(key: bytes, wire: np.ndarray) -> np.ndarray:
+def open_stream(key: bytes, wire: np.ndarray,
+                mac_key: bytes = DEFAULT_MAC_KEY,
+                verify: bool = True) -> np.ndarray:
     """Decrypt a whole record stream back to the concatenated inner frames
-    (what the plaintext regime would have put on the wire)."""
+    (what the plaintext regime would have put on the wire), verifying each
+    record's auth tag along the way."""
     wire = np.asarray(wire, np.int64)
     frames, pos = [], 0
     while pos < len(wire):
-        frame, used = open_record(key, wire[pos:])
+        frame, used = open_record(key, wire[pos:], mac_key=mac_key,
+                                  verify=verify)
         frames.append(frame)
         pos += used
     if not frames:
@@ -252,11 +297,13 @@ class TlsSession:
     VPI-registry secret, so two sockets of one stack never share keystreams.
     """
 
-    def __init__(self, mode: str, rx_key: bytes, tx_key: bytes):
+    def __init__(self, mode: str, rx_key: bytes, tx_key: bytes,
+                 mac_key: bytes = DEFAULT_MAC_KEY):
         assert mode in TLS_MODES, mode
         self.mode = mode
         self.rx_key = rx_key
         self.tx_key = tx_key
+        self.mac_key = mac_key
         self._seq = 0
         # §A.1 drain continuation: (seq, next encrypted-region offset) of the
         # record whose payload is being served through the full-copy path
@@ -273,7 +320,8 @@ class TlsSession:
         # to trigger (keyed by seq — a mismatch just regenerates)
         self._tx_meta_ks: Optional[Tuple[int, np.ndarray]] = None
         self.stats = {"records_opened": 0, "records_sealed": 0,
-                      "sw_decrypt_passes": 0, "sw_encrypt_passes": 0}
+                      "sw_decrypt_passes": 0, "sw_encrypt_passes": 0,
+                      "auth_failures": 0}
 
     @staticmethod
     def _crypt_span(key: bytes, chunk: np.ndarray, seq: int,
@@ -300,8 +348,9 @@ class TlsSession:
     def seal(self, frame: np.ndarray, parser: ParserPolicy,
              seq: Optional[int] = None) -> np.ndarray:
         """Encrypt an inner frame *toward* this socket (peer-side sendmsg)."""
-        return seal_record(self.rx_key, frame,
-                           parser, self.next_seq() if seq is None else seq)
+        return seal_record(self.rx_key, frame, parser,
+                           self.next_seq() if seq is None else seq,
+                           mac_key=self.mac_key)
 
     def seal_frames(self, frames: Sequence[np.ndarray],
                     parser: ParserPolicy) -> np.ndarray:
@@ -310,9 +359,19 @@ class TlsSession:
 
     def open_wire(self, wire: np.ndarray) -> np.ndarray:
         """Decrypt everything this socket transmitted (peer-side recv)."""
-        return open_stream(self.tx_key, wire)
+        return open_stream(self.tx_key, wire, mac_key=self.mac_key)
 
     # -- RX datapath hooks ---------------------------------------------------
+    def verify_record(self, seq: int, tag: int,
+                      body_plain: np.ndarray) -> bool:
+        """Check a record's auth tag against the decrypted body (inner
+        metadata + payload plaintext). Counts failures; the caller rejects
+        the record (consume + free) on False."""
+        if record_tag(self.mac_key, seq, body_plain) == int(tag):
+            return True
+        self.stats["auth_failures"] += 1
+        return False
+
     def rx_open_span(self, chunk: np.ndarray, seq: int,
                      rec_pos: int) -> np.ndarray:
         """Decrypt an RX record span starting at record position

@@ -183,7 +183,13 @@ class DevicePool(TokenPool):
         operands (plus any host-dirty rows the round overwrites), run the
         fused kernel against the resident pool, and keep the donated result
         resident — **nothing O(pool) crosses the boundary, nothing syncs
-        back**. Touched rows become device-truth (lazy host views)."""
+        back**. Touched rows become device-truth (lazy host views).
+
+        The resident pool is **donated through the outer jit**
+        (``donate_pool=True``): the round updates the one live pool buffer
+        in place instead of allocating an output copy next to the input —
+        verified per round by comparing buffer pointers
+        (``xfer['donated_rounds']``)."""
         from repro.kernels import ops
 
         self._ensure_device()
@@ -192,14 +198,24 @@ class DevicePool(TokenPool):
         self.xfer["h2d_tokens"] += stream.size + tables.size \
             + meta_len.size + total_len.size \
             + (keystream.size if keystream is not None else 0)
+        donated_in = self._dev
         new_meta, new_pool = ops.selective_copy(
             stream, meta_len, total_len, self._dev, tables,
             meta_max=meta_max, impl=impl, reserved_scratch=True,
-            keystream=keystream)
+            keystream=keystream, donate_pool=True)
         del new_meta  # host buffers keep the int64-exact metadata
         self._dev = new_pool
+        # the donation's guarantee: XLA consumed (deleted) the input pool
+        # buffer, so exactly ONE pool allocation stays live across the
+        # round — not an input + an output copy
+        try:
+            if donated_in is not new_pool and donated_in.is_deleted():
+                self.xfer["donated_rounds"] += 1
+        except Exception:  # pragma: no cover - backend without the API
+            pass
         self._dev_dirty[rows] = True
         self.xfer["device_rounds"] += 1
+        self.xfer["anchor_rounds"] += 1
 
     def gather_batch_device(self, tables: np.ndarray, lengths: np.ndarray, *,
                             impl: str,

@@ -21,6 +21,17 @@ fused into the gather itself (``hw`` mode — the NIC consumes plaintext
 pages and encrypts inline, zero extra passes). The §A.2 staging window now
 brackets the payload compose, so a failure between extract and commit
 aborts the transfer instead of leaving the §A.3 budget raised forever.
+
+Multi-worker routing: a VPI entry may be a **cross-worker grant** — the
+payload lives in ANOTHER worker's pool. ``pool_router`` (supplied by the
+socket facade) maps an entry to the pool that actually owns its pages, so
+the §A.2 staging, the payload gather, and the final frees all run against
+the owning allocator. Grant completion forwards teardown back to the
+owner's registry (releasing the owner entry when it is still live; an
+owner already inside its §A.4 grace period keeps its own deferred-free
+schedule — the grant's pin reference is what kept the pages alive). The
+one-copy fallback entries instead carry the payload in ``entry.stash`` and
+touch no pool at all.
 """
 from __future__ import annotations
 
@@ -73,6 +84,7 @@ def libra_send(
     send_budget: Optional[int] = None,
     parsed=None,
     payload_prefetched: Optional[np.ndarray] = None,
+    pool_router=None,
 ) -> int:
     """Transmit the proxy's outgoing buffer [new_metadata..., VPI] on
     ``dst_conn``. Returns the number of *logical* bytes accepted (like a
@@ -82,7 +94,10 @@ def libra_send(
     batched forward already gathered it (one fused read for the round) —
     it MUST be the exact payload bytes this socket would compose itself
     (``read_payload`` output, with the TX keystream already fused for an
-    encrypted hw-mode destination).
+    encrypted hw-mode destination). ``pool_router`` (entry -> TokenPool)
+    resolves the pool that owns an entry's pages — cross-worker grant
+    entries route to the owning worker's pool; None keeps everything on
+    ``pool`` (single-stack behaviour).
     """
     sm = dst_conn.tx_machine
     crypto = dst_conn.crypto
@@ -113,7 +128,11 @@ def libra_send(
         # the pages now, so the done-cleanup below must not free them.
         assert start > 0 and sm.staged_out is not None, decision.vpi
         owned = None
+        data_pool = pool
     else:
+        # cross-worker grant entries name another worker's pool: stage,
+        # gather and free against the pool that owns the pages
+        data_pool = pool_router(entry) if pool_router is not None else pool
         owned = [PageRef(*pg) for pg in entry.pages]
         if start == 0:
             meta = np.asarray(buf[: sm.meta_len]).copy()
@@ -121,7 +140,7 @@ def libra_send(
             # the payload compose sits INSIDE the stage->commit window so a
             # failure aborts the transfer (restoring the §A.3 budget raise)
             # instead of leaving it elevated forever
-            staged = pool.alloc.stage_transfer(owned)
+            staged = data_pool.alloc.stage_transfer(owned)
             try:
                 if crypto is not None:
                     seq = int(meta[1])
@@ -129,28 +148,34 @@ def libra_send(
                     meta = crypto.seal_meta(meta)
                 # zero-copy "transmission": the NIC consumes anchored pages
                 # in place; the composed frame stays staged across partial
-                # sends
+                # sends. A one-copy cross-worker entry already carries its
+                # payload (entry.stash) — the pool is never consulted.
+                raw = (np.asarray(entry.stash, np.int64)
+                       if entry.stash is not None else None)
                 if payload_prefetched is not None:
                     payload = payload_prefetched
                 elif crypto is None:
-                    payload = pool.read_payload(owned, entry.payload_len)
+                    payload = raw if raw is not None else \
+                        data_pool.read_payload(owned, entry.payload_len)
                 elif crypto.mode == "hw":
                     # hw-kTLS: the TX cipher rides the gather — the NIC
                     # encrypts inline while consuming the anchored pages
-                    payload = pool.read_payload(
-                        owned, entry.payload_len,
-                        keystream=crypto.tx_payload_keystream(
-                            seq, imeta, entry.payload_len))
+                    ks = crypto.tx_payload_keystream(
+                        seq, imeta, entry.payload_len)
+                    payload = (np.bitwise_xor(raw, ks) if raw is not None
+                               else data_pool.read_payload(
+                                   owned, entry.payload_len, keystream=ks))
                 else:
                     # sw-kTLS: encrypt-and-copy re-touches the gathered
                     # payload in a separate pass (§B.1)
-                    payload = pool.read_payload(owned, entry.payload_len)
+                    payload = raw if raw is not None else \
+                        data_pool.read_payload(owned, entry.payload_len)
                     payload = crypto.sw_encrypt_payload(seq, imeta, payload)
                     counters.crypto_copied += entry.payload_len
             except BaseException:
-                pool.alloc.abort_transfer(staged)
+                data_pool.alloc.abort_transfer(staged)
                 raise
-            owned = pool.alloc.commit_transfer(staged)
+            owned = data_pool.alloc.commit_transfer(staged)
             # data plane: selective copy of the new metadata only (counted
             # after the commit so an aborted compose, retried later, does
             # not double-charge the copy telemetry)
@@ -166,8 +191,22 @@ def libra_send(
     if sm.post_send(n):
         # cross-datapath cleanup: VPI entry out of the global map, pages
         # refcount-released, RX machine of the source connection reset.
+        grant = entry.grant if entry is not None else None
         if owned is not None and registry.release(decision.vpi):
-            pool.alloc.free_pages_list(owned)
+            if grant is not None:
+                # drop the grant's pin ref on the owning worker's pool, then
+                # forward the completion to the owner: a still-live owner
+                # entry gets the exact single-stack cleanup (entry released,
+                # original page ref dropped); an owner already in — or past —
+                # its §A.4 grace period keeps its deferred-free schedule
+                # (the expiry drops the original ref, we only dropped ours)
+                data_pool.alloc.release_export(owned)
+                oreg, ovpi = grant.owner_registry, grant.owner_vpi
+                if oreg.peek(ovpi) is not None and oreg.release(ovpi):
+                    data_pool.alloc.free_pages_list(owned)
+                src_conn.anchored.pop(ovpi, None)
+            else:
+                data_pool.alloc.free_pages_list(owned)
         src_conn.anchored.pop(decision.vpi, None)
         reset_rx_from_tx(src_conn)
     return n

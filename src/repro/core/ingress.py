@@ -32,7 +32,7 @@ from typing import Tuple
 import numpy as np
 
 from repro.core.anchor_pool import PoolExhausted
-from repro.core.crypto import REC_HEADER, xor_tokens
+from repro.core.crypto import REC_HEADER, TAG_SLOT, RecordAuthError, xor_tokens
 from repro.core.state_machine import St
 from repro.core.stream import Connection, CopyCounters, TokenPool
 from repro.core.vpi import VpiRegistry
@@ -101,12 +101,29 @@ def libra_recv(
     if decision.state == St.DEFAULT:
         n = min(decision.full_copy, conn.rx_available(), buf_len)
         out = conn.rx_peek(n).copy()
+        if crypto is not None and parsed is not None and parsed.ok and n:
+            # a short-payload record served through the native path: the
+            # record layer verifies the WHOLE resident record BEFORE any
+            # of its plaintext reaches the caller — including tiny-buffer
+            # calls that serve only a prefix (a record whose payload has
+            # not fully arrived yet serves unverified, the same streaming
+            # corner as split metadata; the wire-side open still checks)
+            whole = parsed.meta_len + parsed.payload_len
+            if conn.rx_available() >= whole:
+                rec = crypto.rx_open_span(conn.rx_peek(whole), head_seq, 0)
+                if not crypto.verify_record(head_seq, rec[TAG_SLOT],
+                                            rec[REC_HEADER:]):
+                    # tag mismatch: reject — consume the record, deliver
+                    # nothing, charge nothing
+                    conn.rx_advance(whole)
+                    sm.reset()
+                    raise RecordAuthError(
+                        f"record seq={head_seq}: tag mismatch")
+                out = rec[:n].copy()
+            else:
+                out = crypto.rx_open_span(out, head_seq, 0)
         conn.rx_advance(n)
         counters.full_copied += n
-        if crypto is not None and parsed is not None and parsed.ok and n:
-            # a short-payload record served whole through the native path:
-            # the record layer still decrypts everything behind the header
-            out = crypto.rx_open_span(out, head_seq, 0)
         sm.reset()
         return out, n
 
@@ -127,18 +144,43 @@ def libra_recv(
 
     if decision.state == St.WRITE_VPI:
         meta = conn.rx_peek(decision.copy_meta).copy()
-        conn.rx_advance(decision.copy_meta)
-        counters.meta_copied += len(meta)
         payload_len = sm.payload_len
         seq = None
         imeta = sm.meta_len - REC_HEADER
+        # plaintext produced by the auth verify, reused by the decrypt
+        # below so no record pays the cipher twice
+        verified_plain = None
         if crypto is not None:
             start = sm.meta_len - decision.copy_meta
             seq = head_seq if start == 0 else crypto.rx_meta_seq
             crypto.rx_meta_seq = None
             if seq is not None:
                 meta = crypto.rx_open_span(meta, seq, start)
+                if start == 0:
+                    # per-record auth, BEFORE anything is consumed or
+                    # anchored: the record-layer verify (sw's decrypt pass
+                    # and hw's fused scatter both run after — and only
+                    # if — the tag checks out). The tag covers the whole
+                    # plaintext record, so metadata spans split across
+                    # several tiny-buffer recv calls (start > 0) cannot be
+                    # checked inline and pass through (the §3.3
+                    # deferred-VPI corner; the wire-side open still
+                    # verifies).
+                    ks = crypto.rx_payload_keystream(seq, imeta, payload_len)
+                    plain = xor_tokens(
+                        conn.rx_peek(sm.meta_len + payload_len)[sm.meta_len:],
+                        ks)
+                    if not crypto.verify_record(
+                            seq, meta[TAG_SLOT],
+                            np.concatenate([meta[REC_HEADER:], plain])):
+                        conn.rx_advance(sm.meta_len + payload_len)
+                        sm.reset()
+                        raise RecordAuthError(
+                            f"record seq={seq}: tag mismatch")
+                    verified_plain = plain
                 crypto.stats["records_opened"] += 1
+        conn.rx_advance(decision.copy_meta)
+        counters.meta_copied += len(meta)
         # zero-copy window over the resident payload (view stays valid
         # until the rx_advance below)
         payload = conn.rx_peek(payload_len)
@@ -153,8 +195,10 @@ def libra_recv(
                  if buf_len > len(meta) else 0)
             served = payload[:n].copy()
             if seq is not None and n:
-                served = xor_tokens(
-                    served, crypto.rx_payload_keystream(seq, imeta, n))
+                served = (verified_plain[:n] if verified_plain is not None
+                          else xor_tokens(
+                              served,
+                              crypto.rx_payload_keystream(seq, imeta, n)))
             out = np.concatenate([meta, served])
             conn.rx_advance(n)
             counters.full_copied += n
@@ -169,10 +213,22 @@ def libra_recv(
             pool.write_payload(pages, payload)
         elif crypto.mode == "sw":
             # sw-kTLS: decrypt-and-copy into a fresh buffer, THEN anchor —
-            # the separate pass the paper's §B.1 software path cannot avoid
-            plain = crypto.sw_decrypt_payload(seq, imeta, payload)
+            # the separate pass the paper's §B.1 software path cannot
+            # avoid. The verify already produced the plaintext buffer; it
+            # IS that pass (counted as such) — never run the cipher twice.
+            if verified_plain is not None:
+                plain = verified_plain
+                crypto.stats["sw_decrypt_passes"] += 1
+            else:
+                plain = crypto.sw_decrypt_payload(seq, imeta, payload)
             counters.crypto_copied += payload_len
             pool.write_payload(pages, plain)
+        elif verified_plain is not None:
+            # hw-kTLS: the NIC verified and decrypted in the same pass —
+            # anchor the plaintext the verify produced (one cipher pass
+            # total; the keystream-fused scatter below serves the rare
+            # unverified continuation case)
+            pool.write_payload(pages, verified_plain)
         else:
             # hw-kTLS: the cipher rides the anchoring scatter itself — the
             # ciphertext is decrypted exactly once, on the fly
@@ -183,7 +239,7 @@ def libra_recv(
         counters.allocs += 1
         conn.rx_advance(payload_len)
         vpi = registry.register(
-            "token-pool",
+            pool.pool_id,
             [(p.shard, p.local_pid, p.base_pos) for p in pages],
             payload_len,
         )

@@ -42,6 +42,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.crypto import RecordAuthError
 from repro.core.socket import Events, LibraSocket
 from repro.core.stack import SEND_EAGAIN, LibraStack
 from repro.core.state_machine import St
@@ -106,6 +107,12 @@ class ChannelStats:
     partial_sends: int = 0     # sends truncated by the budget
     quanta: int = 0            # scheduling quanta consumed
     bp_pauses: int = 0         # quanta skipped by pool backpressure
+    auth_rejects: int = 0      # tampered records rejected by the tag check
+    # deficit-round-robin state (scheduler="drr"): the channel's current
+    # byte deficit — grows by quantum_bytes per round while backlogged,
+    # shrinks by the logical bytes each serviced message accepted, resets
+    # when the channel goes idle (classic DRR)
+    deficit: float = 0.0
     # per-quantum wall-clock latency (batched rounds charge the amortized
     # share of the round's single data-plane pass)
     latency: LatencyHistogram = dataclasses.field(
@@ -174,6 +181,36 @@ class ProxyChannel:
             return False
         return True
 
+    def next_cost(self) -> Optional[int]:
+        """Logical size of the head-of-line work item — the DRR "packet
+        size" peek: the remaining pending message on a continuation, the
+        held (EAGAIN) message, the capped logical remainder of a message
+        mid-delivery, or the next parseable frame's logical length
+        (memoised parse; no extra window scan). A channel that is ready
+        always gets a finite cost (None only when nothing is pending), so
+        credit accumulation always converges on an affordable message."""
+        if self._inflight is not None:
+            p = self._inflight.pending_send
+            return max(p.logical - p.accepted, 1) if p is not None else 1
+        if self._held is not None:
+            # the logical size recorded at hold time — the composed buffer
+            # is [meta..., VPI], far smaller than the bytes the transmit
+            # will be charged
+            return max(self._held[2], 1)
+        if self.src.closed:
+            return None
+        sm = self.src.connection.rx_machine
+        if sm.state is St.FAST_PATH and not sm.complete():
+            # recv_buf-capped logical remainder (reassembly in progress)
+            return max(sm.payload_len - sm.payload_consumed, 1)
+        res = self.src.parse_pending()
+        if res.ok:
+            return max(res.meta_len + max(res.payload_len, 0), 1)
+        avail = self.src.rx_available()
+        if avail:
+            return min(avail, self.recv_buf)
+        return 1 if self._rx_parts else None
+
     def _mid_message(self) -> bool:
         """True while the RX machine is inside one selective-copy message
         (deferred VPI, or logical length capped by recv_buf)."""
@@ -195,10 +232,18 @@ class ProxyChannel:
         if self._inflight is not None:
             return self._continue_send()
         if self._held is not None:
-            out, dst = self._held
+            out, dst, logical = self._held
             self._held = None
-            return self._start_send(out, dst)
-        buf, logical = self.src.recv(self.recv_buf)
+            return self._start_send(out, dst, logical)
+        try:
+            buf, logical = self.src.recv(self.recv_buf)
+        except RecordAuthError:
+            # a tampered record was rejected (consumed, nothing anchored):
+            # one bad flow must not abort the event loop — mirror the
+            # batched path, which drops the bad slot and keeps the round
+            # alive. Direct socket users still see the raise.
+            self.stats.auth_rejects += 1
+            return True
         self.stats.recv_calls += 1
         if logical == 0 and len(buf) == 0:
             return False
@@ -211,8 +256,9 @@ class ProxyChannel:
 
     def _ingest(self, buf: np.ndarray, logical: int):
         """Post-recv half of a quantum: reassembly, rewrite, routing.
-        Returns ``(out, dst)`` when a whole message is ready to transmit,
-        ``None`` when a fragment was absorbed, ``_IDLE`` on no progress."""
+        Returns ``(out, dst, logical)`` when a whole message is ready to
+        transmit, ``None`` when a fragment was absorbed, ``_IDLE`` on no
+        progress."""
         if self._mid_message():
             # fragment of one message: reassemble before routing, so the
             # whole message goes to ONE backend in one send
@@ -228,22 +274,27 @@ class ProxyChannel:
             return _IDLE
         out = self.rewrite(buf, logical) if self.rewrite else buf
         dst = self.router(buf, logical) if self.router else self.dsts[0]
-        return out, dst
+        return out, dst, logical
 
-    def _start_send(self, out, dst: LibraSocket) -> bool:
+    def _start_send(self, out, dst: LibraSocket,
+                    logical: Optional[int] = None) -> bool:
         try:
             n = self.src.forward(dst, out, budget=self.budget)
         except BlockingIOError:
-            return self._note_send_outcome(dst, 0, out, eagain=True)
+            return self._note_send_outcome(dst, 0, out, eagain=True,
+                                           logical=logical)
         return self._note_send_outcome(dst, n, out)
 
     def _note_send_outcome(self, dst: LibraSocket, n: int, out,
-                           eagain: bool = False) -> bool:
+                           eagain: bool = False,
+                           logical: Optional[int] = None) -> bool:
         """Shared bookkeeping for scalar and batched transmits."""
         if eagain:
             # backend busy with another flow's truncated message: hold the
-            # routed message and retry once that send completes
-            self._held = (out, dst)
+            # routed message and retry once that send completes (keeping
+            # its logical size — the DRR cost peek)
+            self._held = (out, dst,
+                          logical if logical is not None else len(out))
             return False
         self.stats.send_calls += 1
         self.stats.logical_bytes += n
@@ -268,17 +319,31 @@ class ProxyChannel:
 
 
 class ProxyRuntime:
-    """Readiness-set scheduler over one stack's channels."""
+    """Readiness-set scheduler over one stack's channels.
 
-    SCHEDULERS = ("round-robin", "priority")
+    Scheduling policies: ``round-robin`` (rotating fairness over ready
+    channels), ``priority`` (strict order by ``ProxyChannel.priority``),
+    and ``drr`` — weighted-fair deficit round robin: every ready channel
+    earns ``quantum_bytes`` of deficit per round and services head-of-line
+    messages while its deficit covers them, so flows with 10:1 message
+    sizes still converge to ~equal *byte* shares (a pure quantum-per-round
+    scheduler gives them 10:1 bytes). DRR is a scalar-quanta policy —
+    batched rounds fuse the whole ready set into one data-plane pass and
+    have no per-message service order to weight."""
+
+    SCHEDULERS = ("round-robin", "priority", "drr")
 
     def __init__(self, stack: LibraStack, *, scheduler: str = "round-robin",
                  tick_every: int = 16, batched: bool = False,
                  batch_impl: str = "host",
-                 batch_tile: Optional[int] = None):
+                 batch_tile: Optional[int] = None,
+                 quantum_bytes: int = 1024):
         assert scheduler in self.SCHEDULERS, scheduler
+        assert not (batched and scheduler == "drr"), \
+            "drr is a scalar-quanta policy (batched rounds fuse the ready set)"
         self.stack = stack
         self.scheduler = scheduler
+        self.quantum_bytes = quantum_bytes
         self.tick_every = tick_every
         self.batched = batched
         self.batch_impl = batch_impl   # recv_batch/forward_batch data plane
@@ -304,9 +369,12 @@ class ProxyRuntime:
         return self.register(ProxyChannel(src, dst, **kw))
 
     # -- scheduling ----------------------------------------------------------
-    def poll(self) -> List[ProxyChannel]:
-        """The ready set, ordered by the active scheduling policy."""
-        ready = [c for c in self.channels if c.ready()]
+    def poll(self, skip=None) -> List[ProxyChannel]:
+        """The ready set, ordered by the active scheduling policy.
+        ``skip`` excludes channels already serviced elsewhere this round
+        (cluster work stealing)."""
+        ready = [c for c in self.channels if c.ready()
+                 and (skip is None or c not in skip)]
         if not ready:
             return ready
         if self.scheduler == "priority":
@@ -314,19 +382,26 @@ class ProxyRuntime:
         k = self._rr % len(ready)
         return ready[k:] + ready[:k]
 
-    def step(self) -> int:
+    def step(self, skip=None, ready=None) -> int:
         """One scheduling round: give each ready channel one quantum (with
         ``batched=True``, one fused recv/forward pass for the whole ready
-        set). Returns the number of channels that made progress."""
-        progressed = (self._step_batched() if self.batched
-                      else self._step_scalar())
+        set; with ``scheduler='drr'``, as many head-of-line messages as
+        the channel's byte deficit covers). Returns the number of channels
+        that made progress. ``skip`` excludes channels a cluster thief
+        already serviced this round; ``ready`` supplies a ready set the
+        caller already polled (ClusterRuntime), so channels are not
+        readiness-evaluated twice per round."""
+        if ready is None:
+            ready = self.poll(skip)
+        progressed = (self._step_batched(ready) if self.batched
+                      else self._step_scalar(ready))
         if progressed == 0:
             # liveness: if backpressure alone paused the remaining work and
             # nothing else can free pool pages, admit the paused channels —
             # worst case they overflow into §A.1 drain, exactly as without
             # backpressure
             for ch in self.channels:
-                if ch._bp_paused:
+                if ch._bp_paused and (skip is None or ch not in skip):
                     ch._bp_paused = False
                     progressed += bool(ch.service())
         self.rounds += 1
@@ -335,16 +410,64 @@ class ProxyRuntime:
             self.stack.tick()
         return progressed
 
-    def _step_scalar(self) -> int:
+    def _step_scalar(self, ready) -> int:
+        if self.scheduler == "drr":
+            return self._step_drr(ready)
         progressed = 0
-        for ch in self.poll():
+        for ch in ready:
             progressed += bool(ch.service())
         return progressed
 
-    def _step_batched(self) -> int:
+    def _step_drr(self, ready) -> int:
+        """Deficit round robin: each ready channel earns ``quantum_bytes``
+        and services whole head-of-line messages while the deficit covers
+        their logical size — byte-fair across heterogeneous message
+        sizes."""
+        progressed = 0
+        accumulating = 0
+        for ch in ready:
+            st = ch.stats
+            st.deficit += self.quantum_bytes
+            serviced = False
+            while True:
+                cost = ch.next_cost()
+                if cost is None or cost > st.deficit:
+                    break
+                before = st.logical_bytes
+                ok = ch.service()
+                serviced = True
+                charged = st.logical_bytes - before
+                # charge ONLY bytes actually accepted: an EAGAIN-held or
+                # fragment-absorbing quantum keeps its credit and pays the
+                # real bytes when the message finally transmits (charging
+                # the estimate here would bill such messages twice and
+                # starve EAGAIN-prone flows of their byte-fair share) —
+                # but a zero-byte quantum ends the inner loop, so the
+                # deficit always drains across rounds
+                if charged > 0:
+                    st.deficit -= charged
+                progressed += bool(ok)
+                if not ok or charged == 0 or not ch.ready():
+                    break
+            if not ch.ready():
+                st.deficit = 0.0   # classic DRR: going idle forfeits credit
+            elif not serviced:
+                accumulating += 1
+        if progressed == 0 and accumulating:
+            # a head-of-line message larger than quantum_bytes needs
+            # several rounds of credit before it becomes affordable —
+            # accumulating deficit IS forward progress (the deficit grows
+            # by a positive quantum per round, so the message is reached
+            # in finitely many rounds); without this, run()'s idle
+            # detection would stop on the first credit-only round and
+            # never forward it
+            progressed = 1
+        return progressed
+
+    def _step_batched(self, ready) -> int:
         progressed = 0
         batch: List[ProxyChannel] = []
-        for ch in self.poll():
+        for ch in ready:
             # edge states keep their scalar quantum (continuations, held
             # messages, reassembly in progress)
             if ch._inflight is not None or ch._held is not None \
@@ -393,11 +516,19 @@ class ProxyRuntime:
         # data-plane time only: scalar fallbacks below record their own
         # quanta and must not inflate the batched channels' share
         dp_elapsed = time.perf_counter() - t0
-        sends, senders = [], []
+        sends, senders, logicals = [], [], []
         n_batched = 0
         for ch in batch:
             r = results.get(ch.src.fileno())
             if r is None:
+                if ch.src._auth_rejected:
+                    # the auth sweep dropped this channel's record: count
+                    # the reject on the channel, exactly as the scalar
+                    # path's RecordAuthError handling does
+                    ch.src._auth_rejected = False
+                    ch.stats.auth_rejects += 1
+                    progressed += 1
+                    continue
                 # the batch filled the pool past the watermark before this
                 # channel's turn: pause it (backpressure) instead of letting
                 # the scalar fallback overflow into §A.1 drain
@@ -419,18 +550,20 @@ class ProxyRuntime:
                 continue
             if intent is _IDLE:
                 continue
-            out, dst = intent
+            out, dst, logical = intent
             sends.append((ch.src, dst, out, ch.budget))
             senders.append(ch)
+            logicals.append(logical)
         if sends:
             t1 = time.perf_counter()
             outcomes = self.stack.forward_batch(sends, impl=self.batch_impl)
             dp_elapsed += time.perf_counter() - t1
-            for (ch, (_src, dst, out, _b), (status, n)) in zip(
-                    senders, sends, outcomes):
+            for (ch, (_src, dst, out, _b), (status, n), logical) in zip(
+                    senders, sends, outcomes, logicals):
                 progressed += bool(
                     ch._note_send_outcome(dst, n, out,
-                                          eagain=(status == SEND_EAGAIN)))
+                                          eagain=(status == SEND_EAGAIN),
+                                          logical=logical))
         if n_batched:
             # charge each participant its amortized share of the tile's
             # fused recv/forward passes

@@ -88,6 +88,10 @@ class LibraSocket:
         self._pending: Optional[_PendingSend] = None
         self._first_parse = None       # ParseResult handed to the first send
         self._parse_memo = None        # (queue fingerprint, ParseResult)
+        # set by recv_batch when the auth sweep rejected this socket's
+        # record (the batch drops the slot instead of raising); the
+        # runtime reads-and-clears it to attribute the reject to a channel
+        self._auth_rejected = False
 
     # -- identity / state ---------------------------------------------------
     def fileno(self) -> int:
@@ -106,6 +110,12 @@ class LibraSocket:
     def stack(self):
         """The owning :class:`~repro.core.stack.LibraStack`."""
         return self._stack
+
+    @property
+    def worker_id(self) -> Optional[int]:
+        """The cluster worker this socket's stack lives on (None for a
+        standalone stack)."""
+        return self._stack.worker_id
 
     @property
     def pending_send(self) -> Optional[_PendingSend]:
@@ -251,6 +261,15 @@ class LibraSocket:
             # _peek_message it already ran for prefetch eligibility
             meta_len, vpi, entry, parsed = (peeked if peeked is not None
                                             else self._peek_message(msg))
+            if entry is None and vpi is not None:
+                # the handle may be anchored on a peer worker: adopt it
+                # through the cluster interconnect (zero-copy grant or the
+                # counted one-copy fallback) and transmit the translated
+                # message — a no-op for standalone stacks / garbage tokens
+                adopted = self._stack._adopt_message(msg, vpi, parsed)
+                if adopted is not None:
+                    msg = adopted
+                    meta_len, vpi, entry, parsed = self._peek_message(msg)
             src_conn = src._conn if src is not None else None
             if src_conn is None and vpi is not None:
                 owner = self._stack._anchor_owner(vpi)
@@ -280,7 +299,8 @@ class LibraSocket:
         n = libra_send(p.src_conn, self._conn, chunk, self._stack.pool,
                        self._stack.registry, self._stack.counters,
                        send_budget=budget, parsed=parsed,
-                       payload_prefetched=payload_prefetched)
+                       payload_prefetched=payload_prefetched,
+                       pool_router=self._stack.pool_for_entry)
         p.accepted += n
         if p.accepted >= p.logical:
             self._pending = None

@@ -22,7 +22,12 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.anchor_pool import AnchorPool, PageRef
-from repro.core.crypto import REC_HEADER, CryptoRecordParser, keystream_batch
+from repro.core.crypto import (
+    REC_HEADER,
+    TAG_SLOT,
+    CryptoRecordParser,
+    keystream_batch,
+)
 from repro.core.device_pool import DevicePool, DeviceRangeError
 from repro.core.egress import expire_teardowns
 from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolicy
@@ -49,6 +54,7 @@ class _BatchItem:
     meta: np.ndarray = None
     payload: np.ndarray = None   # zero-copy rx window (valid until advance)
     ks: np.ndarray = None        # hw-kTLS RX keystream (fused into the scatter)
+    plain: np.ndarray = None     # payload plaintext the auth sweep produced
 
 
 def _fits_int32(a: np.ndarray) -> bool:
@@ -89,6 +95,15 @@ class LibraStack:
         # eBPF map; the facade keeps an explicit owner index)
         self._vpi_owner: Dict[int, LibraSocket] = {}
         self._null_conn: Optional[Connection] = None
+        # multi-worker awareness (set by repro.core.cluster.LibraCluster):
+        # this stack's slot in the cluster, the cluster itself (the VPI
+        # interconnect consulted when a transmit meets a handle that does
+        # not resolve locally), and the peer workers' pools by pool_id so
+        # egress can route cross-worker grant entries to the pool that
+        # actually owns their pages. All stay inert for a standalone stack.
+        self.worker_id: Optional[int] = None
+        self.interconnect = None
+        self._peer_pools: Dict[str, Union[TokenPool, DevicePool]] = {}
 
     # -- socket lifecycle ----------------------------------------------------
     def make_parser(self, parser: ParserLike, **kw) -> ParserPolicy:
@@ -302,12 +317,40 @@ class LibraStack:
                 [it.sock.connection.crypto.rx_key for it in crypt],
                 [int(it.meta[1]) for it in crypt],
                 [it.meta_len - REC_HEADER + it.payload_len for it in crypt])
+            rejected = set()
             for it, ks in zip(crypt, kss):
                 imeta = it.meta_len - REC_HEADER
+                crypto = it.sock.connection.crypto
                 it.meta[REC_HEADER:] = np.bitwise_xor(it.meta[REC_HEADER:],
                                                       ks[:imeta])
                 it.ks = ks[imeta:]
-                it.sock.connection.crypto.stats["records_opened"] += 1
+                # per-record auth, folded into this same sweep (the NIC
+                # verifies while it DMAs): a tag mismatch rejects the
+                # record before the fused anchoring pass — pages back to
+                # the freelist, record consumed, nothing charged, nothing
+                # delivered (scalar ``recv`` raises RecordAuthError for
+                # the same wire bytes; the batch drops the slot so one
+                # tampered flow cannot poison the round). The plaintext
+                # the check produces is kept: the host scatter anchors it
+                # directly (one cipher pass total); the device plane still
+                # ships ciphertext + keystream operands (the kernel's XOR
+                # is its fused decrypt).
+                it.plain = np.bitwise_xor(it.payload, it.ks)
+                if not crypto.verify_record(
+                        int(it.meta[1]), it.meta[TAG_SLOT],
+                        np.concatenate([it.meta[REC_HEADER:], it.plain])):
+                    self.counters.meta_copied -= it.meta_len
+                    self.alloc.free_batch([it.pages])
+                    it.sock.connection.rx_advance(it.payload_len)
+                    it.sock.connection.rx_machine.reset()
+                    it.sock._auth_rejected = True
+                    rejected.add(id(it))
+                    continue
+                crypto.stats["records_opened"] += 1
+            if rejected:
+                items = [it for it in items if id(it) not in rejected]
+                if not items:
+                    return {}
 
         # -- payload anchoring: ONE fused pass for the whole round ----------
         if impl != "host" and not all(
@@ -325,8 +368,10 @@ class LibraStack:
             impl = "host"
         if impl == "host":
             self.pool.write_payload_batch(
-                [(it.pages, it.payload) for it in items],
-                keystreams=[it.ks for it in items])
+                [(it.pages, it.plain if it.plain is not None else it.payload)
+                 for it in items],
+                keystreams=[None if it.plain is not None else it.ks
+                            for it in items])
 
         # -- scatter back through per-socket bookkeeping --------------------
         results: Dict[int, Tuple[np.ndarray, int]] = {}
@@ -337,7 +382,7 @@ class LibraStack:
             self.counters.allocs += 1
             conn.rx_advance(it.payload_len)
             vpi = self.registry.register(
-                "token-pool",
+                self.pool.pool_id,
                 [(p.shard, p.local_pid, p.base_pos) for p in it.pages],
                 it.payload_len,
             )
@@ -418,16 +463,35 @@ class LibraStack:
         Encrypted hw-mode destinations get their TX keystream fused into
         the batched gather (NIC-inline encrypt, still one pass); sw-mode
         destinations are excluded from the prefetch — their encrypt pass
-        runs per message inside the scalar transmit (the §B.1 penalty)."""
+        runs per message inside the scalar transmit (the §B.1 penalty).
+
+        Cross-worker sends work here too: a VPI that does not resolve on
+        the destination's stack is adopted through the cluster interconnect
+        (zero-copy grant or counted one-copy stash) before prefetch
+        eligibility is decided, and the fused gathers are grouped by the
+        pool that owns each entry's pages — a grant's payload is gathered
+        straight off the owning worker's (device-resident) pool."""
+        sends = list(sends)
         prefetch: List[Optional[np.ndarray]] = [None] * len(sends)
         peeks: List[Optional[Tuple]] = [None] * len(sends)
-        gather: List[Tuple[int, Tuple, Optional[Tuple]]] = []
+        # (send slot, entry, (pages, len), ksinfo) per prefetch-eligible send
+        gather: List[Tuple[int, object, Tuple, Optional[Tuple]]] = []
         for k, (src, dst, buf, budget) in enumerate(sends):
             if dst.pending_send is not None or dst.closed:
                 continue
             buf64 = np.asarray(buf, np.int64)
-            peeks[k] = dst._peek_message(buf64)
-            entry = peeks[k][2]
+            peek = dst._peek_message(buf64)
+            if peek[2] is None and peek[1] is not None:
+                # unresolved handle: in a cluster it may be anchored on a
+                # peer worker — adopt (grant/copy) and re-peek so the rest
+                # of the round treats it exactly like a local message
+                adopted = dst.stack._adopt_message(buf64, peek[1], peek[3])
+                if adopted is not None:
+                    buf64 = adopted
+                    peek = dst._peek_message(buf64)
+                    sends[k] = (src, dst, buf64, budget)
+            peeks[k] = peek
+            entry = peek[2]
             if entry is None or \
                     entry.payload_len < dst.connection.tx_machine.min_payload:
                 continue
@@ -441,30 +505,46 @@ class LibraStack:
                 # sweep for the round (metadata span stashed for the
                 # seal_meta this transmit is about to trigger, payload span
                 # fused into the batched gather)
-                ksinfo = (crypto, int(buf64[1]), peeks[k][0] - REC_HEADER)
-            gather.append((k, ([PageRef(*pg) for pg in entry.pages],
-                               entry.payload_len), ksinfo))
+                ksinfo = (crypto, int(buf64[1]), peek[0] - REC_HEADER)
+            gather.append((k, entry, ([PageRef(*pg) for pg in entry.pages],
+                                      entry.payload_len), ksinfo))
         if gather:
             keystreams: List[Optional[np.ndarray]] = [None] * len(gather)
-            enc = [(i, info) for i, (_, _, info) in enumerate(gather)
+            enc = [(i, info) for i, (_, _, _, info) in enumerate(gather)
                    if info is not None]
             if enc:
                 kss = keystream_batch(
                     [info[0].tx_key for _, info in enc],
                     [info[1] for _, info in enc],
-                    [info[2] + gather[i][1][1] for i, info in enc])
+                    [info[2] + gather[i][2][1] for i, info in enc])
                 for (i, (crypto, seq, imeta)), ks in zip(enc, kss):
                     crypto.stash_tx_meta_ks(seq, ks[:imeta])
                     keystreams[i] = ks[imeta:]
-            payloads = self._gather_payloads([g for _, g, _ in gather],
-                                             keystreams, impl)
-            for (k, _, _), pv in zip(gather, payloads):
-                prefetch[k] = pv
+            # one-copy stash entries carry their payload already; pool
+            # entries are gathered per owning pool (grants read the peer
+            # worker's pool, local anchors read ours) — one fused gather
+            # per pool touched by the round
+            groups: Dict[int, Tuple[TokenPool, List[int]]] = {}
+            for i, (k, entry, seq_info, _) in enumerate(gather):
+                if entry.stash is not None:
+                    pv = np.asarray(entry.stash, np.int64)
+                    if keystreams[i] is not None:
+                        pv = np.bitwise_xor(pv, keystreams[i])
+                    prefetch[k] = pv
+                    continue
+                owner = sends[k][1].stack.pool_for_entry(entry)
+                groups.setdefault(id(owner), (owner, []))[1].append(i)
+            for owner, idxs in groups.values():
+                payloads = self._gather_payloads(
+                    [gather[i][2] for i in idxs],
+                    [keystreams[i] for i in idxs], impl, pool=owner)
+                for i, pv in zip(idxs, payloads):
+                    prefetch[gather[i][0]] = pv
         out: List[Tuple[str, int]] = []
         for k, (src, dst, buf, budget) in enumerate(sends):
             peeked, pf = peeks[k], prefetch[k]
             if peeked is not None and peeked[2] is not None and \
-                    self.registry.peek(peeked[1]) is not peeked[2]:
+                    dst.stack.registry.peek(peeked[1]) is not peeked[2]:
                 # an earlier send in this round invalidated the peek (e.g.
                 # it released or tore down the same VPI): transmitting
                 # against the stale entry would mis-size the pending
@@ -485,13 +565,17 @@ class LibraStack:
         seqs: List[Tuple[List[PageRef], int]],
         keystreams: List[Optional[np.ndarray]],
         impl: str,
+        pool: Optional[TokenPool] = None,
     ) -> List[np.ndarray]:
         """Fetch one round's anchored payloads: the fused device gather off
         the resident pool when eligible, the host gather otherwise.
         Byte-identical either way (the gather oracle mirrors
-        ``read_payload``); ineligible/bounced rounds stay int64-exact."""
-        page = self.alloc.page_size
-        if impl != "host" and isinstance(self.pool, DevicePool) and all(
+        ``read_payload``); ineligible/bounced rounds stay int64-exact.
+        ``pool`` routes the gather to the pool that owns the pages (a peer
+        worker's, for cross-worker grant entries); default = our own."""
+        pool = self.pool if pool is None else pool
+        page = pool.alloc.page_size
+        if impl != "host" and isinstance(pool, DevicePool) and all(
                 all(pg.base_pos == j * page for j, pg in enumerate(pages))
                 for pages, _ in seqs):
             # the kernel addresses payload position [j*page, (j+1)*page)
@@ -501,24 +585,26 @@ class LibraStack:
             # bounce and does not count a device_fallback, it simply never
             # qualifies for the device plane
             try:
-                return self._forward_batch_device(seqs, keystreams, impl)
+                return self._forward_batch_device(seqs, keystreams, impl,
+                                                  pool)
             except DeviceRangeError:
                 # a requested row holds host-truth tokens outside int32:
                 # the int64-exact host gather serves the round
                 self.counters.device_fallbacks += 1
-        return self.pool.read_payload_batch(seqs, keystreams=keystreams)
+        return pool.read_payload_batch(seqs, keystreams=keystreams)
 
     def _forward_batch_device(
         self,
         seqs: List[Tuple[List[PageRef], int]],
         keystreams: List[Optional[np.ndarray]],
         impl: str,
+        pool: TokenPool,
     ) -> List[np.ndarray]:
         """Flatten the round into [B, pps] tables + [B] lengths and run the
-        fused egress gather once against the resident device pool. TX
-        keystreams (payload-relative, 31-bit) ride the kernel's
+        fused egress gather once against ``pool``'s resident device array.
+        TX keystreams (payload-relative, 31-bit) ride the kernel's
         ``keystream`` operand — NIC-inline encrypt, zero extra passes."""
-        page = self.alloc.page_size
+        page = pool.alloc.page_size
         b = len(seqs)
         pps = max((len(pages) for pages, _ in seqs), default=1) or 1
         tables = np.full((b, pps), -1, np.int32)
@@ -528,12 +614,47 @@ class LibraStack:
         for i, (pages, ln) in enumerate(seqs):
             lengths[i] = ln
             for j, pg in enumerate(pages):
-                tables[i, j] = self.alloc.flat_pid(pg)
+                tables[i, j] = pool.alloc.flat_pid(pg)
             if ks is not None and keystreams[i] is not None:
                 ks[i, :ln] = keystreams[i]
-        block = self.pool.gather_batch_device(tables, lengths, impl=impl,
-                                              keystream=ks)
+        block = pool.gather_batch_device(tables, lengths, impl=impl,
+                                         keystream=ks)
         return [block[i, :ln] for i, (_, ln) in enumerate(seqs)]
+
+    # -- multi-worker plumbing (driven by repro.core.cluster) ----------------
+    def register_peer_pool(self, pool: TokenPool) -> None:
+        """Make a peer worker's pool addressable by its ``pool_id`` so this
+        stack's egress can compose grant entries straight out of it."""
+        self._peer_pools[pool.pool_id] = pool
+
+    def pool_for_entry(self, entry) -> TokenPool:
+        """The pool that owns ``entry``'s pages: this stack's own pool for
+        local anchors (and stash entries, which never touch a pool), the
+        registered peer pool for cross-worker grants."""
+        if entry is None or entry.pool_id == self.pool.pool_id:
+            return self.pool
+        return self._peer_pools.get(entry.pool_id, self.pool)
+
+    def _adopt_message(self, msg: np.ndarray, vpi: Optional[int],
+                       parsed) -> Optional[np.ndarray]:
+        """A transmit met a framed message whose VPI does not resolve in
+        THIS stack's registry. In a cluster the handle may belong to a peer
+        worker: ask the interconnect to hand the anchored payload over (a
+        zero-copy grant, or the counted one-copy fallback) and return the
+        message with the granted VPI patched into its VPI slot. None when
+        the handle is unknown cluster-wide (stale/garbage: the normal
+        FALLBACK_BYPASS path takes it from here)."""
+        if self.interconnect is None or vpi is None:
+            return None
+        if parsed is None or not parsed.ok or \
+                len(msg) < parsed.meta_len + 1:
+            return None
+        granted = self.interconnect.grant_into(self, vpi)
+        if granted is None:
+            return None
+        out = np.asarray(msg, np.int64).copy()
+        out[parsed.meta_len] = VpiRegistry.to_token(granted)
+        return out
 
     # -- facade bookkeeping (called by LibraSocket) --------------------------
     def _note_anchor_owner(self, sock: LibraSocket) -> None:

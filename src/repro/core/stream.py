@@ -121,6 +121,10 @@ class TokenPool:
 
     def __init__(self, alloc: AnchorPool):
         self.alloc = alloc
+        # registry pool-id this pool's anchors are registered under; a
+        # multi-worker cluster renames each worker's pool so grant entries
+        # can name (and egress can route to) the owning worker's pool
+        self.pool_id = "token-pool"
         total = alloc.n_shards * alloc.pages_per_shard
         self._flat = np.zeros((total + 1, alloc.page_size), np.int64)
         # real pages view: writes through to the same storage
@@ -132,7 +136,17 @@ class TokenPool:
         # pool pays one per device-impl round (see anchor_batch_device).
         self.xfer: Dict[str, int] = {"h2d_tokens": 0, "d2h_tokens": 0,
                                      "pool_syncs": 0, "device_rounds": 0,
-                                     "resident_init_tokens": 0}
+                                     "resident_init_tokens": 0,
+                                     # ingress (anchoring) device rounds,
+                                     # and how many of them verifiably
+                                     # consumed the donated input pool
+                                     # buffer (outer-jit donate_argnums —
+                                     # exactly one pool allocation stays
+                                     # live per round): donated == anchor
+                                     # on backends that honour donation
+                                     # (CPU/TPU do)
+                                     "anchor_rounds": 0,
+                                     "donated_rounds": 0}
 
     @property
     def data(self) -> np.ndarray:
@@ -332,6 +346,7 @@ class TokenPool:
         pool[touched] = host_pool[touched]
         self.xfer["pool_syncs"] += 1
         self.xfer["device_rounds"] += 1
+        self.xfer["anchor_rounds"] += 1
 
 
 @dataclasses.dataclass
@@ -351,6 +366,15 @@ class CopyCounters:
     # int64-exact host scatter (out-of-range tokens detected pre-dispatch);
     # an event count, not a copy volume — excluded from snapshot()
     device_fallbacks: int = 0
+    # cross-worker handoffs (multi-worker cluster). Grants are the zero-copy
+    # path (an event count); cross_worker_copied is the token volume of the
+    # one-copy fallback taken when the destination worker's pool sits above
+    # its watermark. Both are counted SEPARATELY from the paper's Fig. 9
+    # categories (excluded from snapshot()): a cluster run must remain
+    # counter-identical to a single-stack run at any cross-worker fraction,
+    # with the cross-worker machinery's own cost visible on the side.
+    cross_worker_grants: int = 0
+    cross_worker_copied: int = 0
 
     def total_user_copies(self) -> int:
         return self.meta_copied + self.full_copied + self.crypto_copied

@@ -13,6 +13,15 @@ kept from the paper:
   than ``min_payload``) are not anchored; they take the full-copy path.
 * **Refcounts + deferred teardown** (§A.4) — entries are refcounted (prefix
   sharing / multi-forwarding) and freed through a grace period.
+* **Cross-worker grants** — a multi-worker cluster hands an anchored payload
+  from one worker's registry to another's without moving bytes:
+  :meth:`VpiRegistry.import_grant` registers a *grant entry* in the
+  destination registry that references the owner's pages (and records the
+  owner handle), while the owner's pages gain a pin ref
+  (:meth:`~repro.core.anchor_pool.AnchorPool.export_grant`). When the grant
+  completes, teardown forwards back to the owner (see
+  :mod:`repro.core.egress`), so a grant safely outlives the owner socket's
+  §A.4 grace period.
 """
 from __future__ import annotations
 
@@ -26,6 +35,17 @@ VPI_BYTES = 8
 
 
 @dataclasses.dataclass
+class GrantRef:
+    """Back-reference of a cross-worker grant entry to its owner: the
+    registry that anchored the payload and the owner-side VPI. Teardown of
+    the grant forwards through this handle (egress completion releases the
+    owner entry when it is still live; a §A.4-torn-down owner keeps its own
+    deferred-free schedule)."""
+    owner_registry: "VpiRegistry"
+    owner_vpi: int
+
+
+@dataclasses.dataclass
 class VpiEntry:
     vpi: int
     pool_id: str
@@ -36,6 +56,11 @@ class VpiEntry:
     state: str = "ANCHORED"    # ANCHORED | TEARDOWN
     teardown_deadline: Optional[int] = None  # engine tick for deferred free
     meta: Optional[dict] = None
+    # cross-worker handoff state (see GrantRef): a zero-copy grant keeps the
+    # owner back-reference; the one-copy fallback instead carries the
+    # payload itself in ``stash`` (pages stay empty, pool never consulted)
+    grant: Optional[GrantRef] = None
+    stash: Optional[object] = None   # np.ndarray payload (cross_worker_copied)
 
 
 class VpiRegistry:
@@ -48,7 +73,8 @@ class VpiRegistry:
         self.grace_ticks = grace_ticks
         # telemetry (used by benchmarks & tests)
         self.stats = {"registered": 0, "hits": 0, "misses": 0, "released": 0,
-                      "deferred": 0, "collisions": 0}
+                      "deferred": 0, "collisions": 0,
+                      "grants_in": 0, "grants_out": 0}
 
     # -- key derivation ----------------------------------------------------
     def derive_key(self, label: bytes, *context: int) -> bytes:
@@ -82,6 +108,29 @@ class VpiRegistry:
         self.stats["registered"] += 1
         return vpi
 
+    def import_grant(self, owner: "VpiRegistry", owner_vpi: int,
+                     pool_id: str, pages, payload_len: int,
+                     stash=None) -> int:
+        """Cross-worker handoff: register a grant entry for an anchored
+        payload owned by another worker's registry. With ``stash=None``
+        the grant is **zero-copy** — ``pages`` reference the owner's pool
+        (the caller must pin them via
+        :meth:`~repro.core.anchor_pool.AnchorPool.export_grant`) and the
+        entry carries a :class:`GrantRef` so completion/teardown forwards
+        back to the owner. With a ``stash`` the entry is the **one-copy
+        fallback**: the payload bytes ride the entry itself (``pages``
+        empty, no owner back-reference — the owner side was released at
+        handoff)."""
+        vpi = self._make_vpi()
+        self._entries[vpi] = VpiEntry(
+            vpi, pool_id, list(pages), payload_len,
+            grant=(GrantRef(owner, owner_vpi) if stash is None else None),
+            stash=stash)
+        self.stats["registered"] += 1
+        self.stats["grants_in"] += 1
+        owner.stats["grants_out"] += 1
+        return vpi
+
     def resolve(self, vpi: int) -> Optional[VpiEntry]:
         e = self._entries.get(vpi)
         if e is None or e.state == "TEARDOWN":
@@ -95,6 +144,21 @@ class VpiRegistry:
         control-plane bookkeeping (the socket facade sizing a message)."""
         e = self._entries.get(vpi)
         return None if e is None or e.state == "TEARDOWN" else e
+
+    def handoffs(self) -> List[VpiEntry]:
+        """Live cross-worker handoff entries (grant back-reference or
+        stashed payload) — the shutdown reclaim sweep's view."""
+        return [e for e in self._entries.values()
+                if e.grant is not None or e.stash is not None]
+
+    def drop(self, vpi: int) -> Optional[VpiEntry]:
+        """Forcibly remove an entry regardless of refcount — an abandoned
+        cross-worker handoff reclaimed at shutdown (normal completion goes
+        through :meth:`release`). Returns the entry, or None."""
+        e = self._entries.pop(vpi, None)
+        if e is not None:
+            self.stats["released"] += 1
+        return e
 
     def torn_down(self, vpi: int) -> bool:
         """True while ``vpi`` sits in its §A.4 grace period: the handle was

@@ -12,12 +12,25 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+import functools
+
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.mlstm_scan import mlstm_scan as _mlstm_pallas
 from repro.kernels.paged_attention import paged_attention as _paged_pallas
 from repro.kernels.selective_copy import selective_copy as _selcopy_pallas
+from repro.kernels.selective_copy import (
+    selective_copy_donated as _selcopy_pallas_donated,
+)
 from repro.kernels.selective_copy import selective_gather as _selgather_pallas
+
+# donated oracle entries: same jnp bodies, outer jit donates the pool arg —
+# the resident DevicePool's rounds keep one pool buffer instead of two
+_selcopy_ref_donated = functools.partial(
+    jax.jit, static_argnames=("meta_max",), donate_argnums=(3,))
+_selcopy_ref_donated_plain = _selcopy_ref_donated(_ref.selective_copy_ref)
+_selcopy_ref_donated_crypto = _selcopy_ref_donated(
+    _ref.selective_copy_crypto_ref)
 
 
 def _on_tpu() -> bool:
@@ -52,7 +65,8 @@ def paged_attention(q, pool, tables, page_pos, seq_lens, *, window=0,
 
 
 def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
-                   impl="auto", reserved_scratch=False, keystream=None):
+                   impl="auto", reserved_scratch=False, keystream=None,
+                   donate_pool=False):
     """``reserved_scratch=True`` marks the pool's last row as the scratch
     page :class:`AnchorPool` reserved at allocation time — the fused kernel
     then runs with zero pool-sized copies (tables must never reference it).
@@ -60,9 +74,23 @@ def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
 
     ``keystream`` ([B, S] int32, zeros outside the payload region) is the
     kTLS-analogue hw mode: payload tokens are XORed with it inside the
-    anchoring pass (NIC-inline decrypt, zero extra passes)."""
+    anchoring pass (NIC-inline decrypt, zero extra passes).
+
+    ``donate_pool=True`` donates the pool argument through the outer jit
+    (every backend): the anchoring updates the caller's buffer in place —
+    ONE live pool allocation per round instead of input + output. Only for
+    callers that hand over ownership (the resident DevicePool); the input
+    array is deleted by XLA afterwards."""
     impl = _resolve(impl)
     if impl == "ref":
+        if donate_pool:
+            if keystream is None:
+                return _selcopy_ref_donated_plain(
+                    stream, meta_len, total_len, pool, tables,
+                    meta_max=meta_max)
+            return _selcopy_ref_donated_crypto(
+                stream, meta_len, total_len, pool, tables,
+                jnp.asarray(keystream), meta_max=meta_max)
         if keystream is None:
             return _ref.selective_copy_ref(stream, meta_len, total_len, pool,
                                            tables, meta_max=meta_max)
@@ -70,9 +98,10 @@ def selective_copy(stream, meta_len, total_len, pool, tables, *, meta_max,
             stream, meta_len, total_len, pool, tables,
             jnp.asarray(keystream), meta_max=meta_max)
     ks = None if keystream is None else jnp.asarray(keystream)
-    return _selcopy_pallas(stream, meta_len, total_len, pool, tables,
-                           meta_max=meta_max, interpret=(impl == "interpret"),
-                           reserved_scratch=reserved_scratch, keystream=ks)
+    entry = _selcopy_pallas_donated if donate_pool else _selcopy_pallas
+    return entry(stream, meta_len, total_len, pool, tables,
+                 meta_max=meta_max, interpret=(impl == "interpret"),
+                 reserved_scratch=reserved_scratch, keystream=ks)
 
 
 def selective_gather(pool, tables, lengths, *, impl="auto", keystream=None):

@@ -91,9 +91,7 @@ def _fused_kernel(mlen_ref, tlen_ref, tables_ref, stream_ref, *rest,
     pool_ref[0, :] = jnp.where(valid, toks, cur)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("meta_max", "interpret", "reserved_scratch"))
-def selective_copy(
+def _selective_copy_impl(
     stream: jax.Array,    # [B, S] int32
     meta_len: jax.Array,  # [B] int32
     total_len: jax.Array, # [B] int32
@@ -113,7 +111,16 @@ def selective_copy(
     reserved by :attr:`AnchorPool.scratch_page` at allocation time: nothing
     is concatenated, the donation is honoured in place, and ``new_pool``
     keeps the full (scratch-inclusive) shape. Table entries must never
-    reference the scratch row (the allocator never hands it out)."""
+    reference the scratch row (the allocator never hands it out).
+
+    Two jitted entry points share this body: :func:`selective_copy` (the
+    default; the caller keeps its pool buffer) and
+    :func:`selective_copy_donated`, whose outer jit **donates the pool
+    argument** — the resident :class:`~repro.core.device_pool.DevicePool`
+    uses it so the in-place aliasing inside the ``pallas_call`` composes
+    with outer-level donation and device rounds keep ONE pool buffer
+    instead of an input + an output copy. Callers of the donated entry
+    must not touch their pool array afterwards (XLA deletes it)."""
     b, s = stream.shape
     page = pool.shape[1]
     pps = tables.shape[1]
@@ -171,6 +178,20 @@ def selective_copy(
     if reserved_scratch:
         return meta, new_pool
     return meta, new_pool[: p_ext - 1]
+
+
+_JIT_STATICS = ("meta_max", "interpret", "reserved_scratch")
+
+#: default entry — pool buffer NOT donated (safe for callers that reuse it,
+#: e.g. parity checks running several impls against one pool)
+selective_copy = jax.jit(_selective_copy_impl, static_argnames=_JIT_STATICS)
+
+#: donating entry — the pool argument (index 3) is donated through the
+#: outer jit, so the resident device pool is updated truly in place
+#: (one live pool buffer across rounds; see DevicePool.anchor_batch_device)
+selective_copy_donated = jax.jit(_selective_copy_impl,
+                                 static_argnames=_JIT_STATICS,
+                                 donate_argnums=(3,))
 
 
 def _gather_kernel(len_ref, tables_ref, pool_ref, *rest,

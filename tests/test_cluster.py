@@ -1,0 +1,423 @@
+"""Multi-worker LibraCluster: RSS-style flow steering, the cross-worker
+VPI grant/migration protocol (zero-copy grants + the counted one-copy
+fallback), the §A.4 teardown interleave across workers, and the
+work-stealing cluster scheduler — all held byte- and counter-identical to
+a single-stack run of the same workload."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterRuntime,
+    LibraCluster,
+    LibraStack,
+    ProxyRuntime,
+    SteeringPolicy,
+    VpiRegistry,
+    build_delimited_message,
+    build_message,
+)
+
+RNG = np.random.default_rng(23)
+
+STACK_KW = dict(n_shards=4, pages_per_shard=128, page_size=16)
+
+
+def _cluster(n_workers=2, **kw):
+    for k, v in STACK_KW.items():
+        kw.setdefault(k, v)
+    kw.setdefault("secret", b"cl")
+    return LibraCluster(n_workers, **kw)
+
+
+def _workload(n_chans, n_msgs, seed=5, payload=40, builder=build_message):
+    rng = np.random.default_rng(seed)
+    return [[builder(rng.integers(100, 200, 4),
+                     rng.integers(1000, 2000, payload))
+             for _ in range(n_msgs)]
+            for _ in range(n_chans)]
+
+
+def _run_single(frames, **rt_kw):
+    stack = LibraStack(secret=b"cl", **STACK_KW)
+    rt = ProxyRuntime(stack, **rt_kw)
+    dsts = []
+    for chan_frames in frames:
+        src, dst = stack.socket_pair()
+        rt.channel(src, dst)
+        dsts.append(dst)
+        for f in chan_frames:
+            src.deliver(f)
+    rt.run()
+    wires = [d.tx_wire() for d in dsts]
+    snap = stack.counters.snapshot()
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    return wires, snap
+
+
+def _run_cluster(frames, cross_fraction, n_workers=2, cluster=None, **rt_kw):
+    """Channel i's src lands on worker i % W; a ``cross_fraction`` prefix
+    of channels places dst on the NEXT worker (cross-worker flows)."""
+    cl = cluster if cluster is not None else _cluster(n_workers)
+    crt = ClusterRuntime(cl, **rt_kw)
+    w = len(cl.workers)
+    dsts = []
+    for i, chan_frames in enumerate(frames):
+        sw = i % w
+        dw = (sw + 1) % w if i < cross_fraction * len(frames) else sw
+        src = cl.socket(worker=sw)
+        dst = cl.socket(worker=dw)
+        crt.channel(src, dst)
+        dsts.append(dst)
+        for f in chan_frames:
+            src.deliver(f)
+    crt.run()
+    wires = [d.tx_wire() for d in dsts]
+    snap = cl.counters_aggregate().snapshot()
+    crt.shutdown()
+    assert cl.pages_in_use == 0
+    return cl, wires, snap
+
+
+# ---------------------------------------------------------------------------
+# steering
+# ---------------------------------------------------------------------------
+
+def test_steering_same_flow_same_worker_across_reregistration():
+    """The consistent-hash property test: the same flow key maps to the
+    same worker on every lookup AND on a freshly-built policy with the
+    same parameters (placement survives re-registration)."""
+    flows = [("10.0.0.%d" % (i % 7), 1000 + i, "backend", 80 + i % 3)
+             for i in range(200)]
+    a = SteeringPolicy(4)
+    b = SteeringPolicy(4)
+    for f in flows:
+        w = a.worker_for(f)
+        assert a.worker_for(f) == w            # stable across lookups
+        assert b.worker_for(f) == w            # stable across registration
+    # rough balance: no worker owns more than 60% of flows
+    assert max(a.stats["per_worker"]) < 0.6 * len(a.placements) * 2
+
+
+def test_steering_resize_moves_a_minority_of_flows():
+    """Consistent hashing's point: growing the ring re-steers ~1/N of the
+    flows, not all of them."""
+    pol = SteeringPolicy(4)
+    flows = [("flow", i) for i in range(300)]
+    for f in flows:
+        pol.worker_for(f)
+    moved = pol.resteer(n_workers=5)
+    assert 0 < moved < 0.5 * len(flows)
+    assert pol.stats["resteers"] == 1 and pol.stats["moved"] == moved
+
+
+def test_app_defined_steering_and_socket_pair_affinity():
+    calls = []
+
+    def rsd(flow, n):
+        calls.append(flow)
+        return hash(flow) % n
+
+    cl = _cluster(3, steering="app", app_fn=rsd)
+    for i in range(12):
+        flow = ("conn", i)
+        src, dst = cl.socket_pair(flow=flow)
+        assert src.worker_id == dst.worker_id == rsd(flow, 3)
+    assert len(calls) >= 12
+    assert cl.steering.stats["steered"] >= 12
+
+
+# ---------------------------------------------------------------------------
+# cross-worker forwarding: the acceptance identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cross_fraction", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("batched", [False, True])
+def test_cluster_byte_and_counter_identical_to_single_stack(
+        cross_fraction, batched):
+    """At ANY cross-worker fraction, scalar or batched, the cluster
+    forwards byte-identical wires and its aggregate CopyCounters equal the
+    single-stack run — zero-copy grants ride on the side (counted
+    separately, never in the Fig. 9 categories)."""
+    frames = _workload(n_chans=6, n_msgs=4)
+    ref_wires, ref_snap = _run_single(frames, batched=batched)
+    cl, wires, snap = _run_cluster(frames, cross_fraction, batched=batched)
+    assert snap == ref_snap
+    for a, b in zip(ref_wires, wires):
+        assert np.array_equal(a, b)
+    expect_cross = cross_fraction > 0
+    assert (cl.stats["grants"] > 0) == expect_cross
+    assert cl.stats["copies"] == 0
+    agg = cl.counters_aggregate()
+    assert (agg.cross_worker_grants > 0) == expect_cross
+    assert agg.cross_worker_copied == 0
+
+
+def test_cross_worker_copied_fallback_when_dst_pool_above_watermark():
+    """A congested destination pool refuses the zero-copy import: the
+    payload is gathered ONCE out of the owner's pool (counted in
+    cross_worker_copied), the owner's anchor is released at handoff, and
+    the wire bytes are still identical."""
+    frames = _workload(n_chans=4, n_msgs=3)
+    ref_wires, ref_snap = _run_single(frames)
+    cl = _cluster(2)
+    cl.workers[1].high_watermark = 0.0     # w1 "congested" from the start
+    crt = ClusterRuntime(cl)
+    dsts = []
+    for chan_frames in frames:             # every flow src=w0 -> dst=w1
+        src = cl.socket(worker=0)
+        dst = cl.socket(worker=1)
+        crt.channel(src, dst)
+        dsts.append(dst)
+        for f in chan_frames:
+            src.deliver(f)
+    crt.run()
+    wires = [d.tx_wire() for d in dsts]
+    snap = cl.counters_aggregate().snapshot()
+    assert snap == ref_snap
+    for a, b in zip(ref_wires, wires):
+        assert np.array_equal(a, b)
+    assert cl.stats["copies"] > 0 and cl.stats["grants"] == 0
+    agg = cl.counters_aggregate()
+    assert agg.cross_worker_copied == cl.stats["copied_tokens"] > 0
+    crt.shutdown()
+    assert cl.pages_in_use == 0
+
+
+def test_grant_outlives_owner_teardown_grace():
+    """§A.4 interleave across workers: the owner socket closes and its
+    whole grace period expires while a grant is outstanding — the granted
+    payload stays readable (the grant's pin ref), and completing the
+    grantee's send releases the last reference."""
+    cl = _cluster(2)
+    w0, w1 = cl.workers
+    src = cl.socket(worker=0)
+    dst = cl.socket(worker=1)
+    meta = RNG.integers(100, 200, 4)
+    payload = RNG.integers(1000, 2000, 40)
+    src.deliver(build_message(meta, payload))
+    buf, n = src.recv(1 << 20)
+    vpi = next(iter(src.connection.anchored))
+    pages_used = w0.pages_in_use
+    assert pages_used > 0
+
+    granted = cl.grant_into(w1, vpi)
+    assert granted is not None and cl.stats["grants"] == 1
+    assert w0.alloc.granted_out_pages == pages_used
+
+    # owner closes; its ENTIRE grace period expires: the expiry drops the
+    # owner's own page references...
+    src.close()
+    freed = w0.drain()
+    assert freed == pages_used
+    assert vpi not in w0.registry          # owner entry fully gone
+    # ...but the grant's pin reference keeps the pages resident
+    assert w0.pages_in_use == pages_used
+
+    # the grantee can still transmit the payload, bytes intact (recv's
+    # buffer is [metadata..., VPI]: the handle sits in the last slot)
+    out = buf.copy()
+    out[-1] = VpiRegistry.to_token(granted)
+    sent = dst.send(out)
+    assert sent == (len(buf) - 1) + len(payload)
+    wire = dst.tx_wire()
+    assert np.array_equal(wire[-len(payload):], payload)
+    # completion dropped the last reference: owner pool fully reclaimed
+    assert w0.pages_in_use == 0
+    assert w0.alloc.granted_out_pages == 0
+    assert w1.pages_in_use == 0
+
+
+def test_grant_completion_with_live_owner_cleans_both_sides():
+    """The common case: owner stays open; grant completion performs the
+    exact single-stack cleanup on the owner (entry released, pages freed,
+    RX machine reset) plus the grant teardown on the grantee."""
+    cl = _cluster(2)
+    w0, w1 = cl.workers
+    src = cl.socket(worker=0)
+    dst = cl.socket(worker=1)
+    payload = RNG.integers(1000, 2000, 40)
+    src.deliver(build_message(RNG.integers(100, 200, 4), payload))
+    buf, _ = src.recv(1 << 20)
+    src.forward(dst, buf)                  # adoption happens inside
+    assert cl.stats["grants"] == 1
+    assert np.array_equal(dst.tx_wire()[-len(payload):], payload)
+    assert w0.pages_in_use == 0 and len(w0.registry) == 0
+    assert len(w1.registry) == 0
+    assert not src.connection.anchored
+    # cross-datapath cleanup reached the src RX machine (can recv again)
+    src.deliver(build_message(RNG.integers(100, 200, 4), payload))
+    buf2, n2 = src.recv(1 << 20)
+    assert n2 > 0
+
+
+def test_budget_truncated_cross_worker_send_resumes_and_completes():
+    """A cross-worker message truncated by the send budget resumes from
+    the cumulative offset exactly like a local one — including when the
+    owner tears down mid-flight."""
+    frames = _workload(n_chans=2, n_msgs=2, payload=60)
+    ref_wires, ref_snap = _run_single(frames, )
+    cl, wires, snap = _run_cluster(frames, 1.0, batched=False)
+    assert snap == ref_snap  # sanity: full-message runs agree
+
+    cl2 = _cluster(2)
+    src = cl2.socket(worker=0)
+    dst = cl2.socket(worker=1)
+    payload = RNG.integers(1000, 2000, 60)
+    src.deliver(build_message(RNG.integers(100, 200, 4), payload))
+    buf, _ = src.recv(1 << 20)
+    n = src.forward(dst, buf, budget=16)
+    assert 0 < n < len(payload)
+    src.close()
+    cl2.workers[0].drain()                 # owner's grace fully expires
+    while dst.pending_send is not None:
+        dst.send(budget=16)
+    assert np.array_equal(dst.tx_wire()[-len(payload):], payload)
+    cl2.drain()
+    assert cl2.pages_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# cluster scheduling: work stealing
+# ---------------------------------------------------------------------------
+
+def test_work_stealing_counter_identity_vs_pinned():
+    """All flows pinned to worker 0 (worst-case imbalance): the stealing
+    run services some quanta on idle workers — and produces EXACTLY the
+    same aggregate counters, messages, and wire bytes as the pinned run."""
+    frames = _workload(n_chans=6, n_msgs=4)
+
+    def run(stealing):
+        cl = _cluster(3, steering="app", app_fn=lambda flow, n: 0)
+        crt = ClusterRuntime(cl, work_stealing=stealing)
+        dsts = []
+        for chan_frames in frames:
+            src, dst = cl.socket_pair()
+            crt.channel(src, dst)
+            dsts.append(dst)
+            for f in chan_frames:
+                src.deliver(f)
+        crt.run()
+        wires = [d.tx_wire() for d in dsts]
+        snap = cl.counters_aggregate().snapshot()
+        msgs = crt.messages_forwarded()
+        stolen = crt.stats["stolen_quanta"]
+        crt.shutdown()
+        return wires, snap, msgs, stolen
+
+    wires_p, snap_p, msgs_p, stolen_p = run(False)
+    wires_s, snap_s, msgs_s, stolen_s = run(True)
+    assert stolen_p == 0 and stolen_s > 0
+    assert snap_s == snap_p and msgs_s == msgs_p
+    for a, b in zip(wires_p, wires_s):
+        assert np.array_equal(a, b)
+
+
+def test_run_parallel_completes_and_reports_per_worker_times():
+    frames = _workload(n_chans=4, n_msgs=3, builder=build_delimited_message)
+    cl = _cluster(2)
+    crt = ClusterRuntime(cl, work_stealing=False)
+    for i, chan_frames in enumerate(frames):
+        src, dst = cl.socket_pair("delimiter", flow=("f", i))
+        crt.channel(src, dst)
+        for f in chan_frames:
+            src.deliver(f)
+    msgs, times = crt.run_parallel()
+    assert msgs == sum(len(c) for c in frames)
+    assert len(times) == 2 and all(t >= 0 for t in times)
+    crt.shutdown()
+    assert cl.pages_in_use == 0
+
+
+def test_abandoned_grant_reclaimed_at_shutdown():
+    """A grant whose transmit never happens (message dropped, grantee
+    closed) must not pin the owner's pages forever: ClusterRuntime
+    shutdown reclaims abandoned handoff entries and the pools drain."""
+    cl = _cluster(2)
+    crt = ClusterRuntime(cl)
+    src = cl.socket(worker=0)
+    dst = cl.socket(worker=1)
+    crt.channel(src, dst)
+    src.deliver(build_message(RNG.integers(100, 200, 4),
+                              RNG.integers(1000, 2000, 40)))
+    buf, _ = src.recv(1 << 20)
+    vpi = next(iter(src.connection.anchored))
+    granted = cl.grant_into(cl.workers[1], vpi)
+    assert granted is not None          # grant outstanding, never sent
+    crt.shutdown()
+    assert cl.stats["grants_reclaimed"] == 1
+    assert cl.pages_in_use == 0
+    for w in cl.workers:
+        assert w.alloc.free_pages == w.alloc.total_pages
+        assert w.alloc.granted_out_pages == 0
+        assert len(w.registry) == 0
+
+
+def test_resteer_to_app_mode_without_callable_fails_cleanly():
+    pol = SteeringPolicy(4)
+    for i in range(10):
+        pol.worker_for(("f", i))
+    placements = dict(pol.placements)
+    with pytest.raises(ValueError):
+        pol.resteer(mode="app")
+    # nothing was half-mutated: same mode, same placements, no resteer
+    assert pol.mode == "hash" and pol.stats["resteers"] == 0
+    assert pol.placements == placements
+    assert pol.resteer(mode="app", app_fn=lambda f, n: 0) >= 0
+
+
+def test_chained_grant_flattens_to_root_owner():
+    """Re-granting a granted VPI to a third worker must pin and reference
+    the ROOT pool — completion releases the true owner, and the payload
+    bytes come from the pool that actually holds them."""
+    cl = _cluster(3)
+    w0, w1, w2 = cl.workers
+    src = cl.socket(worker=0)
+    dst = cl.socket(worker=2)
+    meta = RNG.integers(100, 200, 4)
+    payload = RNG.integers(1000, 2000, 40)
+    src.deliver(build_message(meta, payload))
+    buf, _ = src.recv(1 << 20)
+    vpi0 = next(iter(src.connection.anchored))
+    pages = w0.pages_in_use
+    vpi1 = cl.grant_into(w1, vpi0)          # w0 -> w1
+    vpi2 = cl.grant_into(w2, vpi1)          # w1 -> w2 (chained)
+    e2 = w2.registry.peek(vpi2)
+    assert e2.pool_id == w0.pool.pool_id    # flattened to the root pool
+    assert e2.grant.owner_vpi == vpi0       # and the root entry
+    assert w0.alloc.granted_out_pages == 2 * pages   # both grants pin w0
+    assert w1.alloc.granted_out_pages == 0
+    # w2 transmits: correct bytes, root cleaned up
+    out = buf.copy()
+    out[-1] = VpiRegistry.to_token(vpi2)
+    dst.send(out)
+    assert np.array_equal(dst.tx_wire()[-40:], payload)
+    assert vpi0 not in w0.registry
+    # the middleman's grant is now dangling-by-design; shutdown reclaims
+    cl.close_all()
+    cl.drain()
+    cl.reclaim_abandoned_grants()
+    for w in cl.workers:
+        assert w.alloc.free_pages == w.alloc.total_pages
+        assert w.alloc.granted_out_pages == 0
+
+
+def test_batched_cluster_counts_auth_rejects_on_the_channel():
+    """Batched parity for tamper telemetry: the dropped slot is counted on
+    the owning channel, as the scalar RecordAuthError path does."""
+    stack = LibraStack(secret=b"cl", **STACK_KW)
+    rt = ProxyRuntime(stack, batched=True)
+    src, dst = stack.socket_pair("length-prefixed", tls="hw")
+    ch = rt.channel(src, dst, name="bad")
+    frame = build_message(np.arange(5), RNG.integers(1000, 2000, 40))
+    rec = src.tls.seal(frame, src.parser.inner).copy()
+    rec[9] ^= 7
+    src.deliver(rec)
+    rt.run()
+    assert ch.stats.auth_rejects == 1 and ch.stats.messages == 0
+    # and the flow recovers
+    src.deliver(src.tls.seal(frame, src.parser.inner))
+    rt.run()
+    assert ch.stats.messages == 1
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages

@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
+    CopyCounters,
     CryptoRecordParser,
     LibraStack,
     ProxyRuntime,
@@ -19,6 +20,8 @@ from repro.core.crypto import (
     KS_MASK,
     REC_HEADER,
     REC_MAGIC,
+    TAG_SLOT,
+    RecordAuthError,
     keystream,
     keystream_batch,
     xor_tokens,
@@ -99,15 +102,16 @@ def test_seal_open_roundtrip_all_inner_protocols():
 
 
 def test_crypto_record_parser_semantics():
+    # header format: [REC_MAGIC, seq, inner_meta_len, payload_len, tag]
     p = CryptoRecordParser()
     assert p.parse(np.array([REC_MAGIC, 1])).need_more          # short header
     assert not p.parse(np.array([99, 0, 0, 0])).ok              # bad magic
     assert not p.parse(np.array([99, 0, 0, 0])).need_more
-    assert not p.parse(np.array([REC_MAGIC, 1, -2, 5])).ok      # bad lens
-    r = p.parse(np.array([REC_MAGIC, 4, 2, 50, 11, 12]))
+    assert not p.parse(np.array([REC_MAGIC, 1, -2, 5, 0])).ok   # bad lens
+    r = p.parse(np.array([REC_MAGIC, 4, 2, 50, 0, 11, 12]))
     assert r.ok and r.meta_len == REC_HEADER + 2 and r.payload_len == 50
     # header present but inner metadata still arriving
-    assert p.parse(np.array([REC_MAGIC, 4, 5, 50, 11])).need_more
+    assert p.parse(np.array([REC_MAGIC, 4, 5, 50, 0, 11])).need_more
 
 
 # ---------------------------------------------------------------------------
@@ -414,3 +418,140 @@ def test_mixed_plain_and_hw_sockets_share_one_batch():
     for s, p in zip(socks, payloads):
         (pages, ln), = s.connection.anchored.values()
         assert np.array_equal(stack.pool.read_payload(pages, ln), p)
+
+
+# ---------------------------------------------------------------------------
+# per-record auth tag (truncated blake2b)
+# ---------------------------------------------------------------------------
+
+def _tampered_record(sock, frame, flip_at):
+    """Seal a record toward ``sock`` and flip one ciphertext token."""
+    rec = sock.tls.seal(frame, sock.parser.inner)
+    rec = rec.copy()
+    rec[flip_at] ^= 0b101
+    return rec
+
+
+def test_record_tag_is_31_bit_and_survives_proxy_reseal():
+    """The tag authenticates the plaintext, so a proxy re-sealing the
+    record under its TX key preserves it — the wire-side open (which
+    verifies) accepts end-to-end proxied traffic."""
+    stack = _stack()
+    src = stack.socket("length-prefixed", tls="hw")
+    dst = stack.socket("length-prefixed", tls="hw")
+    frame = build_message(RNG.integers(100, 200, 5),
+                          RNG.integers(1000, 2000, 40))
+    rec = src.tls.seal(frame, src.parser.inner)
+    assert 0 <= int(rec[TAG_SLOT]) <= KS_MASK
+    src.deliver(rec)
+    buf, _ = src.recv(1 << 20)
+    src.forward(dst, buf)
+    # open_stream verifies every record tag; a mismatch would raise
+    got = open_stream(dst.tls.tx_key, dst.tx_wire())
+    assert np.array_equal(got, frame)
+
+
+@pytest.mark.parametrize("mode", ["sw", "hw"])
+def test_scalar_recv_rejects_tampered_record_and_frees_pages(mode):
+    """Tampered payload ciphertext: the RX verify (sw: on the decrypt
+    pass; hw: the record-layer check before the fused scatter) rejects
+    the record — nothing anchored, nothing delivered, stream advanced
+    past it, and the socket keeps working for the next good record."""
+    stack = _stack()
+    src = stack.socket("length-prefixed", tls=mode)
+    frame = build_message(RNG.integers(100, 200, 5),
+                          RNG.integers(1000, 2000, 40))
+    src.deliver(_tampered_record(src, frame, flip_at=REC_HEADER + 10))
+    free0 = stack.alloc.free_pages
+    with pytest.raises(RecordAuthError):
+        src.recv(1 << 20)
+    assert stack.alloc.free_pages == free0           # nothing anchored
+    assert src.rx_available() == 0                   # record consumed
+    assert src.tls.stats["auth_failures"] == 1
+    assert stack.counters.snapshot() == CopyCounters().snapshot()
+    # the connection recovers: the next good record flows normally
+    good = build_message(RNG.integers(100, 200, 5),
+                         RNG.integers(1000, 2000, 40))
+    src.deliver(src.tls.seal(good, src.parser.inner))
+    buf, n = src.recv(1 << 20)
+    assert n == REC_HEADER + 8 + 40
+
+
+def test_short_record_full_copy_path_rejects_tampering():
+    """Records below the admission threshold ride the native full-copy
+    path — the sw verify-on-decrypt still rejects tampering there."""
+    stack = _stack()
+    src = stack.socket("length-prefixed", tls="sw", min_payload=64)
+    frame = build_message(RNG.integers(100, 200, 4),
+                          RNG.integers(1000, 2000, 16))
+    src.deliver(_tampered_record(src, frame, flip_at=REC_HEADER + 8))
+    with pytest.raises(RecordAuthError):
+        src.recv(1 << 20)
+    assert src.rx_available() == 0
+    src.deliver(src.tls.seal(frame, src.parser.inner))
+    buf, n = src.recv(1 << 20)
+    assert np.array_equal(buf[REC_HEADER:], frame)   # decrypted whole record
+
+
+def test_batched_sweep_rejects_tampered_record_keeps_round_alive():
+    """hw-kTLS batched round with one tampered record among good ones:
+    the tag check folded into the keystream sweep drops ONLY the bad
+    slot — its pages return to the freelist, its bytes are consumed —
+    while the rest of the round anchors and delivers normally."""
+    stack = _stack()
+    socks, frames = [], []
+    for i in range(4):
+        s = stack.socket("length-prefixed", tls="hw")
+        f = build_message(RNG.integers(100, 200, 5),
+                          RNG.integers(1000, 2000, 40))
+        socks.append(s)
+        frames.append(f)
+        if i == 2:
+            s.deliver(_tampered_record(s, f, flip_at=REC_HEADER + 20))
+        else:
+            s.deliver(s.tls.seal(f, s.parser.inner))
+    free0 = stack.alloc.free_pages
+    results = stack.recv_batch(socks)
+    good_fds = {s.fileno() for i, s in enumerate(socks) if i != 2}
+    assert set(results) == good_fds
+    assert socks[2].tls.stats["auth_failures"] == 1
+    assert socks[2].rx_available() == 0              # bad record consumed
+    # only the good records' pages stay anchored
+    assert stack.alloc.free_pages == free0 - 3 * 3   # 40 tokens = 3 pages
+    # good flows decrypted correctly (inner metadata surfaced plaintext)
+    for i, s in enumerate(socks):
+        if i == 2:
+            continue
+        buf, n = results[s.fileno()]
+        assert np.array_equal(buf[REC_HEADER:-1], frames[i][:8])
+        assert n == REC_HEADER + 8 + 40
+
+
+def test_tampered_metadata_ciphertext_also_rejected():
+    stack = _stack()
+    src = stack.socket("length-prefixed", tls="hw")
+    frame = build_message(RNG.integers(100, 200, 5),
+                          RNG.integers(1000, 2000, 40))
+    src.deliver(_tampered_record(src, frame, flip_at=REC_HEADER + 1))
+    with pytest.raises(RecordAuthError):
+        src.recv(1 << 20)
+    assert src.tls.stats["auth_failures"] == 1
+
+
+def test_partial_serve_of_resident_tampered_record_rejected():
+    """A tiny user buffer serving only a prefix of a full-copy record must
+    not leak tampered plaintext: the whole resident record is verified
+    BEFORE any byte reaches the caller."""
+    stack = _stack()
+    src = stack.socket("length-prefixed", tls="sw", min_payload=64)
+    frame = build_message(RNG.integers(100, 200, 4),
+                          RNG.integers(1000, 2000, 16))
+    src.deliver(_tampered_record(src, frame, flip_at=REC_HEADER + 9))
+    with pytest.raises(RecordAuthError):
+        src.recv(7)                       # buffer far smaller than record
+    assert src.rx_available() == 0        # whole record consumed
+    assert src.tls.stats["auth_failures"] == 1
+    # and a good record still serves fine through a tiny buffer
+    src.deliver(src.tls.seal(frame, src.parser.inner))
+    buf, n = src.recv(7)
+    assert n == 7 and np.array_equal(buf[REC_HEADER:7], frame[:2])

@@ -348,3 +348,28 @@ def test_recv_batch_requires_full_logical_room():
     buf, logical = res[sock.fileno()]
     assert logical == 46                      # never a capped logical
     assert sock.connection.rx_machine.complete()
+
+
+# ---------------------------------------------------------------------------
+# outer-jit donation of the resident pool
+# ---------------------------------------------------------------------------
+
+def test_resident_anchor_rounds_donate_the_pool_buffer():
+    """The resident pool is donated through the outer jit on every
+    anchoring round: XLA consumes (deletes) the input pool buffer, so
+    exactly ONE pool allocation stays live per round instead of an input
+    plus an output copy. CPU XLA honours donation, so every anchor round
+    must verify as donated."""
+    stack, _, msgs, _ = _run_proxy(impl="ref")
+    x = stack.pool.xfer
+    assert msgs == 21
+    assert x["anchor_rounds"] > 0
+    assert x["donated_rounds"] == x["anchor_rounds"]
+    assert x["pool_syncs"] == 0
+
+
+def test_donation_composes_with_hw_ktls_keystream_rounds():
+    stack, _, _, _ = _run_proxy(impl="ref", tls="hw")
+    x = stack.pool.xfer
+    assert x["anchor_rounds"] > 0
+    assert x["donated_rounds"] == x["anchor_rounds"]

@@ -282,3 +282,134 @@ def test_shutdown_reclaims_everything():
     assert all(s.closed for ch in rt.channels for s in [ch.src] + ch.dsts)
     assert stack.alloc.free_pages == stack.alloc.total_pages
     assert len(stack.registry) == 0
+
+
+# ---------------------------------------------------------------------------
+# deficit round robin (weighted-fair scheduling)
+# ---------------------------------------------------------------------------
+
+def _drr_load(stack, rt, *, big=1000, small=100, n_big=30, n_small=450):
+    """Two backlogged flows with ~10:1 message sizes."""
+    chans = {}
+    for name, payload, n in (("big", big, n_big), ("small", small, n_small)):
+        src, dst = stack.socket_pair()
+        chans[name] = rt.channel(src, dst, name=name)
+        for _ in range(n):
+            src.deliver(build_message(RNG.integers(100, 200, 4),
+                                      RNG.integers(1000, 2000, payload)))
+    return chans
+
+
+def test_drr_equalizes_byte_share_across_10_to_1_message_sizes():
+    """The fairness property: under DRR, two channels whose messages
+    differ 10:1 in size converge to ~equal BYTE shares while both are
+    backlogged; a plain round-robin quantum-per-round scheduler hands the
+    big flow ~10x the bytes over the same rounds."""
+    shares = {}
+    for sched in ("drr", "round-robin"):
+        stack = _stack(pages_per_shard=512)
+        kw = {"quantum_bytes": 1200} if sched == "drr" else {}
+        rt = ProxyRuntime(stack, scheduler=sched, **kw)
+        chans = _drr_load(stack, rt)
+        for _ in range(20):
+            rt.step()
+        big = chans["big"].stats.logical_bytes
+        small = chans["small"].stats.logical_bytes
+        # both flows must still be backlogged for the share to be meaningful
+        assert chans["big"].ready() and chans["small"].ready()
+        shares[sched] = big / max(small, 1)
+        rt.run()            # drain so shutdown invariants hold
+        rt.shutdown()
+        assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert 0.5 < shares["drr"] < 2.0, shares
+    assert shares["round-robin"] > 4.0, shares
+
+
+def test_drr_deficit_exposed_and_reset_when_idle():
+    stack = _stack()
+    rt = ProxyRuntime(stack, scheduler="drr", quantum_bytes=500)
+    src, dst = stack.socket_pair()
+    ch = rt.channel(src, dst, name="only")
+    src.deliver(build_message(np.arange(4), RNG.integers(0, 9, 48)))
+    rt.run()
+    assert ch.stats.messages == 1
+    # the flow went idle: classic DRR forfeits the accumulated credit
+    assert ch.stats.deficit == 0.0
+    rt.shutdown()
+
+
+def test_drr_rejects_batched_mode():
+    stack = _stack()
+    with pytest.raises(AssertionError):
+        ProxyRuntime(stack, scheduler="drr", batched=True)
+
+
+def test_drr_forwards_messages_larger_than_one_quantum():
+    """Liveness: a head-of-line message bigger than quantum_bytes needs
+    several rounds of credit — accumulating deficit counts as progress,
+    so run() must not stop on the first credit-only round."""
+    stack = _stack()
+    rt = ProxyRuntime(stack, scheduler="drr", quantum_bytes=256)
+    src, dst = stack.socket_pair()
+    ch = rt.channel(src, dst, name="big")
+    payload = RNG.integers(1000, 2000, 1000)
+    src.deliver(build_message(np.arange(4), payload))
+    rt.run()
+    assert ch.stats.messages == 1
+    assert np.array_equal(dst.tx_wire()[-1000:], payload)
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_tampered_record_does_not_abort_the_event_loop():
+    """One flow delivering a tampered record must not kill the scalar
+    scheduler: the channel counts an auth reject and every healthy flow
+    keeps forwarding (mirrors the batched path's drop-the-slot)."""
+    from repro.core import seal_record
+
+    stack = _stack()
+    bad_src, bad_dst = stack.socket_pair("length-prefixed", tls="hw")
+    good_src, good_dst = stack.socket_pair()
+    rt = ProxyRuntime(stack)
+    bad_ch = rt.channel(bad_src, bad_dst, name="bad")
+    good_ch = rt.channel(good_src, good_dst, name="good")
+    frame = build_message(np.arange(5), RNG.integers(1000, 2000, 40))
+    rec = bad_src.tls.seal(frame, bad_src.parser.inner).copy()
+    rec[10] ^= 5                     # flip a ciphertext token
+    bad_src.deliver(rec)
+    good_payload = RNG.integers(1000, 2000, 40)
+    good_src.deliver(build_message(np.arange(4), good_payload))
+    rt.run()
+    assert bad_ch.stats.auth_rejects == 1 and bad_ch.stats.messages == 0
+    assert good_ch.stats.messages == 1
+    assert np.array_equal(good_dst.tx_wire()[-40:], good_payload)
+    # the tampered flow recovers on the next good record
+    bad_src.deliver(bad_src.tls.seal(frame, bad_src.parser.inner))
+    rt.run()
+    assert bad_ch.stats.messages == 1
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_drr_zero_byte_quantum_keeps_credit_charges_once():
+    """A quantum that accepts zero logical bytes (a reassembly fragment
+    absorbed under a tiny recv_buf) must keep the channel's deficit — the
+    message pays its real size exactly once, when it finally transmits
+    (the old behaviour pre-charged the estimated size AND the real bytes,
+    double-billing fragment- and EAGAIN-prone flows)."""
+    stack = _stack()
+    rt = ProxyRuntime(stack, scheduler="drr", quantum_bytes=2000)
+    src, dst = stack.socket_pair()
+    payload = RNG.integers(1000, 2000, 64)
+    ch = rt.channel(src, dst, recv_buf=4, name="frag")
+    src.deliver(build_message(np.array([101, 7, 7, 7]), payload))
+    rt.step()
+    # first quantum absorbed a fragment: zero logical bytes, full credit
+    assert ch.stats.logical_bytes == 0
+    assert ch.stats.deficit == rt.quantum_bytes
+    rt.run()
+    assert ch.stats.messages == 1
+    assert np.array_equal(dst.tx_wire()[-64:], payload)
+    assert ch.stats.logical_bytes == 3 + 4 + 64   # charged exactly once
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
