@@ -25,10 +25,15 @@ import jax
 import numpy as np
 
 from repro.kernels import ref as R
-from repro.kernels.selective_copy import selective_copy, selective_gather
+from repro.kernels.selective_copy import (
+    policy_match,
+    selective_copy,
+    selective_gather,
+)
 from repro.kernels.testing import (
     POOL_COPY_PRIMS,
     jaxpr_primitives,
+    policy_case,
     selcopy_case,
     selcopy_crypto_case,
     selgather_case,
@@ -120,11 +125,48 @@ def check_no_pool_copy() -> None:
     print("zero-realloc: reserved-scratch jaxpr has no concatenate/pad")
 
 
+def check_policy_parity() -> None:
+    """The L7 policy first-match kernel vs ``policy_match_ref``, bit-exact
+    across shapes, with and without the hw-kTLS keystream operand (the
+    kernel matches ciphertext XOR keystream)."""
+    rng = np.random.default_rng(45)
+    for b, meta_max, r, k in [(1, 8, 2, 1), (4, 16, 6, 3), (3, 32, 8, 2),
+                              (8, 16, 4, 4)]:
+        meta, ml, off, lo, hi, ks = policy_case(rng, b=b, meta_max=meta_max,
+                                                r=r, k=k)
+        for kk in (None, ks):
+            m = meta if kk is None else np.bitwise_xor(np.array(meta),
+                                                       np.array(kk))
+            got = policy_match(m, ml, off, lo, hi, interpret=True,
+                               keystream=kk)
+            want = R.policy_match_ref(m, ml, off, lo, hi, kk)
+            assert np.array_equal(np.array(got), np.array(want)), \
+                (b, meta_max, r, k, kk is not None, "policy")
+    print("parity: policy-match kernel == oracle (bit-exact, +keystream)")
+
+
+def check_policy_no_pool_copy() -> None:
+    """The match pass touches only the round's [B, M] metadata block — its
+    jaxpr must contain no pool-sized copy primitive and exactly one fused
+    kernel call."""
+    meta, ml, off, lo, hi, ks = policy_case(np.random.default_rng(9))
+    for kk in (None, ks):
+        fn = functools.partial(policy_match, interpret=True, keystream=kk)
+        names = jaxpr_primitives(jax.make_jaxpr(fn)(meta, ml, off, lo,
+                                                    hi).jaxpr)
+        bad = set(names) & set(POOL_COPY_PRIMS)
+        assert not bad, f"pool-sized copy in the policy match pass: {bad}"
+        assert names.count("pallas_call") == 1
+    print("zero-copy: policy match jaxpr is one fused kernel call")
+
+
 if __name__ == "__main__":
     check_parity()
     check_crypto_parity()
     check_gather_parity()
+    check_policy_parity()
     check_no_pool_copy()
     check_gather_no_pool_copy()
+    check_policy_no_pool_copy()
     print("check_kernel_parity: OK")
     sys.exit(0)

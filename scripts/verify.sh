@@ -8,7 +8,7 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== kernel parity: fused selective-copy + gather vs oracles (interpret mode) =="
+echo "== kernel parity: fused selective-copy + gather + policy-match vs oracles (interpret mode) =="
 python scripts/check_kernel_parity.py
 
 echo "== smoke: benchmarks/run.py --smoke =="

@@ -36,6 +36,11 @@ multiplexes N flows with mixed parser policies over one stack.
 * ``crypto``         — kTLS-analogue record layer (§B.1): record framing as
                        a parser policy, keyed token cipher, sw/hw session
                        modes (``stack.socket(..., tls='sw'|'hw')``)
+* ``policy``         — in-data-plane L7 policy engine: a
+                       :class:`PolicyTable` of matcher→action rules
+                       compiled to dense arrays, evaluated per batched
+                       round as one vectorized match pass fused into
+                       ``recv_batch`` (Python is the PUNT slow path)
 
 The free functions ``libra_recv``/``libra_send``/``libra_close``/
 ``expire_teardowns`` remain exported as the explicit-plumbing compatibility
@@ -68,6 +73,23 @@ from repro.core.parser import (
     build_message,
     kmp_find,
 )
+from repro.core.policy import (
+    Action,
+    MatchCond,
+    PolicyRule,
+    PolicyTable,
+    PythonPolicyRouter,
+    Verdict,
+    between,
+    drop,
+    eq,
+    forward,
+    prefix,
+    punt,
+    rate_limit,
+    rewrite,
+    rule,
+)
 from repro.core.runtime import (
     ChannelStats,
     LatencyHistogram,
@@ -96,6 +118,10 @@ __all__ = [
     "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",
     "build_message", "build_delimited_message", "build_chunked_message",
+    # L7 policy engine
+    "PolicyTable", "PolicyRule", "MatchCond", "Action", "Verdict",
+    "PythonPolicyRouter", "rule", "eq", "between", "prefix",
+    "forward", "rewrite", "rate_limit", "drop", "punt",
     # kTLS-analogue record layer
     "CryptoRecordParser", "TlsSession", "REC_MAGIC", "RecordAuthError",
     "seal_record", "seal_stream", "open_record", "open_stream", "record_tag",

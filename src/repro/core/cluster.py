@@ -393,13 +393,49 @@ class ClusterRuntime:
 
     def __init__(self, cluster: LibraCluster, *,
                  work_stealing: bool = True, steal_batch: int = 4,
-                 **rt_kw):
+                 policy=None, **rt_kw):
         self.cluster = cluster
-        self.runtimes = [ProxyRuntime(w, **rt_kw) for w in cluster.workers]
+        # per-worker L7 policy tables: a PolicyTable is cloned per worker
+        # (token-bucket state is worker-local, like every other hot-path
+        # structure); a callable ``policy(worker_id)`` builds each worker's
+        # table instead, for deliberately heterogeneous clusters
+        if policy is None:
+            tables = [None] * len(cluster.workers)
+        elif callable(policy):
+            tables = [policy(i) for i in range(len(cluster.workers))]
+        else:
+            tables = [policy.clone() for _ in cluster.workers]
+        self.policies = tables
+        self.runtimes = [ProxyRuntime(w, policy=t, **rt_kw)
+                         for w, t in zip(cluster.workers, tables)]
         self.work_stealing = work_stealing
         self.steal_batch = steal_batch
         self.rounds = 0
         self.stats = {"steals": 0, "stolen_quanta": 0}
+
+    def policy_summary(self) -> dict:
+        """Cluster-wide policy telemetry: the field-wise sum of each
+        worker's table stats (mirroring :meth:`LibraCluster.
+        counters_aggregate` — the totals must match a single-worker run of
+        the same workload), plus the per-worker summaries."""
+        per_worker = [None if t is None else t.summary()
+                      for t in self.policies]
+        agg: dict = {}
+        for s in per_worker:
+            if s is None:
+                continue
+            for k, v in s.items():
+                if isinstance(v, int):
+                    agg[k] = agg.get(k, 0) + v
+                elif isinstance(v, list):
+                    cur = agg.setdefault(k, [0] * len(v))
+                    for i, x in enumerate(v):
+                        cur[i] += x
+                elif isinstance(v, dict):
+                    cur = agg.setdefault(k, {})
+                    for rk, rv in v.items():
+                        cur[rk] = cur.get(rk, 0) + rv
+        return {"aggregate": agg, "per_worker": per_worker}
 
     # -- registration --------------------------------------------------------
     def channel(self, src: LibraSocket, dst, **kw) -> ProxyChannel:

@@ -1,0 +1,476 @@
+"""In-data-plane L7 policy engine — a vectorized policy table fused into
+the batched metadata pass.
+
+Libra's bet is that proxies only need small *metadata* in user space while
+the bulk payload stays below the boundary. This module pushes the routing
+decision itself below the boundary too (the "Offloading L7 Policies to the
+Kernel" / XLB direction): a :class:`PolicyTable` is an ordered list of
+rules — header-prefix / byte-range matchers over the metadata tokens →
+an action — that **compiles to dense int32 arrays** and is evaluated for a
+whole batched round as ONE vectorized first-match pass
+(:func:`repro.kernels.ops.policy_match`: pure-jnp oracle, interpret-mode
+Pallas kernel, or the real TPU kernel — plus an int64-exact numpy path for
+the host datapath). Matched messages are admitted, matched, and queued for
+``forward_batch`` to their verdict backend without the per-channel Python
+routing callbacks ever running; Python becomes the slow-path exception
+handler (``PUNT``).
+
+Match semantics (the contract shared by the kernel, the jnp oracle, the
+numpy fast path, and :meth:`PolicyTable.interpret` — the naive Python
+interpreter the property tests compare against):
+
+* a condition ``(offset, lo, hi)`` holds iff ``offset < meta_len`` and
+  ``lo <= meta[offset] <= hi`` (padding slots, ``offset == -1``, always
+  hold);
+* a rule matches iff all its conditions hold;
+* the verdict row is the FIRST matching rule (rule order is priority);
+  ``R`` (the row count) is the no-match sentinel.
+
+Action semantics (resolved host-side from the matched row — the stateful
+O(B) part; matching is the O(B·R·K) data-plane part):
+
+* ``FORWARD(backend_k)`` — route to the channel's ``dsts[k]``.
+* ``REWRITE(slot, value, backend)`` — patch metadata token ``slot`` then
+  forward. A slot outside the metadata PUNTs (``rewrite-overflow``); a
+  rewrite on an encrypted record PUNTs too (``rewrite-crypto``: patching
+  sealed metadata would break the record's auth tag).
+* ``RATE_LIMIT(rate, burst, backend, per)`` — token bucket (``rate``
+  tokens/tick refill, ``burst`` capacity, milli-token granularity so the
+  dense encoding round-trips), keyed per rule or — ``per=offset`` — per
+  tenant token ``meta[offset]``. A debit forwards; an empty bucket PUNTs
+  (``rate-limited``) so Python decides what an over-limit flow deserves.
+* ``DROP`` — consume the message and free its anchored pages
+  (:meth:`LibraStack.drop_message`), nothing transmitted.
+* ``PUNT`` — explicit slow-path escape.
+
+``PUNT`` verdicts (no match, rewrite overflow, rate-limited, malformed
+header, unknown backend) always fall back to the channel's existing
+``rewrite``/``router`` callback path; per-verdict counters live in
+:class:`~repro.core.stream.CopyCounters` (``policy_hits`` /
+``policy_punts`` / ``policy_drops`` / ``policy_rate_debits`` — event
+counters, excluded from the Fig. 9 copy-identity snapshot, summed by
+``LibraCluster.counters_aggregate``) and in :attr:`PolicyTable.stats`.
+
+:class:`PythonPolicyRouter` is the contrast baseline: the SAME table
+evaluated message-by-message by the naive interpreter, exposed through the
+classic per-channel callback slots — what the offload bypasses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: action kinds (dense ``act_kind`` encoding, stable across compile/decode)
+ACT_FORWARD, ACT_REWRITE, ACT_RATE_LIMIT, ACT_DROP, ACT_PUNT = range(5)
+
+#: milli-token fixed point for rates/bursts in the dense int32 encoding
+_MILLI = 1000
+
+#: PUNT reasons (Verdict.reason / stats keys)
+PUNT_NO_MATCH = "no-match"
+PUNT_RULE = "rule-punt"
+PUNT_RATE_LIMITED = "rate-limited"
+PUNT_REWRITE_OVERFLOW = "rewrite-overflow"
+PUNT_REWRITE_CRYPTO = "rewrite-crypto"
+PUNT_MALFORMED = "malformed"
+PUNT_BAD_BACKEND = "bad-backend"
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchCond:
+    """``lo <= meta[offset] <= hi`` (and ``offset < meta_len``)."""
+    offset: int
+    lo: int
+    hi: int
+
+    def __post_init__(self):
+        assert self.offset >= 0, "condition offsets are metadata positions"
+        assert self.lo <= self.hi, (self.lo, self.hi)
+
+
+def eq(offset: int, value: int) -> MatchCond:
+    """Equality matcher on one metadata token."""
+    return MatchCond(offset, value, value)
+
+
+def between(offset: int, lo: int, hi: int) -> MatchCond:
+    """Inclusive byte-range matcher on one metadata token."""
+    return MatchCond(offset, lo, hi)
+
+
+def prefix(*values: int) -> Tuple[MatchCond, ...]:
+    """Header-prefix matcher: tokens 0..n-1 must equal ``values``."""
+    return tuple(eq(i, v) for i, v in enumerate(values))
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: int
+    backend: int = 0          # FORWARD / REWRITE / RATE_LIMIT target
+    slot: int = 0             # REWRITE metadata position
+    value: int = 0            # REWRITE replacement token
+    rate_millis: int = 0      # RATE_LIMIT refill (milli-tokens / tick)
+    burst_millis: int = 0     # RATE_LIMIT bucket capacity (milli-tokens)
+    key_offset: int = -1      # RATE_LIMIT bucket key meta[offset]; -1 = rule
+
+
+def forward(backend: int = 0) -> Action:
+    return Action(ACT_FORWARD, backend=backend)
+
+
+def rewrite(slot: int, value: int, backend: int = 0) -> Action:
+    return Action(ACT_REWRITE, backend=backend, slot=slot, value=value)
+
+
+def rate_limit(rate: float, burst: float = 1.0, *, backend: int = 0,
+               per: int = -1) -> Action:
+    """``rate`` tokens/tick refill, ``burst`` capacity (both rounded to
+    milli-tokens); ``per`` keys the bucket on ``meta[per]`` (per-tenant)."""
+    return Action(ACT_RATE_LIMIT, backend=backend,
+                  rate_millis=int(round(rate * _MILLI)),
+                  burst_millis=int(round(burst * _MILLI)), key_offset=per)
+
+
+def drop() -> Action:
+    return Action(ACT_DROP)
+
+
+def punt() -> Action:
+    return Action(ACT_PUNT)
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyRule:
+    conds: Tuple[MatchCond, ...]
+    action: Action
+    name: str = dataclasses.field(default="", compare=False)
+
+
+def rule(action: Action, *conds, name: str = "") -> PolicyRule:
+    """Build a rule; conds may be :class:`MatchCond` or tuples of them
+    (so :func:`prefix` splices in directly)."""
+    flat: List[MatchCond] = []
+    for c in conds:
+        flat.extend(c if isinstance(c, (tuple, list)) else (c,))
+    return PolicyRule(tuple(flat), action, name=name)
+
+
+@dataclasses.dataclass
+class Verdict:
+    """One message's resolved policy outcome."""
+    kind: str                 # 'forward' | 'drop' | 'punt'
+    backend: int = 0
+    rule: int = -1            # matched row (R = no match)
+    reason: str = ""          # punt reason
+    rewrites: Tuple[Tuple[int, int], ...] = ()
+
+
+class PolicyTable:
+    """Ordered policy rules compiled to dense int32 arrays.
+
+    The dense form is ``(cond_off, cond_lo, cond_hi)`` — each ``[R, K]``
+    int32, ``-1`` offsets padding always-true slots — plus the action
+    columns ``(act_kind, act_a, act_b, act_c, act_d)`` (each ``[R]``
+    int32). :meth:`decode` reconstructs the source rows from the dense
+    arrays alone (rule names excepted), so compilation is lossless —
+    the property tests round-trip it.
+    """
+
+    def __init__(self, rules: Sequence[PolicyRule]):
+        self.rules: Tuple[PolicyRule, ...] = tuple(rules)
+        assert self.rules, "a PolicyTable needs at least one rule"
+        r = len(self.rules)
+        k = max(max((len(ru.conds) for ru in self.rules), default=1), 1)
+        self.cond_off = np.full((r, k), -1, np.int32)
+        self.cond_lo = np.zeros((r, k), np.int32)
+        self.cond_hi = np.zeros((r, k), np.int32)
+        acts = np.zeros((5, r), np.int32)   # kind, a, b, c, d
+        for i, ru in enumerate(self.rules):
+            for j, c in enumerate(ru.conds):
+                for v in (c.offset, c.lo, c.hi):
+                    assert -(1 << 31) <= v < (1 << 31), \
+                        "conditions must fit the int32 device plane"
+                self.cond_off[i, j] = c.offset
+                self.cond_lo[i, j] = c.lo
+                self.cond_hi[i, j] = c.hi
+            a = ru.action
+            acts[0, i] = a.kind
+            if a.kind in (ACT_FORWARD, ACT_RATE_LIMIT):
+                acts[1, i] = a.backend
+            if a.kind == ACT_REWRITE:
+                acts[1, i] = a.backend
+                acts[2, i] = a.slot
+                acts[3, i] = a.value
+            if a.kind == ACT_RATE_LIMIT:
+                acts[2, i] = a.rate_millis
+                acts[3, i] = a.burst_millis
+                acts[4, i] = a.key_offset
+        (self.act_kind, self.act_a, self.act_b,
+         self.act_c, self.act_d) = acts
+        # token buckets: (rule, key) -> [milli-tokens, last refill tick]
+        self._buckets: Dict[Tuple[int, int], List[int]] = {}
+        self.stats: Dict[str, object] = {
+            "rounds": 0, "matched": 0, "no_match": 0, "forwards": 0,
+            "drops": 0, "punts": 0, "rate_debits": 0,
+            "rule_hits": [0] * r,
+            "punts_by_reason": {},
+        }
+
+    @property
+    def n_rules(self) -> int:
+        return len(self.rules)
+
+    def clone(self) -> "PolicyTable":
+        """Same rules, fresh buckets/stats (per-worker tables)."""
+        return PolicyTable(self.rules)
+
+    # -- dense form --------------------------------------------------------
+    def dense(self) -> Tuple[np.ndarray, ...]:
+        return (self.cond_off, self.cond_lo, self.cond_hi, self.act_kind,
+                self.act_a, self.act_b, self.act_c, self.act_d)
+
+    @classmethod
+    def decode(cls, cond_off, cond_lo, cond_hi, act_kind, act_a, act_b,
+               act_c, act_d) -> "PolicyTable":
+        """Rebuild the source rows from the dense arrays (names lost)."""
+        rules = []
+        for i in range(len(act_kind)):
+            conds = tuple(
+                MatchCond(int(cond_off[i, j]), int(cond_lo[i, j]),
+                          int(cond_hi[i, j]))
+                for j in range(cond_off.shape[1]) if cond_off[i, j] >= 0)
+            kind = int(act_kind[i])
+            if kind == ACT_FORWARD:
+                a = Action(kind, backend=int(act_a[i]))
+            elif kind == ACT_REWRITE:
+                a = Action(kind, backend=int(act_a[i]), slot=int(act_b[i]),
+                           value=int(act_c[i]))
+            elif kind == ACT_RATE_LIMIT:
+                a = Action(kind, backend=int(act_a[i]),
+                           rate_millis=int(act_b[i]),
+                           burst_millis=int(act_c[i]),
+                           key_offset=int(act_d[i]))
+            else:
+                a = Action(kind)
+            rules.append(PolicyRule(conds, a))
+        return cls(rules)
+
+    # -- matching ----------------------------------------------------------
+    def interpret(self, meta: np.ndarray, meta_len: int) -> int:
+        """Naive Python interpreter of the rows — the oracle the vectorized
+        pass (and the kernel) must agree with. Returns the first matching
+        row, or ``n_rules``."""
+        for i, ru in enumerate(self.rules):
+            if all(c.offset < meta_len and c.lo <= int(meta[c.offset]) <= c.hi
+                   for c in ru.conds):
+                return i
+        return self.n_rules
+
+    def match_rows(self, metas: np.ndarray, meta_lens: np.ndarray,
+                   keystreams: Optional[np.ndarray] = None) -> np.ndarray:
+        """Vectorized numpy first-match over a round: ``metas`` [B, M]
+        (int64-exact host truth), ``meta_lens`` [B] → [B] row indices.
+        ``keystreams`` (same shape, 0 where plaintext) is XORed in first —
+        matching against *decrypted* metadata without a separate pass."""
+        m = metas if keystreams is None else np.bitwise_xor(
+            metas, keystreams.astype(metas.dtype))
+        mm = m.shape[1]
+        off = self.cond_off.astype(np.int64)                 # [R, K]
+        vals = m[:, np.clip(off, 0, mm - 1)]                 # [B, R, K]
+        pad = off < 0
+        present = (~pad) & (off < meta_lens[:, None, None]) & (off < mm)
+        ok = pad[None] | (present & (vals >= self.cond_lo) &
+                          (vals <= self.cond_hi))
+        rule_ok = ok.all(axis=2)                             # [B, R]
+        return np.where(rule_ok.any(axis=1), rule_ok.argmax(axis=1),
+                        self.n_rules).astype(np.int32)
+
+    def match_batch(self, metas: np.ndarray, meta_lens: np.ndarray, *,
+                    keystreams: Optional[np.ndarray] = None,
+                    impl: str = "host") -> np.ndarray:
+        """One vectorized match pass for a whole batched round.
+        ``impl='host'`` is the int64-exact numpy path; anything else goes
+        through :func:`repro.kernels.ops.policy_match` (the fused kernel /
+        its jnp oracle) on the int32 device plane — rounds whose tokens do
+        not survive int32 bounce back to the numpy path (the same rule as
+        the anchoring pass)."""
+        self.stats["rounds"] += 1
+        if impl != "host":
+            lo, hi = int(metas.min(initial=0)), int(metas.max(initial=0))
+            if -(1 << 31) <= lo and hi < (1 << 31):
+                from repro.kernels import ops
+
+                ks = (None if keystreams is None
+                      else np.asarray(keystreams, np.int32))
+                rids = ops.policy_match(
+                    np.asarray(metas, np.int32),
+                    np.asarray(meta_lens, np.int32),
+                    self.cond_off, self.cond_lo, self.cond_hi,
+                    impl=impl, keystream=ks)
+                return np.asarray(rids, np.int32)
+        return self.match_rows(metas, meta_lens, keystreams)
+
+    # -- action resolution (host-side, stateful) ---------------------------
+    def _bucket_debit(self, row: int, key: int, now: int) -> bool:
+        """Token bucket for RATE_LIMIT rows: refill by rate·Δtick (capped
+        at burst), then try to debit one token. Milli-token integer math —
+        deterministic for identical (trace, tick) schedules."""
+        b = self._buckets.get((row, key))
+        if b is None:
+            b = [int(self.act_c[row]), now]    # start full
+            self._buckets[(row, key)] = b
+        tokens, last = b
+        tokens = min(int(self.act_c[row]),
+                     tokens + (now - last) * int(self.act_b[row]))
+        if tokens >= _MILLI:
+            b[0], b[1] = tokens - _MILLI, now
+            return True
+        b[0], b[1] = tokens, now
+        return False
+
+    def _resolve_one(self, rid: int, meta: np.ndarray, meta_len: int,
+                     crypto: bool, now: int, counters=None) -> Verdict:
+        st = self.stats
+        if rid >= self.n_rules:
+            st["no_match"] += 1
+            return Verdict("punt", rule=self.n_rules, reason=PUNT_NO_MATCH)
+        st["matched"] += 1
+        st["rule_hits"][rid] += 1
+        kind = int(self.act_kind[rid])
+        if kind == ACT_FORWARD:
+            return Verdict("forward", backend=int(self.act_a[rid]), rule=rid)
+        if kind == ACT_REWRITE:
+            slot = int(self.act_b[rid])
+            if crypto:
+                # patching sealed metadata would break the record's auth
+                # tag downstream — only the slow path may re-frame it
+                return Verdict("punt", rule=rid, reason=PUNT_REWRITE_CRYPTO)
+            if slot >= meta_len:
+                return Verdict("punt", rule=rid,
+                               reason=PUNT_REWRITE_OVERFLOW)
+            return Verdict("forward", backend=int(self.act_a[rid]), rule=rid,
+                           rewrites=((slot, int(self.act_c[rid])),))
+        if kind == ACT_RATE_LIMIT:
+            key_off = int(self.act_d[rid])
+            key = int(meta[key_off]) if 0 <= key_off < meta_len else -1
+            if self._bucket_debit(rid, key, now):
+                st["rate_debits"] += 1
+                if counters is not None:
+                    counters.policy_rate_debits += 1
+                return Verdict("forward", backend=int(self.act_a[rid]),
+                               rule=rid)
+            return Verdict("punt", rule=rid, reason=PUNT_RATE_LIMITED)
+        if kind == ACT_DROP:
+            return Verdict("drop", rule=rid)
+        return Verdict("punt", rule=rid, reason=PUNT_RULE)
+
+    def resolve(self, rids: np.ndarray, metas: np.ndarray,
+                meta_lens: np.ndarray, *, crypto: Sequence[bool],
+                now: int, counters=None) -> List[Verdict]:
+        """Resolve a round's matched rows to verdicts, in round order
+        (token-bucket debits are sequential, mirroring the scalar
+        schedule). ``metas`` must be the *plaintext* metadata."""
+        return [self._resolve_one(int(rid), metas[i], int(meta_lens[i]),
+                                  bool(crypto[i]), now, counters)
+                for i, rid in enumerate(rids)]
+
+    def decide(self, buf: np.ndarray, *, parser, crypto: bool = False,
+               now: int = 0, counters=None) -> Verdict:
+        """Scalar-path verdict for one delivered message (``[meta...,
+        VPI]`` or a full copy): parse for the metadata boundary, run the
+        naive interpreter, resolve. Unparseable frames PUNT
+        (``malformed``)."""
+        buf = np.asarray(buf)
+        res = parser.parse(buf)
+        if not res.ok or res.meta_len > len(buf):
+            self.stats["rounds"] += 1
+            return Verdict("punt", rule=self.n_rules, reason=PUNT_MALFORMED)
+        self.stats["rounds"] += 1
+        rid = self.interpret(buf, res.meta_len)
+        return self._resolve_one(rid, buf, res.meta_len, crypto, now,
+                                 counters)
+
+    # -- verdict accounting (apply side) -----------------------------------
+    def note_outcome(self, verdict: Verdict) -> None:
+        """Count the outcome a channel actually applied (forwards vs punts
+        may diverge from resolution when e.g. the backend index is out of
+        range for the channel)."""
+        st = self.stats
+        if verdict.kind == "forward":
+            st["forwards"] += 1
+        elif verdict.kind == "drop":
+            st["drops"] += 1
+        else:
+            st["punts"] += 1
+            by = st["punts_by_reason"]
+            by[verdict.reason] = by.get(verdict.reason, 0) + 1
+
+    def summary(self) -> Dict[str, object]:
+        """JSON-friendly telemetry snapshot."""
+        out = dict(self.stats)
+        out["rule_hits"] = list(self.stats["rule_hits"])
+        out["punts_by_reason"] = dict(self.stats["punts_by_reason"])
+        out["buckets"] = len(self._buckets)
+        return out
+
+
+class PythonPolicyRouter:
+    """The per-channel Python slow path the offload bypasses, as a
+    baseline: the SAME :class:`PolicyTable` rules evaluated message-by-
+    message by the naive interpreter, exposed through the classic
+    ``rewrite``/``router`` callback slots of :class:`ProxyChannel`.
+
+    Wire it as ``ProxyChannel(..., rewrite=r.rewrite, router=r.router)``
+    (``rewrite`` runs first and caches the verdict the immediately
+    following ``router`` call consumes — the channel calls them back to
+    back per message). A DROP verdict returns ``None`` from ``router``,
+    which the channel treats as "consume and free" — the same
+    :meth:`LibraStack.drop_message` path the offloaded verdict takes. Byte
+    and Fig. 9 counter streams are identical to the offloaded table on the
+    same trace; only the policy_* event counters (which the baseline does
+    not touch) differ.
+    """
+
+    def __init__(self, table: PolicyTable, dsts: Sequence, *, parser,
+                 crypto: bool = False, stack=None,
+                 punt_router=None, punt_rewrite=None):
+        self.table = table
+        self.dsts = list(dsts)
+        self.parser = parser
+        self.crypto = crypto
+        self.stack = stack
+        self.punt_router = punt_router
+        self.punt_rewrite = punt_rewrite
+        self._verdict: Optional[Verdict] = None
+
+    def _now(self) -> int:
+        return self.stack.now_tick if self.stack is not None else 0
+
+    def rewrite(self, buf: np.ndarray, logical: int) -> np.ndarray:
+        v = self.table.decide(buf, parser=self.parser, crypto=self.crypto,
+                              now=self._now())
+        if v.kind == "forward" and v.backend >= len(self.dsts):
+            v = Verdict("punt", rule=v.rule, reason=PUNT_BAD_BACKEND)
+        self._verdict = v
+        if v.kind == "forward" and v.rewrites:
+            out = np.array(buf)
+            for slot, value in v.rewrites:
+                out[slot] = value
+            return out
+        if v.kind == "punt" and self.punt_rewrite is not None:
+            return self.punt_rewrite(buf, logical)
+        return buf
+
+    def router(self, buf: np.ndarray, logical: int):
+        v, self._verdict = self._verdict, None
+        assert v is not None, "router called without a preceding rewrite"
+        self.table.note_outcome(v)
+        if v.kind == "forward":
+            return self.dsts[v.backend]
+        if v.kind == "drop":
+            return None
+        if self.punt_router is not None:
+            return self.punt_router(buf, logical)
+        return self.dsts[0]

@@ -43,6 +43,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.crypto import RecordAuthError
+from repro.core.policy import PUNT_BAD_BACKEND, Verdict
 from repro.core.socket import Events, LibraSocket
 from repro.core.stack import SEND_EAGAIN, LibraStack
 from repro.core.state_machine import St
@@ -52,6 +53,8 @@ Rewrite = Callable[[np.ndarray, int], np.ndarray]
 
 #: sentinel: a quantum consumed input but produced nothing to transmit
 _IDLE = object()
+#: policy verdict said PUNT: fall through to the channel's Python callbacks
+_PUNT = object()
 
 
 class LatencyHistogram:
@@ -108,6 +111,8 @@ class ChannelStats:
     quanta: int = 0            # scheduling quanta consumed
     bp_pauses: int = 0         # quanta skipped by pool backpressure
     auth_rejects: int = 0      # tampered records rejected by the tag check
+    drops: int = 0             # messages consumed by a DROP verdict (or a
+                               # router callback returning None)
     # deficit-round-robin state (scheduler="drr"): the channel's current
     # byte deficit — grows by quantum_bytes per round while backlogged,
     # shrinks by the logical bytes each serviced message accepted, resets
@@ -126,6 +131,7 @@ class ProxyChannel:
                  dst: Union[LibraSocket, Sequence[LibraSocket]], *,
                  router: Optional[Router] = None,
                  rewrite: Optional[Rewrite] = None,
+                 policy=None,
                  recv_buf: int = 1 << 20,
                  budget: Optional[int] = None,
                  priority: int = 0,
@@ -136,6 +142,14 @@ class ProxyChannel:
             list(dst) if isinstance(dst, (list, tuple)) else [dst])
         self.router = router      # (buf, logical) -> backend socket
         self.rewrite = rewrite    # (buf, logical) -> outgoing buffer
+        # offloaded L7 routing: a PolicyTable whose verdicts replace the
+        # rewrite/router callbacks for matched messages. Batched rounds
+        # compute verdicts in recv_batch's fused match pass; scalar quanta
+        # (and batched fallbacks) resolve through the same table in Python.
+        # PUNT verdicts fall through to the callbacks above — they are the
+        # slow path the offload keeps, not a competing mechanism.
+        self.policy = policy
+        self._pending_verdict = None   # verdict parked by the fused pass
         self.recv_buf = recv_buf
         self.budget = budget
         self.priority = priority
@@ -272,9 +286,59 @@ class ProxyChannel:
             self._rx_parts, self._rx_logical = [], 0
         if logical == 0:
             return _IDLE
+        if self.policy is not None:
+            v, self._pending_verdict = self._pending_verdict, None
+            if v is None:
+                # scalar quantum (or batched fallback): same table, Python
+                # resolution — the slow path the offload keeps
+                st = self.src.stack
+                v = self.policy.decide(
+                    buf, parser=self.src.parser,
+                    crypto=self.src.connection.crypto is not None,
+                    now=st.now_tick, counters=st.counters)
+            intent = self._apply_verdict(v, buf, logical)
+            if intent is not _PUNT:
+                return intent
         out = self.rewrite(buf, logical) if self.rewrite else buf
         dst = self.router(buf, logical) if self.router else self.dsts[0]
+        if dst is None:
+            # the router declined the message (the Python baseline's DROP):
+            # consume it and free its anchored pages — the same path a
+            # DROP verdict takes, so baselines stay byte/page-identical
+            return self._drop(buf)
         return out, dst, logical
+
+    def _apply_verdict(self, v: Verdict, buf: np.ndarray, logical: int):
+        """Turn a fused-pass (or scalar-path) policy verdict into a
+        transmit intent: FORWARD → ``(out, dst, logical)`` with REWRITE
+        patches applied to a copy, DROP → consume and free, PUNT (including
+        a backend index this channel does not have) → the ``_PUNT``
+        sentinel, handing the message to the classic callbacks."""
+        counters = self.src.stack.counters
+        if v.kind == "forward" and v.backend >= len(self.dsts):
+            v = Verdict("punt", rule=v.rule, reason=PUNT_BAD_BACKEND)
+        self.policy.note_outcome(v)
+        if v.kind == "forward":
+            counters.policy_hits += 1
+            out = buf
+            if v.rewrites:
+                out = np.array(buf)
+                for slot, value in v.rewrites:
+                    out[slot] = value
+            return out, self.dsts[v.backend], logical
+        if v.kind == "drop":
+            counters.policy_drops += 1
+            return self._drop(buf)
+        counters.policy_punts += 1
+        return _PUNT
+
+    def _drop(self, buf: np.ndarray):
+        """Consume a delivered message without transmitting: release its
+        anchor (pages straight back to the freelist) and report the
+        fragment-absorbed intent (``None`` = progress, nothing to send)."""
+        self.src.stack.drop_message(buf, self.src)
+        self.stats.drops += 1
+        return None
 
     def _start_send(self, out, dst: LibraSocket,
                     logical: Optional[int] = None) -> bool:
@@ -337,11 +401,16 @@ class ProxyRuntime:
                  tick_every: int = 16, batched: bool = False,
                  batch_impl: str = "host",
                  batch_tile: Optional[int] = None,
-                 quantum_bytes: int = 1024):
+                 quantum_bytes: int = 1024,
+                 policy=None):
         assert scheduler in self.SCHEDULERS, scheduler
         assert not (batched and scheduler == "drr"), \
             "drr is a scalar-quanta policy (batched rounds fuse the ready set)"
         self.stack = stack
+        # runtime-wide L7 PolicyTable: channels registered without their own
+        # table inherit it, and batched rounds whose whole tile shares it
+        # fuse the match into recv_batch's data-plane pass
+        self.policy = policy
         self.scheduler = scheduler
         self.quantum_bytes = quantum_bytes
         self.tick_every = tick_every
@@ -361,6 +430,8 @@ class ProxyRuntime:
 
     # -- registration --------------------------------------------------------
     def register(self, channel: ProxyChannel) -> ProxyChannel:
+        if channel.policy is None:
+            channel.policy = self.policy
         self.channels.append(channel)
         return channel
 
@@ -508,11 +579,17 @@ class ProxyRuntime:
         if not batch:
             return 0
         progressed = 0
+        # fuse the L7 match into the recv pass only when the whole tile
+        # shares ONE table (mixed tables would double-debit token buckets);
+        # channels with their own tables still resolve in _ingest
+        pol = self.policy
+        if pol is not None and not all(ch.policy is pol for ch in batch):
+            pol = None
         t0 = time.perf_counter()
         results = self.stack.recv_batch(
             [ch.src for ch in batch],
             {ch.src.fileno(): ch.recv_buf for ch in batch},
-            impl=self.batch_impl)
+            impl=self.batch_impl, policy=pol)
         # data-plane time only: scalar fallbacks below record their own
         # quanta and must not inflate the batched channels' share
         dp_elapsed = time.perf_counter() - t0
@@ -520,6 +597,13 @@ class ProxyRuntime:
         n_batched = 0
         for ch in batch:
             r = results.get(ch.src.fileno())
+            # pop the fused pass's verdict (if any); messages mid-
+            # reassembly keep it parked on the channel until the last
+            # fragment arrives — the match ran on the full metadata
+            v = ch.src._policy_verdict
+            ch.src._policy_verdict = None
+            if r is not None and v is not None:
+                ch._pending_verdict = v
             if r is None:
                 if ch.src._auth_rejected:
                     # the auth sweep dropped this channel's record: count

@@ -92,6 +92,10 @@ class LibraSocket:
         # record (the batch drops the slot instead of raising); the
         # runtime reads-and-clears it to attribute the reject to a channel
         self._auth_rejected = False
+        # set by recv_batch's fused L7 policy pass: the Verdict for the
+        # message this socket delivered in the round; the runtime pops it
+        # into the owning channel so routing skips the per-channel callbacks
+        self._policy_verdict = None
 
     # -- identity / state ---------------------------------------------------
     def fileno(self) -> int:

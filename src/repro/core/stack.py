@@ -30,6 +30,7 @@ from repro.core.crypto import (
 )
 from repro.core.device_pool import DevicePool, DeviceRangeError
 from repro.core.egress import expire_teardowns
+from repro.core.ingress import reset_rx_from_tx
 from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolicy
 from repro.core.socket import Events, LibraSocket
 from repro.core.state_machine import MIN_PAYLOAD, St
@@ -55,6 +56,12 @@ class _BatchItem:
     payload: np.ndarray = None   # zero-copy rx window (valid until advance)
     ks: np.ndarray = None        # hw-kTLS RX keystream (fused into the scatter)
     plain: np.ndarray = None     # payload plaintext the auth sweep produced
+    # policy-offload operands (captured only when a policy rides the round):
+    # the pre-decrypt inner metadata and its keystream span, so the device
+    # match pass can run on ciphertext + keystream exactly like the kernel's
+    # other crypto operands (host rounds match the plaintext directly)
+    cmeta: np.ndarray = None
+    meta_ks: np.ndarray = None
 
 
 def _fits_int32(a: np.ndarray) -> bool:
@@ -196,6 +203,7 @@ class LibraStack:
         buf_len: Union[int, Dict[int, int]] = 1 << 20,
         *,
         impl: str = "host",
+        policy=None,
     ) -> Dict[int, Tuple[np.ndarray, int]]:
         """Batched instrumented recvmsg (§3.3) across many sockets.
 
@@ -218,6 +226,16 @@ class LibraStack:
         nothing syncs back (rows materialize lazily for scalar readers);
         the legacy host pool (``device_pool=False``) pays one whole-pool
         bounce per round (``pool.xfer['pool_syncs']``).
+
+        ``policy`` (a :class:`~repro.core.policy.PolicyTable`) fuses the
+        L7 routing decision into this same metadata pass: ONE vectorized
+        first-match sweep over the round's metadata block resolves every
+        message's verdict (token-bucket debits included, in round order)
+        and leaves it on ``sock._policy_verdict`` for the runtime to apply
+        — matched messages go straight to ``forward_batch`` without the
+        per-channel Python routing callbacks. hw-kTLS rows are matched as
+        ciphertext + keystream on the device plane (the kernel's fused
+        decrypt), plaintext on the host plane — identical verdicts.
 
         ``buf_len`` is one size for all sockets or a per-fd mapping.
         Returns ``{fd: (buffer, logical_len)}`` for the serviced sockets;
@@ -321,6 +339,12 @@ class LibraStack:
             for it, ks in zip(crypt, kss):
                 imeta = it.meta_len - REC_HEADER
                 crypto = it.sock.connection.crypto
+                if policy is not None:
+                    # keep the ciphertext inner metadata + its keystream
+                    # span: the device match pass consumes them as the
+                    # kernel's keystream operand (fused decrypt-and-match)
+                    it.cmeta = it.meta.copy()
+                    it.meta_ks = ks[:imeta]
                 it.meta[REC_HEADER:] = np.bitwise_xor(it.meta[REC_HEADER:],
                                                       ks[:imeta])
                 it.ks = ks[imeta:]
@@ -351,6 +375,10 @@ class LibraStack:
                 items = [it for it in items if id(it) not in rejected]
                 if not items:
                     return {}
+
+        # -- L7 policy: ONE vectorized match pass for the round -------------
+        if policy is not None:
+            self._policy_match_round(items, policy, impl)
 
         # -- payload anchoring: ONE fused pass for the whole round ----------
         if impl != "host" and not all(
@@ -398,6 +426,85 @@ class LibraStack:
             self._note_anchor_owner(it.sock)
             results[it.sock.fileno()] = (buf, logical)
         return results
+
+    def _policy_match_round(self, items: List[_BatchItem], policy,
+                            impl: str) -> None:
+        """The fused L7 routing decision for one batched round: flatten the
+        round's (already materialized) metadata into one [B, M] block, run
+        the table's vectorized first-match pass once, resolve actions in
+        round order (token buckets debit here), and park each verdict on
+        its socket for the runtime to consume. Device impls match hw-kTLS
+        rows as ciphertext + keystream (the kernel's fused decrypt); the
+        host impl matches the plaintext the crypt sweep already produced —
+        the verdicts are identical either way."""
+        mm = max(it.meta_len for it in items)
+        b = len(items)
+        pmetas = np.zeros((b, mm), np.int64)
+        mlens = np.empty((b,), np.int32)
+        for i, it in enumerate(items):
+            pmetas[i, : it.meta_len] = it.meta
+            mlens[i] = it.meta_len
+        if impl == "host":
+            rids = policy.match_batch(pmetas, mlens)
+        else:
+            cmetas = pmetas
+            ksm = None
+            if any(it.cmeta is not None for it in items):
+                cmetas = pmetas.copy()
+                ksm = np.zeros((b, mm), np.int64)
+                for i, it in enumerate(items):
+                    if it.cmeta is not None:
+                        cmetas[i, : it.meta_len] = it.cmeta
+                        ksm[i, REC_HEADER : it.meta_len] = it.meta_ks
+            rids = policy.match_batch(cmetas, mlens, keystreams=ksm,
+                                      impl=impl)
+        verdicts = policy.resolve(
+            rids, pmetas, mlens,
+            crypto=[it.sock.connection.crypto is not None for it in items],
+            now=self.now_tick, counters=self.counters)
+        for it, v in zip(items, verdicts):
+            it.sock._policy_verdict = v
+
+    def drop_message(self, msg: np.ndarray, sock: LibraSocket) -> bool:
+        """Policy ``DROP``: consume a delivered ``[meta..., VPI]`` message
+        without transmitting it — the registry reference is released and
+        the anchored pages go straight back to the freelist (no §A.4 grace:
+        the verdict is an explicit discard, not a dangling close). ``sock``
+        supplies the parser that framed the message. Full-copy messages
+        (no live anchor) have nothing below the boundary to free. Returns
+        True when an anchor was released.
+
+        Dropping plays the egress-completion role end to end: the socket's
+        RX machine is parked awaiting Post-Send cleanup (§3.4) after a
+        selective delivery, so the drop performs the same
+        :func:`reset_rx_from_tx` a completed transmit would — without it
+        the connection would wedge in FAST_PATH forever."""
+        buf64 = np.asarray(msg, np.int64)
+        try:
+            _meta_len, vpi, entry, _res = sock._peek_message(buf64)
+            if entry is None:
+                return False
+            if entry.stash is not None:
+                # one-copy handoff entry: the payload rides the entry itself
+                self.registry.release(vpi)
+                return True
+            pages = [PageRef(*pg) for pg in entry.pages]
+            if entry.grant is not None:
+                # cross-worker grant: release our entry and the pin on the
+                # owner's pages
+                owner_alloc = self.pool_for_entry(entry).alloc
+                if self.registry.release(vpi):
+                    owner_alloc.release_export(pages)
+                return True
+            owner = self._anchor_owner(vpi)
+            if self.registry.release(vpi):
+                self.alloc.free_pages_list(pages)
+            if owner is not None:
+                owner.connection.anchored.pop(vpi, None)
+            self._gc_anchor_owners()
+            return True
+        finally:
+            reset_rx_from_tx(sock.connection)
 
     def _recv_batch_device(self, items: List[_BatchItem], impl: str) -> bool:
         """Flatten the round into one [B, S] batch and run the fused

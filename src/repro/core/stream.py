@@ -375,6 +375,15 @@ class CopyCounters:
     # with the cross-worker machinery's own cost visible on the side.
     cross_worker_grants: int = 0
     cross_worker_copied: int = 0
+    # L7 policy-offload verdicts (repro.core.policy). Event counters like
+    # cross_worker_grants: an offloaded run must stay Fig.-9-identical to
+    # the same trace routed by Python callbacks, so all four stay out of
+    # snapshot() — and, as plain dataclass fields, flow into
+    # LibraCluster.counters_aggregate() with everything else.
+    policy_hits: int = 0         # messages routed by the table (no Python)
+    policy_punts: int = 0        # verdicts bounced to the callback slow path
+    policy_drops: int = 0        # messages consumed + pages freed by DROP
+    policy_rate_debits: int = 0  # RATE_LIMIT token-bucket debits
 
     def total_user_copies(self) -> int:
         return self.meta_copied + self.full_copied + self.crypto_copied

@@ -22,6 +22,7 @@ from repro.kernels.selective_copy import selective_copy as _selcopy_pallas
 from repro.kernels.selective_copy import (
     selective_copy_donated as _selcopy_pallas_donated,
 )
+from repro.kernels.selective_copy import policy_match as _polmatch_pallas
 from repro.kernels.selective_copy import selective_gather as _selgather_pallas
 
 # donated oracle entries: same jnp bodies, outer jit donates the pool arg —
@@ -117,6 +118,23 @@ def selective_gather(pool, tables, lengths, *, impl="auto", keystream=None):
         return _ref.selective_gather_ref(pool, tables, lengths, ks)
     return _selgather_pallas(pool, tables, lengths,
                              interpret=(impl == "interpret"), keystream=ks)
+
+
+def policy_match(meta, meta_len, cond_off, cond_lo, cond_hi, *, impl="auto",
+                 keystream=None):
+    """L7 policy-table first-match pass over one batched round's metadata
+    block: [B, M] meta × dense [R, K] conditions → [B] first matching rule
+    (R = no match). ``keystream`` (0 on plaintext lanes) fuses the hw-kTLS
+    metadata decrypt into the match. The routing-decision half of the
+    in-data-plane policy engine (:mod:`repro.core.policy` resolves actions
+    host-side)."""
+    impl = _resolve(impl)
+    ks = None if keystream is None else jnp.asarray(keystream)
+    if impl == "ref":
+        return _ref.policy_match_ref(meta, meta_len, cond_off, cond_lo,
+                                     cond_hi, ks)
+    return _polmatch_pallas(meta, meta_len, cond_off, cond_lo, cond_hi,
+                            interpret=(impl == "interpret"), keystream=ks)
 
 
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):

@@ -169,6 +169,38 @@ def selective_gather_ref(
     return jnp.where(valid, out, 0)
 
 
+def policy_match_ref(
+    meta: jax.Array,       # [B, M] int32 metadata tokens (round-padded)
+    meta_len: jax.Array,   # [B] int32 valid metadata lengths
+    cond_off: jax.Array,   # [R, K] int32 condition offsets (-1 = padding)
+    cond_lo: jax.Array,    # [R, K] int32 inclusive lower bounds
+    cond_hi: jax.Array,    # [R, K] int32 inclusive upper bounds
+    keystream: Optional[jax.Array] = None,   # [B, M] int32 or None
+) -> jax.Array:
+    """L7 policy table first-match pass (the in-data-plane routing
+    decision). A condition holds iff its offset is padding (< 0) or
+    ``offset < meta_len`` and ``lo <= meta[offset] <= hi``; a rule matches
+    iff all K conditions hold; the result is the FIRST matching rule per
+    message (rule order is priority), ``R`` when none match. ``keystream``
+    (0 on plaintext lanes) is XORed in before matching — the hw-kTLS
+    analogue matches against *decrypted* metadata without a separate
+    decrypt pass. Returns [B] int32 rule indices."""
+    b, mm = meta.shape
+    r, k = cond_off.shape
+    m = meta if keystream is None else jnp.bitwise_xor(
+        meta, keystream.astype(meta.dtype))
+    vals = m[:, jnp.clip(cond_off, 0, mm - 1)]               # [B, R, K]
+    pad = cond_off < 0                                        # [R, K]
+    present = (~pad) & (cond_off[None] < meta_len[:, None, None]) \
+        & (cond_off[None] < mm)
+    ok = pad[None] | (present & (vals >= cond_lo[None])
+                      & (vals <= cond_hi[None]))
+    rule_ok = ok.all(axis=2)                                  # [B, R]
+    ridx = jnp.arange(r, dtype=jnp.int32)
+    return jnp.min(jnp.where(rule_ok, ridx[None, :], r),
+                   axis=1).astype(jnp.int32)
+
+
 def mlstm_scan_ref(q, k, v, log_i, log_f):
     """Sequential mLSTM oracle. q/k/v [B, H, S, dh]; gates [B, H, S].
     Returns h [B, H, S, dh]."""

@@ -194,6 +194,88 @@ selective_copy_donated = jax.jit(_selective_copy_impl,
                                  donate_argnums=(3,))
 
 
+def _policy_kernel(mlen_ref, meta_ref, *rest, m: int, r: int, k: int,
+                   has_ks: bool):
+    if has_ks:
+        ks_ref, off_ref, lo_ref, hi_ref, out_ref = rest
+    else:
+        off_ref, lo_ref, hi_ref, out_ref = rest
+    b = pl.program_id(0)
+    mlen = mlen_ref[b]
+    row = meta_ref[0, :]                                   # [M]
+    if has_ks:
+        # hw-kTLS: match against decrypted metadata — the keystream XOR
+        # fused into the match pass, no separate decrypt
+        row = jnp.bitwise_xor(row, ks_ref[0, :])
+    off = off_ref[:, :]                                    # [R, K]
+    lo = lo_ref[:, :]
+    hi = hi_ref[:, :]
+    # gather meta[off] for every condition without dynamic indexing: a
+    # one-hot lane mask per condition, reduced over the metadata lanes
+    lane = jax.lax.broadcasted_iota(jnp.int32, (r * k, m), 1)
+    oh = lane == off.reshape(r * k, 1)
+    vals = jnp.sum(jnp.where(oh, jnp.broadcast_to(row[None, :], (r * k, m)),
+                             0), axis=1).reshape(r, k)
+    pad = off < 0
+    present = (~pad) & (off < mlen) & (off < m)
+    ok = pad | (present & (vals >= lo) & (vals <= hi))
+    rule_ok = jnp.all(ok, axis=1)                          # [R]
+    ridx = jax.lax.broadcasted_iota(jnp.int32, (r,), 0)
+    out_ref[0, 0] = jnp.min(jnp.where(rule_ok, ridx, r))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def policy_match(
+    meta: jax.Array,       # [B, M] int32 metadata tokens (round-padded)
+    meta_len: jax.Array,   # [B] int32
+    cond_off: jax.Array,   # [R, K] int32 (-1 = padding slot)
+    cond_lo: jax.Array,    # [R, K] int32
+    cond_hi: jax.Array,    # [R, K] int32
+    *,
+    interpret: bool = False,
+    keystream: jax.Array = None,   # [B, M] int32 (hw-kTLS) or None
+) -> jax.Array:
+    """L7 policy-table first-match kernel — the in-data-plane routing
+    decision, fused into the batched metadata pass. One grid step per
+    message evaluates all R×K dense conditions against that message's
+    metadata row in VMEM and writes the first matching rule index (``R``
+    = no match). The optional ``keystream`` operand (same [B, M] layout,
+    zeros on plaintext lanes) XORs the metadata inside the same step, so
+    hw-kTLS rounds match against decrypted metadata with zero extra
+    passes. Touches only [B, M] metadata and the [R, K] table — never the
+    payload pool — so the hot path performs no pool-sized copy by
+    construction (gated in check_kernel_parity). Matches
+    ``kernels.ref.policy_match_ref``. Returns [B] int32."""
+    b, m = meta.shape
+    r, k = cond_off.shape
+    has_ks = keystream is not None
+    if has_ks:
+        assert keystream.shape == meta.shape, (keystream.shape, meta.shape)
+
+    meta_spec = pl.BlockSpec((1, m), lambda b_, ml: (b_, 0))
+    table_spec = pl.BlockSpec((r, k), lambda b_, ml: (0, 0))
+    in_specs = [meta_spec]
+    operands = [meta]
+    if has_ks:
+        in_specs.append(meta_spec)       # keystream rides the meta layout
+        operands.append(keystream)
+    in_specs += [table_spec, table_spec, table_spec]
+    operands += [cond_off, cond_lo, cond_hi]
+
+    out = pl.pallas_call(
+        functools.partial(_policy_kernel, m=m, r=r, k=k, has_ks=has_ks),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b,),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1), lambda b_, ml: (b_, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=interpret,
+    )(meta_len, *operands)
+    return out[:, 0]
+
+
 def _gather_kernel(len_ref, tables_ref, pool_ref, *rest,
                    page: int, has_ks: bool):
     if has_ks:

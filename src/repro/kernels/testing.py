@@ -80,6 +80,28 @@ def selgather_case(rng: np.random.Generator, b: int = 2, page: int = 8,
             jnp.array(ks))
 
 
+def policy_case(rng: np.random.Generator, b: int = 4, meta_max: int = 16,
+                r: int = 6, k: int = 3) -> Tuple:
+    """(meta, meta_len, cond_off, cond_lo, cond_hi, keystream) for the
+    policy-match kernel: random metadata rows with random valid lengths, a
+    dense [R, K] condition table mixing padding slots (-1), in-range and
+    out-of-range offsets, and narrow/wide value bands (so matches, misses
+    and no-match sentinels all occur), plus a [B, M] 31-bit keystream
+    zeroed past each row's metadata (the hw-kTLS operand: the kernel
+    matches meta XOR keystream)."""
+    meta = rng.integers(0, 200, (b, meta_max)).astype(np.int32)
+    meta_len = rng.integers(1, meta_max + 1, b).astype(np.int32)
+    cond_off = rng.integers(-1, meta_max + 3, (r, k)).astype(np.int32)
+    lo = rng.integers(0, 200, (r, k)).astype(np.int32)
+    width = rng.integers(0, 120, (r, k)).astype(np.int32)
+    ks = rng.integers(0, 1 << 31, (b, meta_max)).astype(np.int32)
+    pos = np.arange(meta_max)[None, :]
+    ks = np.where(pos < meta_len[:, None], ks, 0).astype(np.int32)
+    return (jnp.array(meta), jnp.array(meta_len), jnp.array(cond_off),
+            jnp.array(lo), jnp.array((lo + width).astype(np.int32)),
+            jnp.array(ks))
+
+
 def jaxpr_primitives(jaxpr) -> List[str]:
     """All primitive names in a jaxpr, recursing through call/closed-call
     params (pjit bodies etc.)."""
