@@ -28,6 +28,7 @@ BENCHES = [
     ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
     ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("policy_proxy", "benchmarks.bench_policy_proxy"),
+    ("chaos_proxy", "benchmarks.bench_chaos_proxy"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
     ("fig8_vs_copier", "benchmarks.bench_sota"),
     ("fig9_microarch", "benchmarks.bench_microarch"),
@@ -44,6 +45,7 @@ SMOKE_BENCHES = [
     ("cluster_proxy", "benchmarks.bench_cluster_proxy"),
     ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("policy_proxy", "benchmarks.bench_policy_proxy"),
+    ("chaos_proxy", "benchmarks.bench_chaos_proxy"),
     ("fig6e_single_stream", "benchmarks.bench_single_stream"),
 ]
 

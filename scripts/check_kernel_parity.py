@@ -34,6 +34,7 @@ from repro.kernels.testing import (
     POOL_COPY_PRIMS,
     jaxpr_primitives,
     policy_case,
+    policy_live_column,
     selcopy_case,
     selcopy_crypto_case,
     selgather_case,
@@ -128,35 +129,45 @@ def check_no_pool_copy() -> None:
 def check_policy_parity() -> None:
     """The L7 policy first-match kernel vs ``policy_match_ref``, bit-exact
     across shapes, with and without the hw-kTLS keystream operand (the
-    kernel matches ciphertext XOR keystream)."""
+    kernel matches ciphertext XOR keystream) and the backend-health
+    ``live`` rule mask (dead rules must lose the first-match scan)."""
     rng = np.random.default_rng(45)
     for b, meta_max, r, k in [(1, 8, 2, 1), (4, 16, 6, 3), (3, 32, 8, 2),
                               (8, 16, 4, 4)]:
         meta, ml, off, lo, hi, ks = policy_case(rng, b=b, meta_max=meta_max,
                                                 r=r, k=k)
+        live = policy_live_column(rng, r)
         for kk in (None, ks):
-            m = meta if kk is None else np.bitwise_xor(np.array(meta),
-                                                       np.array(kk))
-            got = policy_match(m, ml, off, lo, hi, interpret=True,
-                               keystream=kk)
-            want = R.policy_match_ref(m, ml, off, lo, hi, kk)
-            assert np.array_equal(np.array(got), np.array(want)), \
-                (b, meta_max, r, k, kk is not None, "policy")
-    print("parity: policy-match kernel == oracle (bit-exact, +keystream)")
+            for lv in (None, live):
+                m = meta if kk is None else np.bitwise_xor(np.array(meta),
+                                                           np.array(kk))
+                got = policy_match(m, ml, off, lo, hi, interpret=True,
+                                   keystream=kk, live=lv)
+                want = R.policy_match_ref(m, ml, off, lo, hi, kk, lv)
+                assert np.array_equal(np.array(got), np.array(want)), \
+                    (b, meta_max, r, k, kk is not None, lv is not None,
+                     "policy")
+    print("parity: policy-match kernel == oracle (bit-exact, "
+          "+keystream, +live)")
 
 
 def check_policy_no_pool_copy() -> None:
     """The match pass touches only the round's [B, M] metadata block — its
     jaxpr must contain no pool-sized copy primitive and exactly one fused
-    kernel call."""
-    meta, ml, off, lo, hi, ks = policy_case(np.random.default_rng(9))
+    kernel call (the health column rides along without adding a pass)."""
+    rng = np.random.default_rng(9)
+    meta, ml, off, lo, hi, ks = policy_case(rng)
+    live = policy_live_column(rng, off.shape[0])
     for kk in (None, ks):
-        fn = functools.partial(policy_match, interpret=True, keystream=kk)
-        names = jaxpr_primitives(jax.make_jaxpr(fn)(meta, ml, off, lo,
-                                                    hi).jaxpr)
-        bad = set(names) & set(POOL_COPY_PRIMS)
-        assert not bad, f"pool-sized copy in the policy match pass: {bad}"
-        assert names.count("pallas_call") == 1
+        for lv in (None, live):
+            fn = functools.partial(policy_match, interpret=True,
+                                   keystream=kk, live=lv)
+            names = jaxpr_primitives(jax.make_jaxpr(fn)(meta, ml, off, lo,
+                                                        hi).jaxpr)
+            bad = set(names) & set(POOL_COPY_PRIMS)
+            assert not bad, \
+                f"pool-sized copy in the policy match pass: {bad}"
+            assert names.count("pallas_call") == 1
     print("zero-copy: policy match jaxpr is one fused kernel call")
 
 

@@ -11,6 +11,9 @@ python -m pytest -x -q
 echo "== kernel parity: fused selective-copy + gather + policy-match vs oracles (interpret mode) =="
 python scripts/check_kernel_parity.py
 
+echo "== failover recovery: standard chaos scenario (identity + conservation + zero leaks) =="
+python scripts/check_failover_recovery.py
+
 echo "== smoke: benchmarks/run.py --smoke =="
 python -m benchmarks.run --smoke
 

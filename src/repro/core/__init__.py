@@ -40,7 +40,14 @@ multiplexes N flows with mixed parser policies over one stack.
                        :class:`PolicyTable` of matcher→action rules
                        compiled to dense arrays, evaluated per batched
                        round as one vectorized match pass fused into
-                       ``recv_batch`` (Python is the PUNT slow path)
+                       ``recv_batch`` (Python is the PUNT slow path);
+                       epoch-versioned hot swap, plus the
+                       :class:`HealthTable` backend circuit breaker that
+                       feeds the match pass's ``live`` rule mask
+* ``faults``         — :class:`FaultPlan`: seeded, deterministic chaos
+                       injection (EAGAIN storms, resets, pool pressure,
+                       worker kills, frame corruption) for testing the
+                       fault-tolerance layer
 
 The free functions ``libra_recv``/``libra_send``/``libra_close``/
 ``expire_teardowns`` remain exported as the explicit-plumbing compatibility
@@ -61,6 +68,7 @@ from repro.core.crypto import (
 )
 from repro.core.device_pool import DevicePool, DeviceRangeError
 from repro.core.egress import expire_teardowns, libra_close, libra_send
+from repro.core.faults import FaultPlan
 from repro.core.ingress import libra_recv
 from repro.core.parser import (
     BUILTIN_PARSERS,
@@ -75,6 +83,7 @@ from repro.core.parser import (
 )
 from repro.core.policy import (
     Action,
+    HealthTable,
     MatchCond,
     PolicyRule,
     PolicyTable,
@@ -118,10 +127,11 @@ __all__ = [
     "LengthPrefixedParser", "DelimiterParser", "ChunkedParser",
     "TokenStreamParser", "BUILTIN_PARSERS", "kmp_find",
     "build_message", "build_delimited_message", "build_chunked_message",
-    # L7 policy engine
+    # L7 policy engine + fault tolerance
     "PolicyTable", "PolicyRule", "MatchCond", "Action", "Verdict",
     "PythonPolicyRouter", "rule", "eq", "between", "prefix",
     "forward", "rewrite", "rate_limit", "drop", "punt",
+    "HealthTable", "FaultPlan",
     # kTLS-analogue record layer
     "CryptoRecordParser", "TlsSession", "REC_MAGIC", "RecordAuthError",
     "seal_record", "seal_stream", "open_record", "open_stream", "record_tag",

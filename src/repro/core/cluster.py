@@ -55,6 +55,8 @@ import hashlib
 import struct
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
+import numpy as np
+
 from repro.core.anchor_pool import PageRef
 from repro.core.runtime import ProxyChannel, ProxyRuntime
 from repro.core.socket import LibraSocket
@@ -102,6 +104,10 @@ class SteeringPolicy:
         self.replicas = replicas
         self.secret = secret
         self.n_workers = n_workers
+        # workers removed by failure: their vnodes leave the ring (hash
+        # mode) / their index is skipped (app mode); indices of the
+        # survivors never shift, so placements stay stable
+        self.dead: set = set()
         self._ring: List[Tuple[int, int]] = []
         self._build_ring()
         # flow -> worker placements observed so far (live re-steer stats)
@@ -112,8 +118,11 @@ class SteeringPolicy:
     def _build_ring(self) -> None:
         ring = []
         for w in range(self.n_workers):
+            if w in self.dead:
+                continue
             for r in range(self.replicas):
                 ring.append((_stable_hash(self.secret, ("vnode", w, r)), w))
+        assert ring, "steering needs at least one live worker"
         ring.sort()
         self._ring = ring
         self._ring_keys = [h for h, _ in ring]   # bisect array, built once
@@ -125,6 +134,10 @@ class SteeringPolicy:
         cluster's placement map stays bounded by *named* flows."""
         if self.mode == "app":
             w = int(self.app_fn(flow, self.n_workers)) % self.n_workers
+            while w in self.dead:
+                # app steering is dead-worker-oblivious: deterministically
+                # walk to the next live index (consistent across callers)
+                w = (w + 1) % self.n_workers
         else:
             pos = _stable_hash(self.secret, flow)
             i = bisect.bisect_right(self._ring_keys, pos) % len(self._ring)
@@ -170,6 +183,19 @@ class SteeringPolicy:
         self.stats["moved"] += moved
         return moved
 
+    def remove_worker(self, w: int) -> int:
+        """Take a failed worker out of the steering set: its vnodes leave
+        the ring (app mode skips its index), survivor indices never shift,
+        and every tracked flow is re-evaluated — with consistent hashing
+        only the dead worker's ~1/N of flows move. Idempotent; returns how
+        many flows moved."""
+        if w in self.dead:
+            return 0
+        assert len(self.dead) + 1 < self.n_workers, \
+            "cannot remove the last live worker"
+        self.dead.add(w)
+        return self.resteer()
+
 
 class LibraCluster:
     """N independent :class:`LibraStack` workers + flow steering + the
@@ -206,11 +232,15 @@ class LibraCluster:
             (self.steering.n_workers, n_workers)
         self._flow_serial = 0
         self._worker_by_pool = {w.pool.pool_id: w for w in self.workers}
+        # workers torn down by kill_worker: excluded from steering,
+        # find_owner and the runtimes' scheduling (indices never shift)
+        self.dead_workers: set = set()
         # cross-worker handoff telemetry (cluster-wide; the per-stack
         # CopyCounters carry the same events on the destination worker)
         self.stats = {"grants": 0, "grant_pages": 0,
                       "copies": 0, "copied_tokens": 0, "adopt_misses": 0,
-                      "grants_reclaimed": 0}
+                      "grants_reclaimed": 0, "worker_kills": 0,
+                      "dead_grants_copied": 0, "migrated_flows": 0}
 
     # -- placement -----------------------------------------------------------
     def __len__(self) -> int:
@@ -260,7 +290,7 @@ class LibraCluster:
         """The worker whose registry holds ``vpi`` live (TEARDOWN entries
         do not count: their §A.4 grace belongs to the owner)."""
         for w in self.workers:
-            if w is exclude:
+            if w is exclude or w.worker_id in self.dead_workers:
                 continue
             if w.registry.peek(vpi) is not None:
                 return w
@@ -357,6 +387,83 @@ class LibraCluster:
         self.stats["grants_reclaimed"] += reclaimed
         return reclaimed
 
+    def kill_worker(self, w: int) -> Dict[str, int]:
+        """Tear down worker ``w`` as a *failure* (state-plane half; the
+        :class:`ClusterRuntime` drains and migrates flows first):
+
+        1. Survivor registries holding **zero-copy grants into the dying
+           pool** copy the payload out while the pages still exist —
+           the grant becomes a self-contained stash entry (counted in
+           ``cross_worker_copied``, like the live one-copy fallback) and
+           the dead pool's pin is released. Survivors' in-flight messages
+           therefore stay byte-identical.
+        2. Grants the dying worker held **into survivor pools** release
+           their pins (the dead-owner extension of
+           :meth:`reclaim_abandoned_grants`) and are dropped.
+        3. Every dying-worker socket closes; grace periods flush.
+        4. The worker leaves the steering set (idempotent with a prior
+           :meth:`SteeringPolicy.remove_worker`) and joins
+           ``dead_workers``.
+
+        Ends by asserting the dead pool leaked nothing: every page free,
+        zero outstanding grant pins. Returns a small accounting dict."""
+        assert 0 <= w < len(self.workers), w
+        assert w not in self.dead_workers, f"worker {w} already dead"
+        dead = self.workers[w]
+        info = {"grants_copied_out": 0, "grants_released": 0,
+                "pages_reclaimed": 0, "flows_resteered": 0}
+        for surv in self.workers:
+            if surv is dead or surv.worker_id in self.dead_workers:
+                continue
+            for entry in surv.registry.handoffs():
+                if entry.grant is None \
+                        or entry.pool_id != dead.pool.pool_id:
+                    continue
+                refs = [PageRef(*pg) for pg in entry.pages]
+                entry.stash = dead.pool.read_payload(refs, entry.payload_len)
+                entry.grant = None
+                entry.pages = []
+                entry.pool_id = surv.pool.pool_id
+                dead.alloc.release_export(refs)
+                surv.counters.cross_worker_copied += entry.payload_len
+                self.stats["copies"] += 1
+                self.stats["copied_tokens"] += entry.payload_len
+                self.stats["dead_grants_copied"] += 1
+                info["grants_copied_out"] += 1
+        for entry in dead.registry.handoffs():
+            if entry.grant is not None:
+                owner = self._worker_by_pool.get(entry.pool_id)
+                if owner is not None and owner is not dead:
+                    owner.alloc.release_export(
+                        [PageRef(*pg) for pg in entry.pages])
+                    info["grants_released"] += 1
+            dead.registry.drop(entry.vpi)
+        dead.close_all()
+        info["pages_reclaimed"] = dead.drain()
+        info["flows_resteered"] = self.steering.remove_worker(w)
+        self.dead_workers.add(w)
+        self.stats["worker_kills"] += 1
+        assert dead.alloc.granted_out_pages == 0, \
+            f"worker {w} leaked {dead.alloc.granted_out_pages} grant pins"
+        assert dead.alloc.free_pages == dead.alloc.total_pages, \
+            (f"worker {w} leaked pages: {dead.alloc.free_pages}/"
+             f"{dead.alloc.total_pages} free")
+        return info
+
+    def assert_no_leaks(self) -> None:
+        """The zero-leak guarantee, checked pool by pool: every page back
+        on its freelist, zero outstanding grant pins, no handoff entries
+        left in any registry (dead workers included — their teardown
+        already enforced this)."""
+        for w in self.workers:
+            a = w.alloc
+            assert a.granted_out_pages == 0, \
+                (w.worker_id, "granted_out_pages", a.granted_out_pages)
+            assert a.free_pages == a.total_pages, \
+                (w.worker_id, "pages", a.free_pages, a.total_pages)
+            assert not w.registry.handoffs(), \
+                (w.worker_id, "handoff entries remain")
+
     def tick(self, n: int = 1) -> int:
         return sum(w.tick(n) for w in self.workers)
 
@@ -393,8 +500,16 @@ class ClusterRuntime:
 
     def __init__(self, cluster: LibraCluster, *,
                  work_stealing: bool = True, steal_batch: int = 4,
-                 policy=None, **rt_kw):
+                 policy=None, fault_plan=None, **rt_kw):
         self.cluster = cluster
+        # chaos harness: one FaultPlan for the whole cluster — installed
+        # on every worker stack (send/deliver hooks) and driven once per
+        # CLUSTER round via on_cluster_step (worker kills, pool pressure,
+        # scheduled callbacks); the per-worker runtimes do not drive it
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            for w in cluster.workers:
+                fault_plan.install(w)
         # per-worker L7 policy tables: a PolicyTable is cloned per worker
         # (token-bucket state is worker-local, like every other hot-path
         # structure); a callable ``policy(worker_id)`` builds each worker's
@@ -460,16 +575,21 @@ class ClusterRuntime:
         identical wherever the quantum runs)."""
         progressed = 0
         stolen: set = set()
+        dead = self.cluster.dead_workers
         if not self.work_stealing:
-            for rt in self.runtimes:
-                progressed += rt.step()
+            for i, rt in enumerate(self.runtimes):
+                if i not in dead:
+                    progressed += rt.step()
             self.rounds += 1
+            if self.fault_plan is not None:
+                self.fault_plan.on_cluster_step(self)
             return progressed
         # one readiness evaluation per channel per round: the same lists
         # drive both the stealing decision and each runtime's step
-        readys = [rt.poll() for rt in self.runtimes]
+        readys = [([] if i in dead else rt.poll())
+                  for i, rt in enumerate(self.runtimes)]
         for i, rdy in enumerate(readys):
-            if rdy:
+            if rdy or i in dead:
                 continue
             donor = max(range(len(readys)),
                         key=lambda j: len([c for c in readys[j]
@@ -483,12 +603,101 @@ class ClusterRuntime:
                 stolen.add(ch)
                 self.stats["stolen_quanta"] += 1
                 progressed += bool(ch.service())
-        for rt, rdy in zip(self.runtimes, readys):
+        for i, (rt, rdy) in enumerate(zip(self.runtimes, readys)):
+            if i in dead:
+                continue
             progressed += rt.step(
                 skip=stolen if stolen else None,
                 ready=[c for c in rdy if c not in stolen])
         self.rounds += 1
+        if self.fault_plan is not None:
+            self.fault_plan.on_cluster_step(self)
         return progressed
+
+    def kill_worker(self, w: int, drain_rounds: int = 20000) -> Dict[str, int]:
+        """Worker failure with in-flight flow migration (the runtime-plane
+        half; :meth:`LibraCluster.kill_worker` finishes the state plane):
+
+        1. **Quiesce** the dying worker's runtime: continuations and held
+           sends finish where the backend allows (bounded — retries against
+           faulted backends expire into counted timeouts). Survivors mid-
+           continuation *into* the dying worker finish too (a budget send
+           always accepts bytes, so both loops terminate).
+        2. Stragglers that cannot finish (held messages whose anchor dies
+           with the worker, half-reassembled messages) are force-dropped
+           and counted — their pages free through the close/drain below.
+        3. Each dying-worker **flow migrates**: a fresh socket on a
+           steering-chosen survivor takes over the channel — the kTLS
+           session object moves with it (keys and sequence state ride
+           along), undelivered receive-ring bytes are re-delivered
+           verbatim, and the channel (stats and all) re-registers on the
+           survivor's runtime. Backend sockets on the dying worker are NOT
+           migrated — they died with it; health/failover re-routes their
+           traffic.
+        4. :meth:`LibraCluster.kill_worker` copies dead-owner grants out,
+           releases pins, closes/drains the dead stack, removes it from
+           steering, and asserts the dead pool leaked nothing.
+        """
+        cluster = self.cluster
+        assert w not in cluster.dead_workers, f"worker {w} already dead"
+        rt = self.runtimes[w]
+        dead_stack = cluster.workers[w]
+        guard = drain_rounds
+        while guard > 0 and rt.step() > 0:
+            guard -= 1
+        for i, rt2 in enumerate(self.runtimes):
+            if i == w or i in cluster.dead_workers:
+                continue
+            for ch in rt2.channels:
+                guard = drain_rounds
+                while ch._inflight is not None \
+                        and ch._inflight.stack is dead_stack and guard > 0:
+                    ch.service()
+                    guard -= 1
+        # steering loses the worker now so migration targets are live
+        # (idempotent — LibraCluster.kill_worker's call becomes a no-op)
+        cluster.steering.remove_worker(w)
+        migrated = 0
+        for ch in list(rt.channels):
+            # stragglers: a held message's anchor dies with this worker —
+            # a counted timeout-drop, pages freed via the stack teardown
+            if ch._held is not None:
+                h, ch._held = ch._held, None
+                ch._expire_held(h)
+            if ch._rx_parts:
+                ch._rx_parts, ch._rx_logical = [], 0
+                ch.stats.drops += 1
+            ch._pending_verdict = None
+            old = ch.src
+            if old.closed:
+                continue
+            tw = cluster.steering.worker_for(("migrate", old.fileno()),
+                                             track=False)
+            tgt = cluster.workers[tw]
+            new = tgt.socket(old.parser,
+                             min_payload=old.connection.rx_machine.min_payload,
+                             send_budget=old.send_budget)
+            if old.tls is not None:
+                # kTLS flow migration: the session OBJECT moves — keys and
+                # record sequence state continue on the new worker
+                new.tls = old.tls
+                new.connection.crypto = old.tls
+            pend = old.connection.rx_peek(old.rx_available())
+            if len(pend):
+                # internal hand-off, not network delivery: bypass the
+                # socket's fault hook (no double corruption)
+                new.connection.deliver(np.array(pend))
+            old.close()
+            if ch.policy is rt.policy:
+                ch.policy = None     # inherit the survivor's table clone
+            ch.src = new
+            rt.channels.remove(ch)
+            self.runtimes[tw].register(ch)
+            migrated += 1
+            cluster.stats["migrated_flows"] += 1
+        info = cluster.kill_worker(w)
+        info["flows_migrated"] = migrated
+        return info
 
     def run(self, max_rounds: int = 10 ** 6) -> int:
         """Interleaved cluster loop until no worker has ready work."""
@@ -517,11 +726,18 @@ class ClusterRuntime:
         return self.messages_forwarded(), times
 
     def shutdown(self) -> int:
+        if self.fault_plan is not None:
+            self.fault_plan.release_all()
         deferred = sum(rt.shutdown() for rt in self.runtimes)
         # grants whose transmit was abandoned by the shutdown would pin
         # their owner's pages forever — reclaim them now that every
-        # socket is closed and every grace period has drained
+        # socket is closed and every grace period has drained; then close
+        # any stray non-channel sockets, flush the last grace periods, and
+        # hold the zero-leak guarantee on every pool
+        self.cluster.close_all()
+        self.cluster.drain()
         self.cluster.reclaim_abandoned_grants()
+        self.cluster.assert_no_leaks()
         return deferred
 
     # -- telemetry -----------------------------------------------------------

@@ -76,6 +76,105 @@ PUNT_REWRITE_OVERFLOW = "rewrite-overflow"
 PUNT_REWRITE_CRYPTO = "rewrite-crypto"
 PUNT_MALFORMED = "malformed"
 PUNT_BAD_BACKEND = "bad-backend"
+PUNT_UNHEALTHY = "unhealthy"
+
+#: HealthTable backend states
+HEALTHY, UNHEALTHY, HALF_OPEN = range(3)
+
+
+class HealthTable:
+    """Per-backend health consulted by the match pass as a dense column.
+
+    Classic circuit-breaker shape on the channel's backend index space
+    (``dsts[k]``): ``fail_threshold`` *consecutive* failures trip a backend
+    to UNHEALTHY; after ``probe_after`` ticks it goes HALF_OPEN (traffic
+    allowed again — the probe); the first success closes the circuit
+    (HEALTHY), the first failure re-trips it. All transitions are driven by
+    the deterministic stack tick, never the wall clock.
+
+    The data-plane view is :meth:`column` — ``[n_backends]`` int32, 1 where
+    traffic may flow (HEALTHY or HALF_OPEN) — which
+    :meth:`PolicyTable.rule_live` folds into the per-rule live mask the
+    vectorized match consumes. Backend indices outside the table are
+    treated as healthy (unknown backends are the PUNT path's problem, not
+    the breaker's)."""
+
+    def __init__(self, n_backends: int, *, fail_threshold: int = 3,
+                 probe_after: int = 8):
+        assert n_backends >= 1 and fail_threshold >= 1 and probe_after >= 1
+        self.n_backends = n_backends
+        self.fail_threshold = fail_threshold
+        self.probe_after = probe_after
+        self.state = np.zeros(n_backends, np.int32)       # HEALTHY
+        self.fails = np.zeros(n_backends, np.int64)       # consecutive
+        self.probe_at = np.full(n_backends, -1, np.int64)
+        self.stats = {"trips": 0, "recoveries": 0, "probes": 0,
+                      "failures": 0, "successes": 0}
+
+    def _in_range(self, k: int) -> bool:
+        return 0 <= k < self.n_backends
+
+    def healthy(self, k: int) -> bool:
+        """May traffic flow to backend ``k``? (HEALTHY or HALF_OPEN.)"""
+        return not self._in_range(k) or int(self.state[k]) != UNHEALTHY
+
+    def column(self) -> np.ndarray:
+        """Dense [n_backends] int32 health column (1 = traffic allowed)."""
+        return (self.state != UNHEALTHY).astype(np.int32)
+
+    def note_failure(self, k: int, now: int) -> None:
+        """One failed send to ``k`` at tick ``now``. HALF_OPEN re-trips
+        immediately; HEALTHY trips at ``fail_threshold`` consecutive."""
+        if not self._in_range(k):
+            return
+        self.stats["failures"] += 1
+        self.fails[k] += 1
+        st = int(self.state[k])
+        if st == UNHEALTHY:
+            return
+        if st == HALF_OPEN or self.fails[k] >= self.fail_threshold:
+            self.state[k] = UNHEALTHY
+            self.probe_at[k] = now + self.probe_after
+            self.stats["trips"] += 1
+
+    def note_success(self, k: int) -> None:
+        """One completed send to ``k`` — closes the circuit."""
+        if not self._in_range(k):
+            return
+        self.stats["successes"] += 1
+        self.fails[k] = 0
+        if int(self.state[k]) != HEALTHY:
+            self.state[k] = HEALTHY
+            self.probe_at[k] = -1
+            self.stats["recoveries"] += 1
+
+    def tick(self, now: int) -> None:
+        """Advance probe deadlines: UNHEALTHY backends whose deadline
+        passed go HALF_OPEN (one probe's worth of traffic re-admitted)."""
+        due = (self.state == UNHEALTHY) & (self.probe_at >= 0) \
+            & (self.probe_at <= now)
+        n = int(due.sum())
+        if n:
+            self.state[due] = HALF_OPEN
+            self.probe_at[due] = -1
+            self.stats["probes"] += n
+
+    def mark_down(self, k: int, now: int = 0) -> None:
+        """Administratively trip ``k`` (fault injection / known-dead)."""
+        if self._in_range(k):
+            self.state[k] = UNHEALTHY
+            self.fails[k] = max(int(self.fails[k]), self.fail_threshold)
+            self.probe_at[k] = now + self.probe_after
+            self.stats["trips"] += 1
+
+    def mark_up(self, k: int) -> None:
+        """Administratively close ``k``'s circuit."""
+        self.note_success(k)
+
+    def summary(self) -> Dict[str, object]:
+        out = dict(self.stats)
+        out["state"] = self.state.tolist()
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,10 +213,14 @@ class Action:
     rate_millis: int = 0      # RATE_LIMIT refill (milli-tokens / tick)
     burst_millis: int = 0     # RATE_LIMIT bucket capacity (milli-tokens)
     key_offset: int = -1      # RATE_LIMIT bucket key meta[offset]; -1 = rule
+    failover: int = -1        # FORWARD fallback backend when primary is down
 
 
-def forward(backend: int = 0) -> Action:
-    return Action(ACT_FORWARD, backend=backend)
+def forward(backend: int = 0, failover: int = -1) -> Action:
+    """Route to ``backend``; if a :class:`HealthTable` says it is down,
+    re-verdict in-plane to ``failover`` (``-1`` = none: the rule goes
+    non-live instead and the match falls through to later rules)."""
+    return Action(ACT_FORWARD, backend=backend, failover=failover)
 
 
 def rewrite(slot: int, value: int, backend: int = 0) -> Action:
@@ -165,6 +268,8 @@ class Verdict:
     rule: int = -1            # matched row (R = no match)
     reason: str = ""          # punt reason
     rewrites: Tuple[Tuple[int, int], ...] = ()
+    epoch: int = 0            # table epoch the verdict was resolved under
+    failover: bool = False    # True iff re-verdicted to the failover backend
 
 
 class PolicyTable:
@@ -176,9 +281,35 @@ class PolicyTable:
     int32). :meth:`decode` reconstructs the source rows from the dense
     arrays alone (rule names excepted), so compilation is lossless —
     the property tests round-trip it.
+
+    ``health`` (a :class:`HealthTable`, optional) makes backend liveness a
+    data-plane input: :meth:`rule_live` folds it into a per-rule int32
+    mask that the match pass consumes, and FORWARD rules with a
+    ``failover`` re-verdict to it host-side. :meth:`swap` replaces the
+    rule set under live traffic: the dense arrays are recompiled in place
+    and :attr:`epoch` bumps — verdicts stamp the epoch they were resolved
+    under, and in-flight messages keep their already-resolved verdicts
+    (resolution is eager at match time), so a swap never re-routes a
+    message mid-round.
     """
 
-    def __init__(self, rules: Sequence[PolicyRule]):
+    def __init__(self, rules: Sequence[PolicyRule],
+                 health: Optional[HealthTable] = None):
+        self.health = health
+        self.epoch = 0
+        # token buckets: (rule, key) -> [milli-tokens, last refill tick]
+        self._buckets: Dict[Tuple[int, int], List[int]] = {}
+        self.stats: Dict[str, object] = {
+            "rounds": 0, "matched": 0, "no_match": 0, "forwards": 0,
+            "drops": 0, "punts": 0, "rate_debits": 0, "failovers": 0,
+            "swaps": 0, "rule_hits": [],
+            "punts_by_reason": {},
+        }
+        self._compile(rules)
+
+    def _compile(self, rules: Sequence[PolicyRule]) -> None:
+        """(Re)build the dense arrays from ``rules`` — the one copy of the
+        compiler shared by ``__init__`` and :meth:`swap`."""
         self.rules: Tuple[PolicyRule, ...] = tuple(rules)
         assert self.rules, "a PolicyTable needs at least one rule"
         r = len(self.rules)
@@ -197,34 +328,45 @@ class PolicyTable:
                 self.cond_hi[i, j] = c.hi
             a = ru.action
             acts[0, i] = a.kind
-            if a.kind in (ACT_FORWARD, ACT_RATE_LIMIT):
+            if a.kind == ACT_FORWARD:
                 acts[1, i] = a.backend
+                acts[2, i] = a.failover
             if a.kind == ACT_REWRITE:
                 acts[1, i] = a.backend
                 acts[2, i] = a.slot
                 acts[3, i] = a.value
             if a.kind == ACT_RATE_LIMIT:
+                acts[1, i] = a.backend
                 acts[2, i] = a.rate_millis
                 acts[3, i] = a.burst_millis
                 acts[4, i] = a.key_offset
         (self.act_kind, self.act_a, self.act_b,
          self.act_c, self.act_d) = acts
-        # token buckets: (rule, key) -> [milli-tokens, last refill tick]
-        self._buckets: Dict[Tuple[int, int], List[int]] = {}
-        self.stats: Dict[str, object] = {
-            "rounds": 0, "matched": 0, "no_match": 0, "forwards": 0,
-            "drops": 0, "punts": 0, "rate_debits": 0,
-            "rule_hits": [0] * r,
-            "punts_by_reason": {},
-        }
+        self.stats["rule_hits"] = [0] * r
+
+    def swap(self, rules: Sequence[PolicyRule]) -> int:
+        """Hot-swap the rule set under live traffic: recompile the dense
+        arrays in place, reset the token buckets (bucket rows are keyed by
+        row index, which the swap renumbers), and bump :attr:`epoch`.
+        Health state survives (it describes backends, not rules). Returns
+        the new epoch. In-flight messages — already matched and resolved —
+        keep their old-epoch verdicts; only rounds matched *after* the
+        swap see the new table."""
+        self._compile(rules)
+        self._buckets.clear()
+        self.epoch += 1
+        self.stats["swaps"] += 1
+        return self.epoch
 
     @property
     def n_rules(self) -> int:
         return len(self.rules)
 
     def clone(self) -> "PolicyTable":
-        """Same rules, fresh buckets/stats (per-worker tables)."""
-        return PolicyTable(self.rules)
+        """Same rules, fresh buckets/stats (per-worker tables). The
+        :class:`HealthTable` instance is SHARED — backend health is a
+        cluster-wide fact, not per-worker state."""
+        return PolicyTable(self.rules, health=self.health)
 
     # -- dense form --------------------------------------------------------
     def dense(self) -> Tuple[np.ndarray, ...]:
@@ -243,7 +385,8 @@ class PolicyTable:
                 for j in range(cond_off.shape[1]) if cond_off[i, j] >= 0)
             kind = int(act_kind[i])
             if kind == ACT_FORWARD:
-                a = Action(kind, backend=int(act_a[i]))
+                a = Action(kind, backend=int(act_a[i]),
+                           failover=int(act_b[i]))
             elif kind == ACT_REWRITE:
                 a = Action(kind, backend=int(act_a[i]), slot=int(act_b[i]),
                            value=int(act_c[i]))
@@ -258,22 +401,56 @@ class PolicyTable:
         return cls(rules)
 
     # -- matching ----------------------------------------------------------
-    def interpret(self, meta: np.ndarray, meta_len: int) -> int:
+    def rule_live(self) -> Optional[np.ndarray]:
+        """Per-rule liveness column for the match pass: ``[R]`` int32,
+        ``0`` for a routing rule (FORWARD/REWRITE/RATE_LIMIT) whose primary
+        backend is down with no healthy failover — such a rule is skipped
+        by the match so priority falls through to the next rule (or the
+        PUNT tail). Returns ``None`` when every rule is live (no health
+        table, or nothing tripped) so the kernel paths stay operand-free
+        on the fault-free fast path."""
+        h = self.health
+        if h is None:
+            return None
+        col = h.column()
+        nb = h.n_backends
+
+        def _ok(idx: np.ndarray) -> np.ndarray:
+            out_of = (idx < 0) | (idx >= nb)
+            return out_of | (col[np.clip(idx, 0, nb - 1)] > 0)
+
+        routing = np.isin(self.act_kind,
+                          (ACT_FORWARD, ACT_REWRITE, ACT_RATE_LIMIT))
+        primary_ok = _ok(self.act_a)
+        fo = np.where(self.act_kind == ACT_FORWARD, self.act_b, -1)
+        failover_ok = (fo >= 0) & _ok(fo)
+        live = (~routing) | primary_ok | failover_ok
+        if live.all():
+            return None
+        return live.astype(np.int32)
+
+    def interpret(self, meta: np.ndarray, meta_len: int,
+                  live: Optional[np.ndarray] = None) -> int:
         """Naive Python interpreter of the rows — the oracle the vectorized
         pass (and the kernel) must agree with. Returns the first matching
-        row, or ``n_rules``."""
+        row, or ``n_rules``. ``live`` (the :meth:`rule_live` column) skips
+        dead rows exactly as the vectorized paths do."""
         for i, ru in enumerate(self.rules):
+            if live is not None and not live[i]:
+                continue
             if all(c.offset < meta_len and c.lo <= int(meta[c.offset]) <= c.hi
                    for c in ru.conds):
                 return i
         return self.n_rules
 
     def match_rows(self, metas: np.ndarray, meta_lens: np.ndarray,
-                   keystreams: Optional[np.ndarray] = None) -> np.ndarray:
+                   keystreams: Optional[np.ndarray] = None,
+                   live: Optional[np.ndarray] = None) -> np.ndarray:
         """Vectorized numpy first-match over a round: ``metas`` [B, M]
         (int64-exact host truth), ``meta_lens`` [B] → [B] row indices.
         ``keystreams`` (same shape, 0 where plaintext) is XORed in first —
-        matching against *decrypted* metadata without a separate pass."""
+        matching against *decrypted* metadata without a separate pass.
+        ``live`` ([R] int32) masks out rules whose backends are down."""
         m = metas if keystreams is None else np.bitwise_xor(
             metas, keystreams.astype(metas.dtype))
         mm = m.shape[1]
@@ -284,6 +461,8 @@ class PolicyTable:
         ok = pad[None] | (present & (vals >= self.cond_lo) &
                           (vals <= self.cond_hi))
         rule_ok = ok.all(axis=2)                             # [B, R]
+        if live is not None:
+            rule_ok &= live[None, :] > 0
         return np.where(rule_ok.any(axis=1), rule_ok.argmax(axis=1),
                         self.n_rules).astype(np.int32)
 
@@ -295,8 +474,10 @@ class PolicyTable:
         through :func:`repro.kernels.ops.policy_match` (the fused kernel /
         its jnp oracle) on the int32 device plane — rounds whose tokens do
         not survive int32 bounce back to the numpy path (the same rule as
-        the anchoring pass)."""
+        the anchoring pass). The :meth:`rule_live` health column rides
+        along as an extra dense operand on every path."""
         self.stats["rounds"] += 1
+        live = self.rule_live()
         if impl != "host":
             lo, hi = int(metas.min(initial=0)), int(metas.max(initial=0))
             if -(1 << 31) <= lo and hi < (1 << 31):
@@ -308,9 +489,9 @@ class PolicyTable:
                     np.asarray(metas, np.int32),
                     np.asarray(meta_lens, np.int32),
                     self.cond_off, self.cond_lo, self.cond_hi,
-                    impl=impl, keystream=ks)
+                    impl=impl, keystream=ks, live=live)
                 return np.asarray(rids, np.int32)
-        return self.match_rows(metas, meta_lens, keystreams)
+        return self.match_rows(metas, meta_lens, keystreams, live)
 
     # -- action resolution (host-side, stateful) ---------------------------
     def _bucket_debit(self, row: int, key: int, now: int) -> bool:
@@ -330,8 +511,22 @@ class PolicyTable:
         b[0], b[1] = tokens, now
         return False
 
+    def failover_for(self, rid: int) -> int:
+        """The failover backend of FORWARD row ``rid`` (``-1`` if none /
+        not a FORWARD row) — consulted by held-send retries without
+        re-running :meth:`decide` (which would double-debit buckets)."""
+        if 0 <= rid < self.n_rules and int(self.act_kind[rid]) == ACT_FORWARD:
+            return int(self.act_b[rid])
+        return -1
+
     def _resolve_one(self, rid: int, meta: np.ndarray, meta_len: int,
                      crypto: bool, now: int, counters=None) -> Verdict:
+        v = self._resolve_inner(rid, meta, meta_len, crypto, now, counters)
+        v.epoch = self.epoch
+        return v
+
+    def _resolve_inner(self, rid: int, meta: np.ndarray, meta_len: int,
+                       crypto: bool, now: int, counters=None) -> Verdict:
         st = self.stats
         if rid >= self.n_rules:
             st["no_match"] += 1
@@ -340,7 +535,19 @@ class PolicyTable:
         st["rule_hits"][rid] += 1
         kind = int(self.act_kind[rid])
         if kind == ACT_FORWARD:
-            return Verdict("forward", backend=int(self.act_a[rid]), rule=rid)
+            backend = int(self.act_a[rid])
+            if self.health is not None and not self.health.healthy(backend):
+                fo = int(self.act_b[rid])
+                if fo >= 0 and self.health.healthy(fo):
+                    st["failovers"] += 1
+                    if counters is not None:
+                        counters.policy_failovers += 1
+                    return Verdict("forward", backend=fo, rule=rid,
+                                   failover=True)
+                # matched before the trip landed (or raced the live mask):
+                # nothing healthy to route to — the slow path decides
+                return Verdict("punt", rule=rid, reason=PUNT_UNHEALTHY)
+            return Verdict("forward", backend=backend, rule=rid)
         if kind == ACT_REWRITE:
             slot = int(self.act_b[rid])
             if crypto:
@@ -386,9 +593,10 @@ class PolicyTable:
         res = parser.parse(buf)
         if not res.ok or res.meta_len > len(buf):
             self.stats["rounds"] += 1
-            return Verdict("punt", rule=self.n_rules, reason=PUNT_MALFORMED)
+            return Verdict("punt", rule=self.n_rules, reason=PUNT_MALFORMED,
+                           epoch=self.epoch)
         self.stats["rounds"] += 1
-        rid = self.interpret(buf, res.meta_len)
+        rid = self.interpret(buf, res.meta_len, self.rule_live())
         return self._resolve_one(rid, buf, res.meta_len, crypto, now,
                                  counters)
 
@@ -413,6 +621,9 @@ class PolicyTable:
         out["rule_hits"] = list(self.stats["rule_hits"])
         out["punts_by_reason"] = dict(self.stats["punts_by_reason"])
         out["buckets"] = len(self._buckets)
+        out["epoch"] = self.epoch
+        if self.health is not None:
+            out["health"] = self.health.summary()
         return out
 
 

@@ -36,7 +36,9 @@ amortized share of the round's data-plane time.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+import struct
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -113,6 +115,13 @@ class ChannelStats:
     auth_rejects: int = 0      # tampered records rejected by the tag check
     drops: int = 0             # messages consumed by a DROP verdict (or a
                                # router callback returning None)
+    retries: int = 0           # unexplained-EAGAIN retry attempts (backend
+                               # fault, not a busy continuation)
+    timeouts: int = 0          # held messages that exhausted their retry
+                               # budget (or met a dead backend with no
+                               # failover): dropped with pages freed
+    failovers: int = 0         # held messages re-routed to their rule's
+                               # failover backend after the primary tripped
     # deficit-round-robin state (scheduler="drr"): the channel's current
     # byte deficit — grows by quantum_bytes per round while backlogged,
     # shrinks by the logical bytes each serviced message accepted, resets
@@ -122,6 +131,36 @@ class ChannelStats:
     # share of the round's single data-plane pass)
     latency: LatencyHistogram = dataclasses.field(
         default_factory=LatencyHistogram)
+
+
+def _jitter(name: str, tries: int, spread: int = 4) -> int:
+    """Deterministic backoff jitter in [0, spread): keyed blake2b over the
+    (channel name, attempt) pair, so concurrent channels de-synchronise
+    their retry storms without a shared RNG stream. Keyed on the *name*
+    (stable across runs), not a process-global fileno — chaos runs must
+    replay identically."""
+    h = hashlib.blake2b(struct.pack("<q", tries) + name.encode(),
+                        digest_size=2)
+    return struct.unpack("<H", h.digest())[0] % spread
+
+
+@dataclasses.dataclass
+class _HeldSend:
+    """One routed message whose transmit could not start (backend EAGAIN,
+    reset, or an injected fault): held on the channel and retried on later
+    quanta. ``tries``/``wait``/``age`` drive the bounded-retry loop —
+    *organic* EAGAINs (the backend is busy with another flow's truncated
+    message, which provably drains) retry every quantum forever, exactly
+    as the pre-fault-tolerance runtime did; *unexplained* EAGAINs (the
+    socket is writable yet the send failed — a fault) are counted against
+    ``max_retries`` with exponential backoff."""
+    out: object                    # the composed outgoing buffer
+    dst: LibraSocket               # current destination (failover may move it)
+    logical: int                   # logical size (the DRR cost peek)
+    rule: int = -1                 # policy row that routed it (failover lookup)
+    tries: int = 0                 # unexplained attempts so far
+    wait: int = 0                  # backoff quanta before the next attempt
+    age: int = 0                   # quanta since first held (retry_timeout)
 
 
 class ProxyChannel:
@@ -136,7 +175,9 @@ class ProxyChannel:
                  budget: Optional[int] = None,
                  priority: int = 0,
                  name: Optional[str] = None,
-                 backpressure: bool = True):
+                 backpressure: bool = True,
+                 max_retries: Optional[int] = 8,
+                 retry_timeout: Optional[int] = None):
         self.src = src
         self.dsts: List[LibraSocket] = (
             list(dst) if isinstance(dst, (list, tuple)) else [dst])
@@ -163,7 +204,16 @@ class ProxyChannel:
         self._rx_logical = 0
         # message routed to a backend whose send buffer was busy with
         # another flow's truncated message (EAGAIN): retried next quantum
-        self._held: Optional[tuple] = None
+        self._held: Optional[_HeldSend] = None
+        # bounded-retry knobs for UNEXPLAINED send failures (faults) —
+        # organic busy-backend EAGAINs stay hold-forever (they drain):
+        # after max_retries unexplained attempts (or retry_timeout held
+        # quanta, when set) the message is dropped with its pages freed
+        # and counted in ChannelStats.timeouts
+        self.max_retries = max_retries
+        self.retry_timeout = retry_timeout
+        self._dst_index = {d.fileno(): i for i, d in enumerate(self.dsts)}
+        self._route_rule = -1    # policy row behind the message being sent
         # set by ready() when backpressure (alone) kept the channel out of
         # the ready set this round — the scheduler's liveness fallback
         self._bp_paused = False
@@ -210,7 +260,7 @@ class ProxyChannel:
             # the logical size recorded at hold time — the composed buffer
             # is [meta..., VPI], far smaller than the bytes the transmit
             # will be charged
-            return max(self._held[2], 1)
+            return max(self._held.logical, 1)
         if self.src.closed:
             return None
         sm = self.src.connection.rx_machine
@@ -246,9 +296,24 @@ class ProxyChannel:
         if self._inflight is not None:
             return self._continue_send()
         if self._held is not None:
-            out, dst, logical = self._held
+            h = self._held
+            if h.wait > 0:
+                # waiting out an exponential-backoff window IS progress
+                # toward the bounded retry (and keeps run() alive while
+                # every other channel is also waiting out a fault)
+                h.wait -= 1
+                h.age += 1
+                return True
+            if self.retry_timeout is not None and h.age >= self.retry_timeout:
+                self._held = None
+                return self._expire_held(h)
             self._held = None
-            return self._start_send(out, dst, logical)
+            nd = self._failover_dst(h)
+            if nd is not None:
+                h.dst = nd
+                h.tries = 0          # a healthy failover gets a fresh budget
+                self.stats.failovers += 1
+            return self._start_send(h.out, h.dst, h.logical, held=h)
         try:
             buf, logical = self.src.recv(self.recv_buf)
         except RecordAuthError:
@@ -286,6 +351,7 @@ class ProxyChannel:
             self._rx_parts, self._rx_logical = [], 0
         if logical == 0:
             return _IDLE
+        self._route_rule = -1
         if self.policy is not None:
             v, self._pending_verdict = self._pending_verdict, None
             if v is None:
@@ -320,6 +386,7 @@ class ProxyChannel:
         self.policy.note_outcome(v)
         if v.kind == "forward":
             counters.policy_hits += 1
+            self._route_rule = v.rule   # held-send failover consults the row
             out = buf
             if v.rewrites:
                 out = np.array(buf)
@@ -340,25 +407,137 @@ class ProxyChannel:
         self.stats.drops += 1
         return None
 
+    # -- fault-tolerant send path --------------------------------------------
+    def _fault_for(self, dst: LibraSocket) -> Optional[str]:
+        """Consult the stack's installed FaultPlan (if any) for an injected
+        send fault toward this destination. Deterministic within a step, so
+        the batched tile and the scalar path agree."""
+        plan = getattr(self.src.stack, "fault_plan", None)
+        if plan is None:
+            return None
+        return plan.send_fault(self._backend_index(dst), self.name)
+
+    def _backend_index(self, dst: LibraSocket) -> int:
+        return self._dst_index.get(dst.fileno(), -1)
+
+    def _health(self):
+        return getattr(self.policy, "health", None) \
+            if self.policy is not None else None
+
+    def _note_backend_failure(self, dst: LibraSocket) -> None:
+        h = self._health()
+        if h is not None:
+            h.note_failure(self._backend_index(dst), self.src.stack.now_tick)
+
+    def _note_backend_success(self, dst: LibraSocket) -> None:
+        h = self._health()
+        if h is not None:
+            h.note_success(self._backend_index(dst))
+
+    def _failover_dst(self, h: _HeldSend) -> Optional[LibraSocket]:
+        """The healthy failover destination for a held message whose
+        primary backend has tripped (or died); None when the primary is
+        still allowed, or no usable failover exists."""
+        pol = self.policy
+        health = self._health()
+        if health is None or h.rule is None or h.rule < 0:
+            return None
+        cur = self._backend_index(h.dst)
+        if cur >= 0 and health.healthy(cur) and not h.dst.closed:
+            return None              # primary still admissible: keep it
+        fo = pol.failover_for(h.rule)
+        if fo < 0 or fo >= len(self.dsts) or fo == cur:
+            return None
+        d = self.dsts[fo]
+        if d.closed or not health.healthy(fo):
+            return None
+        return d
+
+    def _expire_held(self, h: _HeldSend) -> bool:
+        """Bounded-retry expiry: the message is undeliverable — free its
+        anchored pages and count the timeout (the alternative, the classic
+        hold-forever EAGAIN loop, wedges the channel and leaks the pages
+        against a permanently dead backend)."""
+        self.src.stack.drop_message(np.asarray(h.out, np.int64), self.src)
+        self.stats.timeouts += 1
+        return True
+
+    def _dead_dst(self, out, dst: LibraSocket, logical: Optional[int],
+                  held: Optional[_HeldSend]) -> bool:
+        """A send met a closed backend (connection reset, or its worker
+        was killed): note the failure, re-route to the rule's healthy
+        failover when one exists, otherwise drop with pages freed."""
+        self._note_backend_failure(dst)
+        h = held if held is not None else _HeldSend(
+            out, dst, logical if logical is not None else len(out),
+            rule=self._route_rule)
+        nd = self._failover_dst(h)
+        if nd is not None:
+            h.dst = nd
+            h.tries = 0
+            self.stats.failovers += 1
+            return self._start_send(h.out, nd, h.logical, held=h)
+        return self._expire_held(h)
+
     def _start_send(self, out, dst: LibraSocket,
-                    logical: Optional[int] = None) -> bool:
+                    logical: Optional[int] = None,
+                    held: Optional[_HeldSend] = None) -> bool:
+        fault = self._fault_for(dst)
+        if fault == "reset" and not dst.closed:
+            # injected connection reset: the first send finds the backend
+            # gone — close it so every later attempt (any channel) agrees
+            dst.close()
+        if dst.closed:
+            return self._dead_dst(out, dst, logical, held)
+        if fault == "eagain" and dst.pending_send is None:
+            # injected stall: the socket is writable, so this EAGAIN has no
+            # organic cause — counted against the retry budget
+            return self._note_send_outcome(dst, 0, out, eagain=True,
+                                           logical=logical, held=held,
+                                           injected=True)
         try:
             n = self.src.forward(dst, out, budget=self.budget)
         except BlockingIOError:
             return self._note_send_outcome(dst, 0, out, eagain=True,
-                                           logical=logical)
-        return self._note_send_outcome(dst, n, out)
+                                           logical=logical, held=held)
+        return self._note_send_outcome(dst, n, out, held=held)
 
     def _note_send_outcome(self, dst: LibraSocket, n: int, out,
                            eagain: bool = False,
-                           logical: Optional[int] = None) -> bool:
+                           logical: Optional[int] = None,
+                           held: Optional[_HeldSend] = None,
+                           injected: bool = False) -> bool:
         """Shared bookkeeping for scalar and batched transmits."""
         if eagain:
-            # backend busy with another flow's truncated message: hold the
-            # routed message and retry once that send completes (keeping
-            # its logical size — the DRR cost peek)
-            self._held = (out, dst,
-                          logical if logical is not None else len(out))
+            h = held if held is not None else _HeldSend(
+                out, dst, logical if logical is not None else len(out),
+                rule=self._route_rule)
+            h.out, h.dst = out, dst
+            h.age += 1
+            if injected or (dst.pending_send is None and not dst.closed):
+                # unexplained EAGAIN — no busy continuation to wait out: a
+                # backend fault. Bounded retries with exponential backoff;
+                # organic EAGAINs below stay hold-forever (they drain).
+                h.tries += 1
+                self.stats.retries += 1
+                self._note_backend_failure(dst)
+                if self.max_retries is not None \
+                        and h.tries > self.max_retries:
+                    nd = self._failover_dst(h)
+                    if nd is not None:
+                        h.dst, h.tries, h.wait = nd, 0, 0
+                        self.stats.failovers += 1
+                        self._held = h
+                        return True
+                    return self._expire_held(h)
+                h.wait = min(1 << (h.tries - 1), 64) \
+                    + _jitter(self.name, h.tries)
+                # scheduling the bounded retry IS progress — without it a
+                # round where every channel meets an injected fault would
+                # look idle and run() would exit with messages still held
+                self._held = h
+                return True
+            self._held = h
             return False
         self.stats.send_calls += 1
         self.stats.logical_bytes += n
@@ -367,16 +546,27 @@ class ProxyChannel:
             self.stats.partial_sends += 1
         else:
             self.stats.messages += 1
+            self._note_backend_success(dst)
         return True
 
     def _continue_send(self) -> bool:
         dst = self._inflight
+        if dst.closed:
+            # the backend died mid-continuation (reset / worker kill): the
+            # partially-accepted message cannot complete — abandon it (the
+            # destination's teardown already entered its grace period; the
+            # source anchor drains at close)
+            self._inflight = None
+            self.stats.timeouts += 1
+            self._note_backend_failure(dst)
+            return True
         n = dst.send(budget=self.budget)
         self.stats.send_calls += 1
         self.stats.logical_bytes += n
         if dst.pending_send is None:
             self._inflight = None
             self.stats.messages += 1
+            self._note_backend_success(dst)
         else:
             self.stats.partial_sends += 1
         return n > 0
@@ -402,7 +592,8 @@ class ProxyRuntime:
                  batch_impl: str = "host",
                  batch_tile: Optional[int] = None,
                  quantum_bytes: int = 1024,
-                 policy=None):
+                 policy=None,
+                 fault_plan=None):
         assert scheduler in self.SCHEDULERS, scheduler
         assert not (batched and scheduler == "drr"), \
             "drr is a scalar-quanta policy (batched rounds fuse the ready set)"
@@ -424,6 +615,11 @@ class ProxyRuntime:
         # the hundred while page-heavy rounds fall back to small tiles;
         # an int pins the tile (0 = whole round in one pass)
         self.batch_tile = batch_tile
+        # chaos harness: a FaultPlan driven once per scheduling round (and
+        # installed on the stack so the socket/channel hooks see it)
+        self.fault_plan = fault_plan
+        if fault_plan is not None:
+            fault_plan.install(stack)
         self.channels: List[ProxyChannel] = []
         self.rounds = 0
         self._rr = 0
@@ -436,7 +632,10 @@ class ProxyRuntime:
         return channel
 
     def channel(self, src: LibraSocket, dst, **kw) -> ProxyChannel:
-        """Create and register a channel in one call."""
+        """Create and register a channel in one call. The default name is
+        the registration ordinal (stable across identical runs — fault
+        coins and backoff jitter key on it), not the process-global fd."""
+        kw.setdefault("name", f"ch{len(self.channels)}")
         return self.register(ProxyChannel(src, dst, **kw))
 
     # -- scheduling ----------------------------------------------------------
@@ -479,6 +678,14 @@ class ProxyRuntime:
         self._rr += 1
         if self.tick_every and self.rounds % self.tick_every == 0:
             self.stack.tick()
+            h = getattr(self.policy, "health", None) \
+                if self.policy is not None else None
+            if h is not None:
+                # advance the circuit-breaker clock with the stack's: due
+                # UNHEALTHY backends move to HALF_OPEN (probe allowed)
+                h.tick(self.stack.now_tick)
+        if self.fault_plan is not None:
+            self.fault_plan.on_tick(self)
         return progressed
 
     def _step_scalar(self, ready) -> int:
@@ -635,6 +842,12 @@ class ProxyRuntime:
             if intent is _IDLE:
                 continue
             out, dst, logical = intent
+            if dst.closed or ch._fault_for(dst) is not None:
+                # faulted or dead backend: the scalar send path owns the
+                # retry/failover machinery (the fault coin is keyed per
+                # step, so this consult and _start_send's agree)
+                progressed += bool(ch._start_send(out, dst, logical))
+                continue
             sends.append((ch.src, dst, out, ch.budget))
             senders.append(ch)
             logicals.append(logical)
@@ -670,6 +883,8 @@ class ProxyRuntime:
     def shutdown(self) -> int:
         """Close every channel endpoint and flush all grace periods.
         Returns the number of pages reclaimed by deferred teardown."""
+        if self.fault_plan is not None:
+            self.fault_plan.release_all()
         for ch in self.channels:
             ch.src.close()
             for d in ch.dsts:

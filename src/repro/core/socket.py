@@ -185,8 +185,15 @@ class LibraSocket:
 
     # -- network side (NIC DMA analogue) ------------------------------------
     def deliver(self, data) -> None:
-        """The network delivers bytes into this socket's receive queue."""
-        self._conn.deliver(np.asarray(data, np.int64))
+        """The network delivers bytes into this socket's receive queue.
+        An installed :class:`~repro.core.faults.FaultPlan` sees the bytes
+        first (frame-aware corruption injection — the wire is the fault
+        boundary; internal migrations use ``connection.deliver``)."""
+        data = np.asarray(data, np.int64)
+        plan = getattr(self._stack, "fault_plan", None)
+        if plan is not None:
+            data = plan.corrupt_ingress(self, data)
+        self._conn.deliver(data)
 
     # -- POSIX surface -------------------------------------------------------
     def recv(self, buf_len: int) -> Tuple[np.ndarray, int]:

@@ -111,6 +111,9 @@ class LibraStack:
         self.worker_id: Optional[int] = None
         self.interconnect = None
         self._peer_pools: Dict[str, Union[TokenPool, DevicePool]] = {}
+        # chaos harness: a repro.core.faults.FaultPlan consulted by the
+        # socket delivery and channel send paths (None = no faults)
+        self.fault_plan = None
 
     # -- socket lifecycle ----------------------------------------------------
     def make_parser(self, parser: ParserLike, **kw) -> ParserPolicy:

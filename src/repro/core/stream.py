@@ -384,6 +384,7 @@ class CopyCounters:
     policy_punts: int = 0        # verdicts bounced to the callback slow path
     policy_drops: int = 0        # messages consumed + pages freed by DROP
     policy_rate_debits: int = 0  # RATE_LIMIT token-bucket debits
+    policy_failovers: int = 0    # FORWARD verdicts re-routed by HealthTable
 
     def total_user_copies(self) -> int:
         return self.meta_copied + self.full_copied + self.crypto_copied

@@ -121,20 +121,23 @@ def selective_gather(pool, tables, lengths, *, impl="auto", keystream=None):
 
 
 def policy_match(meta, meta_len, cond_off, cond_lo, cond_hi, *, impl="auto",
-                 keystream=None):
+                 keystream=None, live=None):
     """L7 policy-table first-match pass over one batched round's metadata
     block: [B, M] meta × dense [R, K] conditions → [B] first matching rule
     (R = no match). ``keystream`` (0 on plaintext lanes) fuses the hw-kTLS
-    metadata decrypt into the match. The routing-decision half of the
-    in-data-plane policy engine (:mod:`repro.core.policy` resolves actions
-    host-side)."""
+    metadata decrypt into the match. ``live`` ([R] int32, the backend
+    HealthTable rule mask; ``None`` = all live) masks dead rules out of
+    the scan. The routing-decision half of the in-data-plane policy
+    engine (:mod:`repro.core.policy` resolves actions host-side)."""
     impl = _resolve(impl)
     ks = None if keystream is None else jnp.asarray(keystream)
+    lv = None if live is None else jnp.asarray(live, jnp.int32)
     if impl == "ref":
         return _ref.policy_match_ref(meta, meta_len, cond_off, cond_lo,
-                                     cond_hi, ks)
+                                     cond_hi, ks, lv)
     return _polmatch_pallas(meta, meta_len, cond_off, cond_lo, cond_hi,
-                            interpret=(impl == "interpret"), keystream=ks)
+                            interpret=(impl == "interpret"), keystream=ks,
+                            live=lv)
 
 
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):

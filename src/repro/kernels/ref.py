@@ -176,6 +176,7 @@ def policy_match_ref(
     cond_lo: jax.Array,    # [R, K] int32 inclusive lower bounds
     cond_hi: jax.Array,    # [R, K] int32 inclusive upper bounds
     keystream: Optional[jax.Array] = None,   # [B, M] int32 or None
+    live: Optional[jax.Array] = None,        # [R] int32 health mask or None
 ) -> jax.Array:
     """L7 policy table first-match pass (the in-data-plane routing
     decision). A condition holds iff its offset is padding (< 0) or
@@ -184,7 +185,10 @@ def policy_match_ref(
     message (rule order is priority), ``R`` when none match. ``keystream``
     (0 on plaintext lanes) is XORed in before matching — the hw-kTLS
     analogue matches against *decrypted* metadata without a separate
-    decrypt pass. Returns [B] int32 rule indices."""
+    decrypt pass. ``live`` (the backend-health rule mask; 0 = every
+    backend of the rule is down) excludes dead rules from the first-match
+    scan so priority falls through in-plane. Returns [B] int32 rule
+    indices."""
     b, mm = meta.shape
     r, k = cond_off.shape
     m = meta if keystream is None else jnp.bitwise_xor(
@@ -196,6 +200,8 @@ def policy_match_ref(
     ok = pad[None] | (present & (vals >= cond_lo[None])
                       & (vals <= cond_hi[None]))
     rule_ok = ok.all(axis=2)                                  # [B, R]
+    if live is not None:
+        rule_ok &= live.reshape(1, r) > 0
     ridx = jnp.arange(r, dtype=jnp.int32)
     return jnp.min(jnp.where(rule_ok, ridx[None, :], r),
                    axis=1).astype(jnp.int32)

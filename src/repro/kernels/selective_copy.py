@@ -195,11 +195,13 @@ selective_copy_donated = jax.jit(_selective_copy_impl,
 
 
 def _policy_kernel(mlen_ref, meta_ref, *rest, m: int, r: int, k: int,
-                   has_ks: bool):
-    if has_ks:
-        ks_ref, off_ref, lo_ref, hi_ref, out_ref = rest
-    else:
-        off_ref, lo_ref, hi_ref, out_ref = rest
+                   has_ks: bool, has_live: bool):
+    rest = list(rest)
+    ks_ref = rest.pop(0) if has_ks else None
+    off_ref, lo_ref, hi_ref = rest[:3]
+    rest = rest[3:]
+    live_ref = rest.pop(0) if has_live else None
+    (out_ref,) = rest
     b = pl.program_id(0)
     mlen = mlen_ref[b]
     row = meta_ref[0, :]                                   # [M]
@@ -220,6 +222,10 @@ def _policy_kernel(mlen_ref, meta_ref, *rest, m: int, r: int, k: int,
     present = (~pad) & (off < mlen) & (off < m)
     ok = pad | (present & (vals >= lo) & (vals <= hi))
     rule_ok = jnp.all(ok, axis=1)                          # [R]
+    if has_live:
+        # backend-health column: dead rules (every backend down) never
+        # win the first-match scan — failover priority in-plane
+        rule_ok &= live_ref[0, :] > 0
     ridx = jax.lax.broadcasted_iota(jnp.int32, (r,), 0)
     out_ref[0, 0] = jnp.min(jnp.where(rule_ok, ridx, r))
 
@@ -234,6 +240,7 @@ def policy_match(
     *,
     interpret: bool = False,
     keystream: jax.Array = None,   # [B, M] int32 (hw-kTLS) or None
+    live: jax.Array = None,        # [R] int32 backend-health mask or None
 ) -> jax.Array:
     """L7 policy-table first-match kernel — the in-data-plane routing
     decision, fused into the batched metadata pass. One grid step per
@@ -242,15 +249,18 @@ def policy_match(
     = no match). The optional ``keystream`` operand (same [B, M] layout,
     zeros on plaintext lanes) XORs the metadata inside the same step, so
     hw-kTLS rounds match against decrypted metadata with zero extra
-    passes. Touches only [B, M] metadata and the [R, K] table — never the
-    payload pool — so the hot path performs no pool-sized copy by
-    construction (gated in check_kernel_parity). Matches
-    ``kernels.ref.policy_match_ref``. Returns [B] int32."""
+    passes. The optional ``live`` operand ([R] int32, the HealthTable
+    rule mask) masks dead rules out of the first-match scan — backend
+    failover priority resolved in-plane. Touches only [B, M] metadata and
+    the [R, K] table — never the payload pool — so the hot path performs
+    no pool-sized copy by construction (gated in check_kernel_parity).
+    Matches ``kernels.ref.policy_match_ref``. Returns [B] int32."""
     b, m = meta.shape
     r, k = cond_off.shape
     has_ks = keystream is not None
     if has_ks:
         assert keystream.shape == meta.shape, (keystream.shape, meta.shape)
+    has_live = live is not None
 
     meta_spec = pl.BlockSpec((1, m), lambda b_, ml: (b_, 0))
     table_spec = pl.BlockSpec((r, k), lambda b_, ml: (0, 0))
@@ -261,9 +271,14 @@ def policy_match(
         operands.append(keystream)
     in_specs += [table_spec, table_spec, table_spec]
     operands += [cond_off, cond_lo, cond_hi]
+    if has_live:
+        assert live.shape == (r,), (live.shape, r)
+        in_specs.append(pl.BlockSpec((1, r), lambda b_, ml: (0, 0)))
+        operands.append(jnp.asarray(live, jnp.int32).reshape(1, r))
 
     out = pl.pallas_call(
-        functools.partial(_policy_kernel, m=m, r=r, k=k, has_ks=has_ks),
+        functools.partial(_policy_kernel, m=m, r=r, k=k, has_ks=has_ks,
+                          has_live=has_live),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(b,),

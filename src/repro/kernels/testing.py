@@ -102,6 +102,17 @@ def policy_case(rng: np.random.Generator, b: int = 4, meta_max: int = 16,
             jnp.array(ks))
 
 
+def policy_live_column(rng: np.random.Generator, r: int) -> jnp.ndarray:
+    """A random [R] int32 backend-health rule mask for the policy-match
+    kernel's ``live`` operand: mostly-live rows with a sprinkling of dead
+    ones (the HealthTable shape under partial backend failure), never
+    all-dead so first-match and no-match sentinels both still occur."""
+    live = (rng.random(r) < 0.7).astype(np.int32)
+    if not live.any():
+        live[int(rng.integers(0, r))] = 1
+    return jnp.array(live)
+
+
 def jaxpr_primitives(jaxpr) -> List[str]:
     """All primitive names in a jaxpr, recursing through call/closed-call
     params (pjit bodies etc.)."""

@@ -1,0 +1,548 @@
+"""Fault-tolerant datapath: seeded chaos injection (FaultPlan), backend
+health/failover (HealthTable + the in-plane live-rule column), bounded
+retry/backoff with timeout-drop, worker-failure flow migration, and
+epoch-versioned policy hot-swap — property-tested against fault-free
+runs: every non-dropped message is byte-identical, every drop is
+counted, and no pool ever leaks a page or a grant pin."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClusterRuntime,
+    FaultPlan,
+    HealthTable,
+    LibraCluster,
+    LibraStack,
+    PolicyTable,
+    ProxyRuntime,
+    build_message,
+    eq,
+    forward,
+    rule,
+)
+
+STACK_KW = dict(n_shards=4, pages_per_shard=128, page_size=16)
+
+#: app metadata starts after the [MAGIC, len_meta, len_payload] header
+TAG = 3
+
+
+def _stack(**kw):
+    for k, v in STACK_KW.items():
+        kw.setdefault(k, v)
+    kw.setdefault("secret", b"ft")
+    return LibraStack(**kw)
+
+
+def _fo_table(health=None):
+    """One forward rule with a declared failover backend."""
+    return PolicyTable([rule(forward(0, failover=1), eq(TAG, 7))],
+                       health=health)
+
+
+def _deliver(src, n, seed=0, tag=7, payload=24, tls=False):
+    rng = np.random.default_rng(seed)
+    frames = [build_message(np.concatenate([[tag], rng.integers(100, 200, 3)]),
+                            rng.integers(1000, 2000, payload))
+              for _ in range(n)]
+    wire = (src.tls.seal_frames(frames, src.parser.inner) if tls
+            else np.concatenate(frames))
+    src.deliver(wire)
+    return frames
+
+
+def _frames_of(wire):
+    """Split a backend tx wire back into [MAGIC, lm, lp, meta..., payload...]
+    frames (hashable tuples, for multiset identity checks)."""
+    w = np.asarray(wire)
+    out, pos = [], 0
+    while pos < len(w):
+        span = 3 + int(w[pos + 1]) + int(w[pos + 2])
+        out.append(tuple(int(x) for x in w[pos:pos + span]))
+        pos += span
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan determinism
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_replay_is_deterministic():
+    """The same seed and schedule replay to identical fired-event logs,
+    channel stats, and backend bytes — chaos runs are reproducible."""
+    def run():
+        st = _stack()
+        plan = (FaultPlan(seed=11)
+                .eagain(0, start=1, until=9, p=0.6)
+                .reset(1, at=4)
+                .corrupt(p=0.3, start=0, until=2))
+        rt = ProxyRuntime(st, fault_plan=plan)
+        src = st.socket()
+        d0, d1 = st.socket(), st.socket()
+        ch = rt.channel(src, [d0, d1], max_retries=4, retry_timeout=64)
+        _deliver(src, 8, seed=3)
+        rt.run()
+        wires = (np.array(d0.tx_wire()), np.array(d1.tx_wire()))
+        out = (list(plan.log), plan.summary(),
+               (ch.stats.messages, ch.stats.retries, ch.stats.timeouts),
+               wires)
+        rt.shutdown()
+        return out
+
+    log_a, sum_a, stats_a, wires_a = run()
+    log_b, sum_b, stats_b, wires_b = run()
+    assert log_a == log_b and sum_a == sum_b and stats_a == stats_b
+    for a, b in zip(wires_a, wires_b):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# bounded retries, timeout-drop, storm ride-out
+# ---------------------------------------------------------------------------
+
+def test_permanent_stall_bounded_retries_then_counted_timeout_drop():
+    """An unexplained EAGAIN storm with no failover target must NOT hold
+    pages forever: each message retries (with backoff) up to the cap,
+    then drops — counted in ``ChannelStats.timeouts`` — and its pages
+    free. The run terminates (no EAGAIN livelock)."""
+    st = _stack()
+    plan = FaultPlan(seed=1).stall(0)
+    rt = ProxyRuntime(st, fault_plan=plan)
+    src, dst = st.socket_pair()
+    ch = rt.channel(src, dst, max_retries=5)
+    _deliver(src, 6)
+    rt.run()
+    assert ch.stats.timeouts == 6 and ch.stats.messages == 0
+    assert ch.stats.retries > 0
+    assert len(dst.tx_wire()) == 0
+    rt.shutdown()
+    assert st.alloc.free_pages == st.alloc.total_pages
+
+
+def test_retry_rides_out_finite_storm_byte_identical():
+    """A storm that ends inside the retry budget costs retries but no
+    messages: the delivered bytes equal the fault-free run."""
+    def run(faulty):
+        st = _stack()
+        plan = FaultPlan(seed=2).eagain(0, start=0, until=4, p=0.8) \
+            if faulty else None
+        rt = ProxyRuntime(st, fault_plan=plan)
+        src, dst = st.socket_pair()
+        ch = rt.channel(src, dst)
+        _deliver(src, 6, seed=9)
+        rt.run()
+        wire = np.array(dst.tx_wire())
+        snap = st.counters.snapshot()
+        retries = ch.stats.retries
+        rt.shutdown()
+        assert st.alloc.free_pages == st.alloc.total_pages
+        return wire, snap, retries
+
+    ref_wire, ref_snap, _ = run(False)
+    wire, snap, retries = run(True)
+    assert retries > 0
+    assert np.array_equal(wire, ref_wire)
+    assert snap == ref_snap
+
+
+# ---------------------------------------------------------------------------
+# backend health: trip, in-plane failover, half-open recovery
+# ---------------------------------------------------------------------------
+
+def test_health_trips_and_traffic_fails_over_in_plane():
+    """A hard-stalled primary trips the circuit breaker after
+    ``fail_threshold`` unexplained failures; subsequent verdicts (and the
+    held retry) re-route to the rule's failover backend — nothing times
+    out, everything lands on backend 1."""
+    st = _stack()
+    health = HealthTable(2, fail_threshold=3, probe_after=10 ** 6)
+    table = _fo_table(health)
+    plan = FaultPlan(seed=1).stall(0)
+    rt = ProxyRuntime(st, policy=table, fault_plan=plan)
+    src = st.socket()
+    d0, d1 = st.socket(), st.socket()
+    ch = rt.channel(src, [d0, d1])
+    _deliver(src, 6)
+    rt.run()
+    assert ch.stats.messages == 6 and ch.stats.timeouts == 0
+    assert ch.stats.failovers >= 1          # the held send re-routed
+    assert table.stats["failovers"] >= 1    # later verdicts re-routed
+    assert health.summary()["trips"] >= 1
+    assert len(d0.tx_wire()) == 0 and len(d1.tx_wire()) > 0
+    rt.shutdown()
+    assert st.alloc.free_pages == st.alloc.total_pages
+
+
+def test_health_half_open_probe_recovers_primary():
+    """After the storm window closes, the half-open probe's first success
+    closes the breaker and traffic returns to the primary."""
+    st = _stack()
+    health = HealthTable(2, fail_threshold=2, probe_after=1)
+    table = _fo_table(health)
+    plan = FaultPlan(seed=4).stall(0, until=6)
+    rt = ProxyRuntime(st, policy=table, fault_plan=plan, tick_every=4)
+    src = st.socket()
+    d0, d1 = st.socket(), st.socket()
+    ch = rt.channel(src, [d0, d1])
+    _deliver(src, 6, seed=1)
+    rt.run()
+    w0 = len(d0.tx_wire())
+    _deliver(src, 6, seed=2)
+    rt.run()
+    s = health.summary()
+    assert s["trips"] >= 1 and s["recoveries"] >= 1
+    assert s["state"] == [0, 0]             # both healthy again
+    assert len(d0.tx_wire()) > w0           # post-recovery traffic on d0
+    assert ch.stats.messages == 12 and ch.stats.timeouts == 0
+    rt.shutdown()
+
+
+def test_reset_backend_reroutes_to_failover():
+    """A connection reset closes the backend; in-flight and subsequent
+    messages re-route to the failover instead of dropping."""
+    st = _stack()
+    health = HealthTable(2, fail_threshold=3)
+    table = _fo_table(health)
+    plan = FaultPlan(seed=5).reset(0, at=0)
+    rt = ProxyRuntime(st, policy=table, fault_plan=plan)
+    src = st.socket()
+    d0, d1 = st.socket(), st.socket()
+    ch = rt.channel(src, [d0, d1])
+    frames = _deliver(src, 5, seed=7)
+    rt.run()
+    assert d0.closed and len(d0.tx_wire()) == 0
+    assert ch.stats.messages == 5 and ch.stats.timeouts == 0
+    assert ch.stats.failovers + table.stats["failovers"] >= 1
+    assert _frames_of(d1.tx_wire()) == [tuple(int(x) for x in f)
+                                        for f in frames]
+    rt.shutdown()
+    assert st.alloc.free_pages == st.alloc.total_pages
+
+
+def test_rule_live_column_skips_dead_rule_in_batched_match():
+    """The health column rides the vectorized match as a dense live mask:
+    a FORWARD rule whose primary is down (no failover) goes dead and
+    priority falls through to the next rule — in the batched pass."""
+    st = _stack()
+    health = HealthTable(2, fail_threshold=1)
+    table = PolicyTable([rule(forward(0), eq(TAG, 7), name="primary"),
+                         rule(forward(1), eq(TAG, 7), name="shadow")],
+                        health=health)
+    health.mark_down(0)
+    assert list(table.rule_live()) == [0, 1]
+    rt = ProxyRuntime(st, policy=table, batched=True)
+    src = st.socket()
+    d0, d1 = st.socket(), st.socket()
+    ch = rt.channel(src, [d0, d1])
+    _deliver(src, 6)
+    rt.run()
+    assert ch.stats.messages == 6
+    assert len(d0.tx_wire()) == 0 and len(d1.tx_wire()) > 0
+    assert table.stats["rule_hits"][1] == 6
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# epoch-versioned policy hot-swap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_policy_hot_swap_under_traffic(batched):
+    """``PolicyTable.swap`` under live traffic: messages verdicted before
+    the swap keep routing to the old backend, later ones to the new —
+    no message is lost or double-routed, and the epoch bumps."""
+    st = _stack()
+    table = PolicyTable([rule(forward(0), eq(TAG, 7))])
+    plan = FaultPlan(seed=0)
+    plan.at(3, lambda rt: table.swap([rule(forward(1), eq(TAG, 7))]))
+    rt = ProxyRuntime(st, policy=table, fault_plan=plan, batched=batched)
+    src = st.socket()
+    d0, d1 = st.socket(), st.socket()
+    ch = rt.channel(src, [d0, d1])
+    frames = _deliver(src, 12, seed=3)
+    rt.run()
+    assert table.epoch == 1
+    assert ch.stats.messages == 12
+    got = _frames_of(d0.tx_wire()) + _frames_of(d1.tx_wire())
+    assert sorted(got) == sorted(tuple(int(x) for x in f) for f in frames)
+    assert len(_frames_of(d0.tx_wire())) > 0    # pre-swap epoch routed old
+    assert len(_frames_of(d1.tx_wire())) > 0    # post-swap epoch routed new
+    rt.shutdown()
+    assert st.alloc.free_pages == st.alloc.total_pages
+
+
+# ---------------------------------------------------------------------------
+# record corruption (frame-aware, detectable under kTLS)
+# ---------------------------------------------------------------------------
+
+def test_corrupt_ingress_rejected_by_ktls_auth_and_stream_recovers():
+    """Injected corruption flips one payload token per record: the hw-kTLS
+    auth tag catches every damaged record (counted, dropped), the stream
+    never wedges, and post-window records deliver intact."""
+    st = _stack()
+    plan = FaultPlan(seed=3).corrupt(p=1.0, start=0, until=1)
+    rt = ProxyRuntime(st, fault_plan=plan)
+    src, dst = st.socket_pair("length-prefixed", tls="hw")
+    ch = rt.channel(src, dst)
+    _deliver(src, 4, seed=5, tls=True)
+    rt.run()
+    assert ch.stats.auth_rejects == 4 and ch.stats.messages == 0
+    frames = _deliver(src, 4, seed=6, tls=True)
+    rt.run()
+    assert ch.stats.messages == 4
+    opened = dst.tls.open_wire(dst.tx_wire())
+    assert np.array_equal(opened, np.concatenate(frames))
+    rt.shutdown()
+    assert st.alloc.free_pages == st.alloc.total_pages
+
+
+def test_pool_pressure_window_backpressures_then_drains():
+    """Holding most of the pool's free pages for a window degrades but
+    never deadlocks the datapath; the window closing (or shutdown's
+    ``release_all``) returns the pages and the zero-leak shutdown
+    invariant still holds."""
+    st = _stack(n_shards=4, pages_per_shard=64)
+    plan = FaultPlan(seed=2).pool_pressure(0.9, start=0, until=20)
+    rt = ProxyRuntime(st, fault_plan=plan)
+    src, dst = st.socket_pair()
+    ch = rt.channel(src, dst)
+    frames = _deliver(src, 8, seed=4, payload=40)
+    rt.run()
+    assert ch.stats.messages == 8
+    assert np.array_equal(np.array(dst.tx_wire()), np.concatenate(frames))
+    assert any(entry[1] == "pressure_on" for entry in plan.log)
+    rt.shutdown()
+    assert st.alloc.free_pages == st.alloc.total_pages
+
+
+# ---------------------------------------------------------------------------
+# worker failure: migration, dead-owner grants, zero leaks
+# ---------------------------------------------------------------------------
+
+def _cluster(n=3):
+    return LibraCluster(n, secret=b"ft", **STACK_KW)
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_kill_worker_migrates_flows_byte_identical(batched):
+    """Killing a worker mid-run migrates its flows to survivors (ring
+    remainder re-delivered, channel stats intact) — the survivors'
+    delivered bytes equal the fault-free run, and nothing leaks."""
+    rng = np.random.default_rng(5)
+    frames = [[build_message(rng.integers(100, 200, 4),
+                             rng.integers(1000, 2000, 40))
+               for _ in range(6)] for _ in range(6)]
+
+    def run(kill):
+        cl = _cluster(3)
+        plan = FaultPlan(seed=3)
+        if kill:
+            plan.kill_worker(2, at=4)
+        crt = ClusterRuntime(cl, fault_plan=plan, batched=batched)
+        dsts = []
+        for i, chan_frames in enumerate(frames):
+            src = cl.socket(worker=i % 3)
+            dst = cl.socket(worker=0)
+            crt.channel(src, dst)
+            dsts.append(dst)
+            for f in chan_frames:
+                src.deliver(f)
+        crt.run()
+        wires = [np.array(d.tx_wire()) for d in dsts]
+        stats = dict(cl.stats)
+        crt.shutdown()       # asserts zero leaked pages/grants everywhere
+        return wires, stats
+
+    ref_wires, _ = run(False)
+    wires, stats = run(True)
+    assert stats["worker_kills"] == 1 and stats["migrated_flows"] >= 1
+    for a, b in zip(ref_wires, wires):
+        assert np.array_equal(a, b)
+
+
+def test_kill_worker_migrates_ktls_session_state():
+    """A kTLS flow survives its worker: the session object (keys +
+    record sequence) moves with the migrated socket, so records sealed
+    before AND after the kill open cleanly on the backend."""
+    cl = _cluster(3)
+    plan = FaultPlan(seed=1).kill_worker(2, at=3)
+    crt = ClusterRuntime(cl, fault_plan=plan)
+    src = cl.socket(worker=2, tls="hw")
+    dst = cl.socket(worker=0, tls="hw")
+    crt.channel(src, dst)
+    frames = _deliver(src, 6, seed=8, tls=True)
+    crt.run()
+    assert cl.stats["worker_kills"] == 1
+    opened = dst.tls.open_wire(dst.tx_wire())
+    assert np.array_equal(opened, np.concatenate(frames))
+    crt.shutdown()
+
+
+def test_kill_worker_copies_out_dead_owner_grants_zero_leaks():
+    """A grant whose OWNER dies must not dangle: the grantee's entry is
+    copied out of the dying pool (counted one-copy fallback), the pin is
+    released, the dead pool drains to fully-free, and the granted payload
+    is still transmittable from the stash."""
+    from repro.core import VpiRegistry
+
+    cl = _cluster(2)
+    w0, w1 = cl.workers
+    crt = ClusterRuntime(cl)
+    src = cl.socket(worker=0)
+    dst = cl.socket(worker=1)
+    payload = np.arange(1000, 1040)
+    src.deliver(build_message(np.array([7, 1, 2, 3]), payload))
+    buf, _ = src.recv(1 << 20)
+    vpi = next(iter(src.connection.anchored))
+    granted = cl.grant_into(w1, vpi)
+    assert granted is not None and w0.alloc.granted_out_pages > 0
+
+    info = crt.kill_worker(0)
+    assert info["grants_copied_out"] == 1
+    assert cl.stats["dead_grants_copied"] == 1
+    assert w0.alloc.granted_out_pages == 0
+    assert w0.alloc.free_pages == w0.alloc.total_pages
+
+    out = buf.copy()
+    out[-1] = VpiRegistry.to_token(granted)
+    dst.send(out)
+    assert np.array_equal(np.array(dst.tx_wire())[-len(payload):], payload)
+    crt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# chaos matrix: byte- and counter-identity vs the fault-free run
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topology", ["single", "cluster"])
+@pytest.mark.parametrize("tls", [None, "hw"])
+@pytest.mark.parametrize("batched", [False, True])
+def test_chaos_storm_identity_matrix(topology, tls, batched):
+    """A finite EAGAIN storm (a fully-recovering fault) across the whole
+    configuration matrix: scalar/batched × plaintext/hw-kTLS ×
+    single-stack/cluster. The chaos run must deliver byte-identical
+    backend bytes AND an identical Fig. 9 counter snapshot — retries are
+    scheduling events, not data-plane copies."""
+    n_chans, n_msgs = 4, 4
+
+    def run(faulty):
+        plan = (FaultPlan(seed=7).eagain(0, start=1, until=5, p=0.7)
+                if faulty else None)
+        if topology == "single":
+            st = _stack()
+            rt = ProxyRuntime(st, batched=batched, fault_plan=plan)
+            mk = lambda i: (st.socket("length-prefixed", tls=tls),
+                            st.socket("length-prefixed", tls=tls))
+            counters = lambda: st.counters.snapshot()
+            pool_ok = lambda: st.alloc.free_pages == st.alloc.total_pages
+        else:
+            cl = _cluster(2)
+            rt = ClusterRuntime(cl, batched=batched, fault_plan=plan)
+            mk = lambda i: (cl.socket("length-prefixed", worker=i % 2,
+                                      tls=tls),
+                            cl.socket("length-prefixed", worker=(i + 1) % 2,
+                                      tls=tls))
+            counters = lambda: cl.counters_aggregate().snapshot()
+            pool_ok = lambda: cl.pages_in_use == 0
+        dsts, retries = [], 0
+        chans = []
+        for i in range(n_chans):
+            src, dst = mk(i)
+            chans.append(rt.channel(src, dst))
+            dsts.append(dst)
+            _deliver(src, n_msgs, seed=100 + i, tls=tls is not None)
+        rt.run()
+        wires = [np.array(d.tls.open_wire(d.tx_wire()) if tls
+                          else d.tx_wire()) for d in dsts]
+        snap = counters()
+        retries = sum(c.stats.retries for c in chans)
+        rt.shutdown()
+        assert pool_ok()
+        return wires, snap, retries
+
+    ref_wires, ref_snap, _ = run(False)
+    wires, snap, retries = run(True)
+    assert retries > 0, "the storm never bit — the matrix cell is vacuous"
+    assert snap == ref_snap
+    for a, b in zip(ref_wires, wires):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the standard chaos scenario (tier-1 acceptance)
+# ---------------------------------------------------------------------------
+
+def _run_scenario(chaos: bool, n_chans=9, n_msgs=12, payload=32):
+    """Backend 0 dead at t=25%, worker 2 killed at t=50%, tables swapped
+    (equivalent rules, epoch bump) at t=75% — fractions of the fault-free
+    round count. Returns per-channel delivered frame multisets, drop
+    counts, wall seconds, and delivered message count."""
+    cl = LibraCluster(3, secret=b"chaos", **STACK_KW)
+    health = HealthTable(2, fail_threshold=2)
+    table = _fo_table(health)
+    plan = FaultPlan(seed=13)
+    crt = ClusterRuntime(cl, policy=table, fault_plan=plan)
+    if chaos:
+        R = _run_scenario.rounds
+        plan.reset(0, at=max(R // 4, 1))
+        plan.kill_worker(2, at=max(R // 2, 2))
+
+        def swap_all(rt):
+            for t in rt.policies:
+                if t is not None:
+                    t.swap([rule(forward(0, failover=1), eq(TAG, 7))])
+        plan.at(max(3 * R // 4, 3), swap_all)
+    chans, dst_pairs, sent = [], [], []
+    for i in range(n_chans):
+        src = cl.socket(worker=i % 3)
+        pair = [cl.socket(worker=(i + 1) % 3) for _ in range(2)]
+        chans.append(crt.channel(src, pair))
+        dst_pairs.append(pair)
+        sent.append(_deliver(src, n_msgs, seed=200 + i, payload=payload))
+    t0 = time.perf_counter()
+    crt.run()
+    dt = time.perf_counter() - t0
+    if not chaos:
+        _run_scenario.rounds = crt.rounds
+    delivered = [sorted(_frames_of(d0.tx_wire()) + _frames_of(d1.tx_wire()))
+                 for d0, d1 in dst_pairs]
+    drops = [c.stats.timeouts + c.stats.drops for c in chans]
+    msgs = crt.messages_forwarded()
+    if chaos:
+        assert cl.stats["worker_kills"] == 1
+        assert all(t is None or t.epoch == 1 for t in crt.policies
+                   if t is not None)
+    crt.shutdown()         # asserts zero leaked pages/grants on every pool
+    return delivered, drops, dt, msgs, [
+        sorted(tuple(int(x) for x in f) for f in s) for s in sent]
+
+
+def test_standard_chaos_scenario_identity_and_recovery_throughput():
+    """The acceptance scenario: under backend-death + worker-kill +
+    table-swap, every non-dropped message arrives byte-identical to the
+    fault-free run (exactly once), every missing message is a counted
+    drop, no pool leaks, and delivered throughput stays >= 70% of
+    steady state."""
+    ref_delivered, ref_drops, ref_dt, ref_msgs, sent = _run_scenario(False)
+    assert sum(ref_drops) == 0 and ref_msgs == sum(len(s) for s in sent)
+    for got, exp in zip(ref_delivered, sent):
+        assert got == exp
+
+    delivered, drops, dt, msgs, _ = _run_scenario(True)
+    for i, (got, exp) in enumerate(zip(delivered, sent)):
+        # subset: every delivered frame is one of the originals, once
+        assert len(got) == len(set(got))
+        assert set(got) <= set(exp), f"channel {i} delivered foreign bytes"
+        # conservation: delivered + counted drops == sent
+        assert len(got) + drops[i] == len(exp), \
+            f"channel {i}: {len(exp) - len(got) - drops[i]} uncounted losses"
+
+    # recovery throughput: best-of-2 each way to damp scheduler noise
+    _, _, ref_dt2, _, _ = _run_scenario(False)
+    _, _, dt2, msgs2, _ = _run_scenario(True)
+    steady = ref_msgs / max(min(ref_dt, ref_dt2), 1e-9)
+    under_chaos = max(msgs / max(dt, 1e-9), msgs2 / max(dt2, 1e-9))
+    assert under_chaos >= 0.7 * steady, \
+        f"chaos throughput {under_chaos:.0f} < 70% of steady {steady:.0f}"
