@@ -21,9 +21,9 @@ from __future__ import annotations
 import functools
 import sys
 
-import jax
 import numpy as np
 
+from repro.analysis.jaxpr_audit import assert_fused
 from repro.kernels import ref as R
 from repro.kernels.selective_copy import (
     policy_match,
@@ -31,8 +31,6 @@ from repro.kernels.selective_copy import (
     selective_gather,
 )
 from repro.kernels.testing import (
-    POOL_COPY_PRIMS,
-    jaxpr_primitives,
     policy_case,
     policy_live_column,
     selcopy_case,
@@ -101,11 +99,8 @@ def check_gather_no_pool_copy() -> None:
     pool, tables, lengths, ks = selgather_case(np.random.default_rng(8))
     for k in (None, ks):
         fn = functools.partial(selective_gather, interpret=True, keystream=k)
-        names = jaxpr_primitives(jax.make_jaxpr(fn)(pool, tables,
-                                                    lengths).jaxpr)
-        bad = set(names) & set(POOL_COPY_PRIMS)
-        assert not bad, f"pool-sized copy in the gather hot path: {bad}"
-        assert names.count("pallas_call") == 1
+        assert_fused(fn, (pool, tables, lengths),
+                     name=f"gather[ks={k is not None}]")
     print("zero-copy: gather jaxpr reads the resident pool in place")
 
 
@@ -113,16 +108,13 @@ def check_no_pool_copy() -> None:
     stream, ml, tl, pool, tables = selcopy_case(np.random.default_rng(7))
     fn = functools.partial(selective_copy, meta_max=16, interpret=True,
                            reserved_scratch=True)
-    names = jaxpr_primitives(jax.make_jaxpr(fn)(stream, ml, tl, pool,
-                                                tables).jaxpr)
-    bad = set(names) & set(POOL_COPY_PRIMS)
-    assert not bad, f"pool-sized copy crept back into the hot path: {bad}"
+    assert_fused(fn, (stream, ml, tl, pool, tables), name="selcopy")
     legacy = functools.partial(selective_copy, meta_max=16, interpret=True,
                                reserved_scratch=False)
-    lnames = jaxpr_primitives(jax.make_jaxpr(legacy)(stream, ml, tl,
-                                                     pool[:-1], tables).jaxpr)
-    assert "concatenate" in lnames, \
-        "sanity check broken: legacy path should show its concatenate"
+    # negative control: the legacy (non-fused) path must still show its
+    # grown-pool concatenate, or the gate itself has gone blind
+    assert_fused(legacy, (stream, ml, tl, pool[:-1], tables),
+                 name="selcopy[legacy]", forbid=(), expect=("concatenate",))
     print("zero-realloc: reserved-scratch jaxpr has no concatenate/pad")
 
 
@@ -162,12 +154,9 @@ def check_policy_no_pool_copy() -> None:
         for lv in (None, live):
             fn = functools.partial(policy_match, interpret=True,
                                    keystream=kk, live=lv)
-            names = jaxpr_primitives(jax.make_jaxpr(fn)(meta, ml, off, lo,
-                                                        hi).jaxpr)
-            bad = set(names) & set(POOL_COPY_PRIMS)
-            assert not bad, \
-                f"pool-sized copy in the policy match pass: {bad}"
-            assert names.count("pallas_call") == 1
+            assert_fused(fn, (meta, ml, off, lo, hi),
+                         name=f"policy[ks={kk is not None},"
+                              f"live={lv is not None}]")
     print("zero-copy: policy match jaxpr is one fused kernel call")
 
 

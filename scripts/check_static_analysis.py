@@ -1,0 +1,61 @@
+#!/usr/bin/env python
+"""CI gate for the datapath verifier (``repro.analysis``).
+
+Runs the three static-analysis passes — page/grant ownership lint, jaxpr
+zero-copy audit, cluster-plane lockset check — and fails on any unwaived
+finding. The advisory import-graph hygiene report prints but never fails
+the gate. A wall-clock budget keeps the gate honest: static analysis that
+takes minutes stops being run, so the whole suite must finish in under
+30 s on CPU.
+
+Usage: python scripts/check_static_analysis.py
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+WALL_BUDGET_S = 30.0
+
+
+def main() -> int:
+    t0 = time.monotonic()
+    failed = False
+
+    from repro.analysis import ownership
+    rep = ownership.run()
+    print("\n".join(rep.lines()))
+    failed |= not rep.ok
+
+    from repro.analysis import jaxpr_audit
+    rep = jaxpr_audit.run()
+    print("\n".join(rep.lines()))
+    failed |= not rep.ok
+
+    from repro.analysis import lockset
+    rep = lockset.run()
+    print("\n".join(rep.lines()))
+    failed |= not rep.ok
+
+    from repro.analysis import importgraph
+    print("\n".join(importgraph.report_lines()))  # advisory, never fails
+
+    wall = time.monotonic() - t0
+    print(f"static analysis wall clock: {wall:.1f}s (budget {WALL_BUDGET_S:.0f}s)")
+    if wall > WALL_BUDGET_S:
+        print("FAIL: static analysis exceeded its wall-clock budget — "
+              "a slow gate is a skipped gate; profile the offending pass")
+        failed = True
+
+    if failed:
+        print("check_static_analysis: FAIL")
+        return 1
+    print("check_static_analysis: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,25 @@ python -m pytest -x -q
 echo "== kernel parity: fused selective-copy + gather + policy-match vs oracles (interpret mode) =="
 python scripts/check_kernel_parity.py
 
+echo "== static analysis: ownership lint + jaxpr audit + lockset check =="
+python scripts/check_static_analysis.py
+
+if command -v ruff >/dev/null 2>&1; then
+  echo "== lint: ruff (hard gate: analysis/; advisory: rest) =="
+  ruff check src/repro/analysis
+  ruff check . || echo "ruff (advisory, outside analysis/): issues above are non-blocking"
+else
+  echo "== lint: ruff not installed — skipping (pip install -r requirements-dev.txt) =="
+fi
+
+if command -v mypy >/dev/null 2>&1; then
+  echo "== types: mypy (hard gate: analysis/; advisory: rest) =="
+  mypy src/repro/analysis
+  mypy src/repro || echo "mypy (advisory, outside analysis/): issues above are non-blocking"
+else
+  echo "== types: mypy not installed — skipping (pip install -r requirements-dev.txt) =="
+fi
+
 echo "== failover recovery: standard chaos scenario (identity + conservation + zero leaks) =="
 python scripts/check_failover_recovery.py
 

@@ -1,0 +1,29 @@
+"""Static-analysis suite for the Libra datapath (verifier analogue).
+
+Libra's safety story rests on the eBPF verifier proving selective-copy
+programs safe *before* they touch the datapath.  This package is the
+reproduction's analogue: three static passes + one runtime instrumentation
+hook that together gate the invariants the datapath has accumulated:
+
+- :mod:`repro.analysis.ownership` — AST dataflow over ``core/*.py`` modeling
+  the page/grant lifecycle; flags paths where an exception or early return
+  escapes between acquire and release without try/finally or an explicit
+  ownership handoff.
+- :mod:`repro.analysis.jaxpr_audit` — trace-level audit of every registered
+  kernel entry point: exactly one ``pallas_call`` per fused op, no
+  pool-sized-copy primitives, donation really consumes its buffer, no silent
+  int64 promotion, declared-vs-observed boundary-transfer budget.
+- :mod:`repro.analysis.lockset` — derives the shared-mutable-state map of the
+  cluster plane as a checked manifest, plus a test-time ``LocksetMonitor``
+  that records accessor-worker sets per shared object and fails on
+  unsynchronized cross-worker mutation.
+- :mod:`repro.analysis.importgraph` — warn-only import-graph hygiene report
+  (modules under ``src/repro`` unreachable from tests/examples/benchmarks).
+
+Findings carry ``file:line``, an invariant rule name, and honor waiver
+comments of the form ``# libra: waive[RULE] reason`` (reason mandatory).
+CLI: ``python -m repro.analysis`` — see ``docs/API.md``.
+"""
+from repro.analysis.common import Finding, Report, apply_waivers
+
+__all__ = ["Finding", "Report", "apply_waivers"]

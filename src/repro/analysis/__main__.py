@@ -1,0 +1,62 @@
+"""CLI for the datapath verifier: ``python -m repro.analysis``.
+
+Runs the three analysis passes (ownership lint, jaxpr zero-copy audit,
+cluster-plane lockset check) plus the advisory import-graph report, and
+exits non-zero on any unwaived finding. ``--write-manifest`` regenerates
+the committed shared-state manifest after a reviewed locking change.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+PASSES = ("ownership", "jaxpr", "lockset", "imports")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Libra datapath verifier — static analysis passes")
+    ap.add_argument("--pass", dest="passes", action="append",
+                    choices=PASSES + ("all",), default=None,
+                    help="pass to run (repeatable; default: all)")
+    ap.add_argument("--write-manifest", action="store_true",
+                    help="regenerate the shared-state manifest from the "
+                         "current tree, then run the lockset pass")
+    args = ap.parse_args(argv)
+
+    selected = set(args.passes or ["all"])
+    if "all" in selected:
+        selected = set(PASSES)
+
+    if args.write_manifest:
+        from repro.analysis import lockset
+        m = lockset.write_manifest()
+        print(f"wrote {lockset.MANIFEST_PATH} "
+              f"({len(m['classes'])} classes, {len(m['sites'])} sites)")
+        selected.add("lockset")
+
+    failed = False
+    if "ownership" in selected:
+        from repro.analysis import ownership
+        rep = ownership.run()
+        print("\n".join(rep.lines()))
+        failed |= not rep.ok
+    if "jaxpr" in selected:
+        from repro.analysis import jaxpr_audit
+        rep = jaxpr_audit.run()
+        print("\n".join(rep.lines()))
+        failed |= not rep.ok
+    if "lockset" in selected:
+        from repro.analysis import lockset
+        rep = lockset.run()
+        print("\n".join(rep.lines()))
+        failed |= not rep.ok
+    if "imports" in selected:
+        from repro.analysis import importgraph
+        print("\n".join(importgraph.report_lines()))  # advisory only
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

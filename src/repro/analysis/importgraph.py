@@ -1,0 +1,128 @@
+"""Import-graph hygiene report (warn-only).
+
+Builds the static import graph of the ``repro`` package plus the repo's
+executable roots (``tests/``, ``scripts/``, ``examples/``,
+``benchmarks/``) and reports any ``repro`` module that no root can reach.
+Unreachable modules are dead weight: nothing tests them, nothing ships
+them, and they silently rot. The report is advisory — it prints in the
+CI gate but never fails it, because intentional staging of future work is
+legitimate; promoting a module out of the report means wiring it into a
+test or an entry point.
+
+Pure-AST: modules are never imported, so a module with a missing optional
+dependency still participates in the graph.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+PKG_ROOT = REPO_ROOT / "src" / "repro"
+ENTRY_DIRS = ("tests", "scripts", "examples", "benchmarks")
+
+
+def _module_name(py: Path) -> str:
+    rel = py.relative_to(PKG_ROOT.parent).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imports(py: Path, within: str) -> Set[str]:
+    """repro.* modules imported by ``py``; ``within`` resolves relatives."""
+    try:
+        tree = ast.parse(py.read_text(), filename=str(py))
+    except SyntaxError:
+        return set()
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out.update(a.name for a in node.names
+                       if a.name.split(".")[0] == "repro")
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                base = within.split(".")
+                base = base[: len(base) - node.level + 1]
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            if mod.split(".")[0] == "repro":
+                out.add(mod)
+                # `from repro.core import cluster` names a submodule, not
+                # an attribute — add both candidates; unknowns are dropped
+                # when edges are resolved against the real module set
+                out.update(f"{mod}.{a.name}" for a in node.names)
+    return out
+
+
+def build_graph() -> Dict[str, Set[str]]:
+    """module -> set of repro modules it imports (package-internal only)."""
+    modules = {_module_name(py): py for py in PKG_ROOT.rglob("*.py")}
+    graph: Dict[str, Set[str]] = {}
+    for name, py in modules.items():
+        deps = set()
+        for imp in _imports(py, name):
+            # resolve to the longest known prefix (repro.core.cluster.Foo
+            # -> repro.core.cluster); importing a package pulls __init__
+            parts = imp.split(".")
+            while parts and ".".join(parts) not in modules:
+                parts.pop()
+            if parts:
+                deps.add(".".join(parts))
+        graph[name] = deps - {name}
+    return graph
+
+
+def entry_imports() -> Set[str]:
+    """repro modules imported directly by any executable root."""
+    out: Set[str] = set()
+    for d in ENTRY_DIRS:
+        root = REPO_ROOT / d
+        if not root.is_dir():
+            continue
+        for py in root.rglob("*.py"):
+            out |= _imports(py, "")
+    return out
+
+
+def unreachable() -> List[str]:
+    """repro modules no executable root can reach, sorted."""
+    graph = build_graph()
+    # `python -m pkg` entry points are roots in their own right
+    roots = {m for m in graph if m.rsplit(".", 1)[-1] == "__main__"}
+    for imp in entry_imports():
+        parts = imp.split(".")
+        while parts and ".".join(parts) not in graph:
+            parts.pop()
+        if parts:
+            roots.add(".".join(parts))
+    seen: Set[str] = set()
+    stack = list(roots)
+    while stack:
+        mod = stack.pop()
+        if mod in seen:
+            continue
+        seen.add(mod)
+        # importing repro.core.cluster executes repro/__init__ and
+        # repro/core/__init__ too — packages on the dotted path count
+        parts = mod.split(".")
+        for i in range(1, len(parts)):
+            pkg = ".".join(parts[:i])
+            if pkg in graph and pkg not in seen:
+                stack.append(pkg)
+        stack.extend(graph.get(mod, ()))
+    return sorted(m for m in graph if m not in seen)
+
+
+def report_lines() -> List[str]:
+    dead = unreachable()
+    if not dead:
+        return ["imports: all repro modules reachable from "
+                f"{'/'.join(ENTRY_DIRS)}"]
+    lines = [f"imports: {len(dead)} module(s) unreachable from any "
+             f"executable root ({'/'.join(ENTRY_DIRS)}) — advisory only:"]
+    lines += [f"  {m}" for m in dead]
+    return lines

@@ -1,0 +1,303 @@
+"""Pass 2 — jaxpr auditor for every registered kernel entry point.
+
+Generalizes ``check_kernel_parity.py``'s ad-hoc jaxpr walks into one
+audited registry.  For each entry (``selective_copy`` legacy/reserved/
+crypto, ``selective_gather`` ± keystream, ``policy_match`` ± keystream ±
+live — the ops behind the batched read/write paths) the trace-level
+invariants are:
+
+- ``JAX001`` — exactly one ``pallas_call`` per fused op (the whole round
+  is ONE kernel; a second call means the fusion regressed).
+- ``JAX002`` — no pool-sized-copy primitive (``concatenate``/``pad``/
+  ``gather``-free hot path; the reserved-scratch row exists precisely so
+  the kernel never materializes a grown pool).
+- ``JAX003`` — no silent int64 promotion: an int64 aval appearing in a
+  jaxpr whose inputs are all narrower means a host int64 leaked into the
+  device plane (the int32 stream would truncate, or x64 doubles traffic).
+- ``JAX004`` — declared-vs-observed boundary-transfer budget: the element
+  count crossing the host/device boundary (invars + consts + outvars)
+  must equal what the entry declares — a new operand or a pool-sized
+  output shows up here before it shows up in a benchmark.
+- ``JAX005`` — donation actually consumes its input: the donated pool
+  buffer must be deleted after a ``donate_pool=True`` round (otherwise
+  the "in-place" round silently keeps two live pools).
+
+This module is the single source of truth for :data:`POOL_COPY_PRIMS` and
+the jaxpr primitive walk — ``repro.kernels.testing`` re-exports them, and
+``scripts/check_kernel_parity.py`` delegates here.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.analysis.common import Finding, Report
+
+#: primitives that would betray a pool-sized copy on the hot path
+POOL_COPY_PRIMS = ("concatenate", "pad")
+
+JAXPR_RULES = ("JAX001", "JAX002", "JAX003", "JAX004", "JAX005")
+
+
+def jaxpr_primitives(jaxpr) -> List[str]:
+    """All primitive names in a jaxpr, recursing through call/closed-call
+    params (pjit bodies etc.)."""
+    acc: List[str] = []
+
+    def walk(j):
+        for eqn in j.eqns:
+            acc.append(eqn.primitive.name)
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", None)
+                if inner is not None:
+                    walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
+
+    walk(jaxpr)
+    return acc
+
+
+def _avals(jaxpr) -> list:
+    """Avals of every var in the jaxpr tree (boundary and internal)."""
+    out = []
+
+    def walk(j):
+        for v in list(j.invars) + list(j.constvars) + list(j.outvars):
+            aval = getattr(v, "aval", None)
+            if aval is not None:
+                out.append(aval)
+        for eqn in j.eqns:
+            for v in eqn.outvars:
+                aval = getattr(v, "aval", None)
+                if aval is not None:
+                    out.append(aval)
+            for p in eqn.params.values():
+                inner = getattr(p, "jaxpr", None)
+                if inner is not None:
+                    walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
+
+    walk(jaxpr)
+    return out
+
+
+def _boundary_elems(closed_jaxpr) -> int:
+    """Element count crossing the host/device boundary: inputs, captured
+    consts, and outputs of the top-level jaxpr."""
+    j = closed_jaxpr.jaxpr
+    total = 0
+    for v in list(j.invars) + list(j.outvars):
+        aval = getattr(v, "aval", None)
+        if aval is not None and hasattr(aval, "shape"):
+            total += int(np.prod(aval.shape, dtype=np.int64)) if aval.shape \
+                else 1
+    for c in closed_jaxpr.consts:
+        total += int(np.asarray(c).size)
+    return total
+
+
+@dataclass
+class KernelEntry:
+    """One audited kernel entry point.
+
+    ``build`` returns ``(fn, args, declared_boundary_elems)`` — the
+    declared budget is the entry's contract for what crosses the
+    host/device boundary per call.
+    """
+    name: str
+    build: Callable[[], Tuple[Callable, tuple, int]]
+    n_pallas: int = 1
+    forbid: Tuple[str, ...] = POOL_COPY_PRIMS
+    expect: Tuple[str, ...] = ()  # negative control: prims that MUST appear
+
+
+def _case_dims(b=2, page=8, pps=4, meta_max=16):
+    s = meta_max + pps * page
+    p_total = b * pps + 2
+    return s, p_total
+
+
+def _selcopy_entry(reserved: bool, keystream: bool):
+    def build():
+        import jax
+        from repro.kernels.selective_copy import selective_copy
+        from repro.kernels.testing import selcopy_case, selcopy_crypto_case
+        rng = np.random.default_rng(7)
+        b, page, pps, meta_max = 2, 8, 4, 16
+        s, p_total = _case_dims(b, page, pps, meta_max)
+        if keystream:
+            stream, ml, tl, pool, tables, ks = selcopy_crypto_case(
+                rng, b=b, page=page, pps=pps, meta_max=meta_max)
+            fn = functools.partial(selective_copy, meta_max=meta_max,
+                                   interpret=True, reserved_scratch=True,
+                                   keystream=ks)
+            args = (stream, ml, tl, pool, tables)
+            pool_rows = p_total + 1
+            declared = (b * s            # stream
+                        + 2 * b          # meta_len, total_len
+                        + pool_rows * page
+                        + b * pps        # tables
+                        + b * s          # keystream (captured const)
+                        + b * meta_max   # meta out
+                        + pool_rows * page)  # pool out
+        else:
+            stream, ml, tl, pool, tables = selcopy_case(
+                rng, b=b, page=page, pps=pps, meta_max=meta_max)
+            if not reserved:
+                pool = pool[:-1]
+            fn = functools.partial(selective_copy, meta_max=meta_max,
+                                   interpret=True,
+                                   reserved_scratch=reserved)
+            args = (stream, ml, tl, pool, tables)
+            pool_rows = (p_total + 1) if reserved else p_total
+            declared = (b * s + 2 * b + pool_rows * page + b * pps
+                        + b * meta_max + pool_rows * page)
+        return fn, args, declared
+    return build
+
+
+def _selgather_entry(keystream: bool):
+    def build():
+        from repro.kernels.selective_copy import selective_gather
+        from repro.kernels.testing import selgather_case
+        rng = np.random.default_rng(8)
+        b, page, pps = 2, 8, 4
+        p_total = b * pps + 2
+        pool, tables, lengths, ks = selgather_case(rng, b=b, page=page,
+                                                   pps=pps)
+        fn = functools.partial(selective_gather, interpret=True,
+                               keystream=ks if keystream else None)
+        declared = ((p_total + 1) * page + b * pps + b
+                    + (b * pps * page if keystream else 0)   # ks const
+                    + b * pps * page)                        # gathered out
+        return fn, (pool, tables, lengths), declared
+    return build
+
+
+def _policy_entry(keystream: bool, live: bool):
+    def build():
+        from repro.kernels.selective_copy import policy_match
+        from repro.kernels.testing import policy_case, policy_live_column
+        rng = np.random.default_rng(9)
+        b, meta_max, r, k = 4, 16, 6, 3
+        meta, ml, off, lo, hi, ks = policy_case(rng, b=b, meta_max=meta_max,
+                                                r=r, k=k)
+        lv = policy_live_column(rng, r) if live else None
+        fn = functools.partial(policy_match, interpret=True,
+                               keystream=ks if keystream else None, live=lv)
+        declared = (b * meta_max + b + 3 * r * k
+                    + (b * meta_max if keystream else 0)
+                    + (r if live else 0)
+                    + b)  # verdict out
+        return fn, (meta, ml, off, lo, hi), declared
+    return build
+
+
+KERNEL_ENTRIES: List[KernelEntry] = [
+    KernelEntry("selective_copy[reserved]", _selcopy_entry(True, False)),
+    KernelEntry("selective_copy[keystream]", _selcopy_entry(True, True)),
+    # legacy mode is the negative control: its grown-pool concatenate is
+    # the pool-sized copy the reserved-scratch mode exists to eliminate
+    KernelEntry("selective_copy[legacy]", _selcopy_entry(False, False),
+                forbid=(), expect=("concatenate",)),
+    KernelEntry("selective_gather", _selgather_entry(False)),
+    KernelEntry("selective_gather[keystream]", _selgather_entry(True)),
+    KernelEntry("policy_match", _policy_entry(False, False)),
+    KernelEntry("policy_match[keystream]", _policy_entry(True, False)),
+    KernelEntry("policy_match[live]", _policy_entry(False, True)),
+    KernelEntry("policy_match[keystream+live]", _policy_entry(True, True)),
+]
+
+
+def audit_fn(fn: Callable, args: tuple, *, name: str,
+             n_pallas: int = 1,
+             forbid: Sequence[str] = POOL_COPY_PRIMS,
+             expect: Sequence[str] = (),
+             declared_boundary: int | None = None) -> List[Finding]:
+    """Audit one traced callable against the kernel invariants.
+
+    This is the primitive the parity gate and the fixture tests share.
+    """
+    import jax
+    closed = jax.make_jaxpr(fn)(*args)
+    names = jaxpr_primitives(closed.jaxpr)
+    loc = f"<jaxpr:{name}>"
+    findings: List[Finding] = []
+    got_pallas = names.count("pallas_call")
+    if got_pallas != n_pallas:
+        findings.append(Finding(loc, 0, "JAX001",
+                                f"{got_pallas} pallas_call(s), expected "
+                                f"{n_pallas} — the fused round regressed"))
+    bad = sorted(set(names) & set(forbid))
+    if bad:
+        findings.append(Finding(loc, 0, "JAX002",
+                                f"pool-sized copy primitive(s) in the hot "
+                                f"path: {bad}"))
+    missing = sorted(set(expect) - set(names))
+    if missing:
+        findings.append(Finding(loc, 0, "JAX002",
+                                f"negative control broken: expected "
+                                f"{missing} in this (non-fused) trace"))
+    in_dtypes = {str(getattr(v.aval, "dtype", ""))
+                 for v in closed.jaxpr.invars} | \
+                {str(np.asarray(c).dtype) for c in closed.consts}
+    if "int64" not in in_dtypes:
+        wide = [a for a in _avals(closed.jaxpr)
+                if str(getattr(a, "dtype", "")) == "int64"]
+        if wide:
+            findings.append(Finding(
+                loc, 0, "JAX003",
+                f"silent int64 promotion: {len(wide)} int64 aval(s) in a "
+                f"jaxpr with no int64 input"))
+    if declared_boundary is not None:
+        observed = _boundary_elems(closed)
+        if observed != declared_boundary:
+            findings.append(Finding(
+                loc, 0, "JAX004",
+                f"boundary-transfer budget: declared {declared_boundary} "
+                f"elements, observed {observed}"))
+    return findings
+
+
+def assert_fused(fn: Callable, args: tuple, *, name: str,
+                 n_pallas: int = 1,
+                 forbid: Sequence[str] = POOL_COPY_PRIMS,
+                 expect: Sequence[str] = ()) -> None:
+    """Raise AssertionError on any finding — the parity-gate entry point."""
+    findings = audit_fn(fn, args, name=name, n_pallas=n_pallas,
+                        forbid=forbid, expect=expect)
+    assert not findings, "; ".join(f.format() for f in findings)
+
+
+def audit_donation() -> List[Finding]:
+    """JAX005: a ``donate_pool=True`` round must consume the input pool
+    buffer (otherwise two full pools stay live per round)."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.kernels.testing import selcopy_case
+    rng = np.random.default_rng(11)
+    stream, ml, tl, pool, tables = selcopy_case(rng)
+    donated = jnp.array(np.array(pool))
+    ops.selective_copy(stream, ml, tl, donated, tables, meta_max=16,
+                       impl="ref", donate_pool=True)
+    findings: List[Finding] = []
+    if not donated.is_deleted():
+        findings.append(Finding(
+            "<jaxpr:selective_copy[donated]>", 0, "JAX005",
+            "donate_pool=True did not consume the input pool buffer — "
+            "donation is declared but not honored"))
+    return findings
+
+
+def run() -> Report:
+    """Audit every registered kernel entry plus the donation contract."""
+    findings: List[Finding] = []
+    for entry in KERNEL_ENTRIES:
+        fn, args, declared = entry.build()
+        findings.extend(audit_fn(
+            fn, args, name=entry.name, n_pallas=entry.n_pallas,
+            forbid=entry.forbid, expect=entry.expect,
+            declared_boundary=declared))
+    findings.extend(audit_donation())
+    return Report(name="jaxpr", active=findings, waived=[])

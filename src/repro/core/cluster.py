@@ -62,6 +62,7 @@ from repro.core.runtime import ProxyChannel, ProxyRuntime
 from repro.core.socket import LibraSocket
 from repro.core.stack import LibraStack, ParserLike
 from repro.core.stream import CopyCounters
+from repro.core.sync import ClusterLock
 
 #: steering callable signature for mode='app': (flow_key, n_workers) -> int
 AppSteer = Callable[[object, int], int]
@@ -73,6 +74,26 @@ def _stable_hash(secret: bytes, obj: object) -> int:
     strings, the 4-tuple analogue)."""
     h = hashlib.blake2b(repr(obj).encode(), key=secret, digest_size=8)
     return struct.unpack("<Q", h.digest())[0]
+
+
+class _WorkerCtx:
+    """Scopes ``LibraCluster.current_worker`` to one scheduling quantum
+    (restoring the previous attribution on exit, so nested quanta — a
+    survivor draining a dying worker's channel — unwind correctly)."""
+
+    __slots__ = ("cluster", "w", "prev")
+
+    def __init__(self, cluster: "LibraCluster", w: Optional[int]):
+        self.cluster = cluster
+        self.w = w
+
+    def __enter__(self) -> "_WorkerCtx":
+        self.prev = self.cluster.current_worker
+        self.cluster.current_worker = self.w
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.cluster.current_worker = self.prev
 
 
 class SteeringPolicy:
@@ -104,6 +125,9 @@ class SteeringPolicy:
         self.replicas = replicas
         self.secret = secret
         self.n_workers = n_workers
+        # every worker steers through this one object (placements, stats,
+        # the ring): self-locking, per the repro.core.sync discipline
+        self.lock = ClusterLock("steering")
         # workers removed by failure: their vnodes leave the ring (hash
         # mode) / their index is skipped (app mode); indices of the
         # survivors never shift, so placements stay stable
@@ -132,26 +156,30 @@ class SteeringPolicy:
         ``track=False`` skips the placement record — used for one-shot
         auto-generated flow keys that can never recur, so a long-lived
         cluster's placement map stays bounded by *named* flows."""
-        if self.mode == "app":
-            w = int(self.app_fn(flow, self.n_workers)) % self.n_workers
-            while w in self.dead:
-                # app steering is dead-worker-oblivious: deterministically
-                # walk to the next live index (consistent across callers)
-                w = (w + 1) % self.n_workers
-        else:
-            pos = _stable_hash(self.secret, flow)
-            i = bisect.bisect_right(self._ring_keys, pos) % len(self._ring)
-            w = self._ring[i][1]
-        self.stats["steered"] += 1
-        self.stats["per_worker"][w] += 1
-        if track:
-            self.placements[flow] = w
-        return w
+        with self.lock:
+            if self.mode == "app":
+                w = int(self.app_fn(flow, self.n_workers)) % self.n_workers
+                while w in self.dead:
+                    # app steering is dead-worker-oblivious:
+                    # deterministically walk to the next live index
+                    # (consistent across callers)
+                    w = (w + 1) % self.n_workers
+            else:
+                pos = _stable_hash(self.secret, flow)
+                i = bisect.bisect_right(self._ring_keys, pos) \
+                    % len(self._ring)
+                w = self._ring[i][1]
+            self.stats["steered"] += 1
+            self.stats["per_worker"][w] += 1
+            if track:
+                self.placements[flow] = w
+            return w
 
     def forget(self, flow: object) -> None:
         """Drop a tracked flow (its connection closed) from the placement
         map, so resteer stats cover only live flows."""
-        self.placements.pop(flow, None)
+        with self.lock:
+            self.placements.pop(flow, None)
 
     def resteer(self, n_workers: Optional[int] = None,
                 mode: Optional[str] = None,
@@ -166,22 +194,23 @@ class SteeringPolicy:
             # validate BEFORE mutating any state: a hash->app swap without
             # a callable must not die mid-resteer with stats half-reset
             raise ValueError("mode='app' needs an app_fn(flow, n_workers)")
-        if n_workers is not None:
-            self.n_workers = n_workers
-        if mode is not None:
-            self.mode = mode
-        if app_fn is not None:
-            self.app_fn = app_fn
-        self._build_ring()
-        self.stats["per_worker"] = ([0] * self.n_workers)
-        self.stats["resteers"] += 1
-        moved = 0
-        old = dict(self.placements)
-        for flow, prev in old.items():
-            if self.worker_for(flow) != prev:
-                moved += 1
-        self.stats["moved"] += moved
-        return moved
+        with self.lock:
+            if n_workers is not None:
+                self.n_workers = n_workers
+            if mode is not None:
+                self.mode = mode
+            if app_fn is not None:
+                self.app_fn = app_fn
+            self._build_ring()
+            self.stats["per_worker"] = ([0] * self.n_workers)
+            self.stats["resteers"] += 1
+            moved = 0
+            old = dict(self.placements)
+            for flow, prev in old.items():
+                if self.worker_for(flow) != prev:
+                    moved += 1
+            self.stats["moved"] += moved
+            return moved
 
     def remove_worker(self, w: int) -> int:
         """Take a failed worker out of the steering set: its vnodes leave
@@ -189,12 +218,13 @@ class SteeringPolicy:
         and every tracked flow is re-evaluated — with consistent hashing
         only the dead worker's ~1/N of flows move. Idempotent; returns how
         many flows moved."""
-        if w in self.dead:
-            return 0
-        assert len(self.dead) + 1 < self.n_workers, \
-            "cannot remove the last live worker"
-        self.dead.add(w)
-        return self.resteer()
+        with self.lock:
+            if w in self.dead:
+                return 0
+            assert len(self.dead) + 1 < self.n_workers, \
+                "cannot remove the last live worker"
+            self.dead.add(w)
+            return self.resteer()
 
 
 class LibraCluster:
@@ -210,6 +240,15 @@ class LibraCluster:
                  grace_ticks: int = 5,
                  **stack_kw):
         assert n_workers >= 1, n_workers
+        # ONE coarse cluster-plane lock (see repro.core.sync): every
+        # cross-worker mutation — grant pins, grant tables, freelists of a
+        # peer pool — holds it; attached to each worker's alloc/registry so
+        # the egress completion path can find it via plane_lock()
+        self.lock = ClusterLock()
+        # the worker whose scheduling quantum is executing right now (None
+        # = control plane); maintained by ClusterRuntime via as_worker()
+        # and read by the test-time LocksetMonitor
+        self.current_worker: Optional[int] = None
         self.workers: List[LibraStack] = []
         for i in range(n_workers):
             wsecret = (None if secret is None
@@ -220,6 +259,8 @@ class LibraCluster:
             w.worker_id = i
             w.pool.pool_id = f"libra-worker-{i}"
             w.interconnect = self
+            w.alloc.lock = self.lock
+            w.registry.lock = self.lock
             self.workers.append(w)
         for w in self.workers:
             for peer in self.workers:
@@ -245,6 +286,12 @@ class LibraCluster:
     # -- placement -----------------------------------------------------------
     def __len__(self) -> int:
         return len(self.workers)
+
+    def as_worker(self, w: Optional[int]) -> "_WorkerCtx":
+        """Scope ``current_worker`` to ``w`` for one scheduling quantum —
+        the attribution the lockset instrumentation uses to tell a
+        worker-context mutation from control-plane bookkeeping."""
+        return _WorkerCtx(self, w)
 
     def _next_flow(self) -> Tuple[str, int]:
         self._flow_serial += 1
@@ -304,7 +351,16 @@ class LibraCluster:
         takes over, exactly as single-stack).
 
         Zero-copy grant by default; the counted one-copy fallback when the
-        destination pool is above its watermark (see module docstring)."""
+        destination pool is above its watermark (see module docstring).
+
+        Holds the cluster-plane lock end to end: the adoption reads the
+        owner's registry and mutates two workers' state (pin + grant
+        entry), and the caller may be ANY worker's egress quantum."""
+        with self.lock:
+            return self._grant_into_locked(dst_stack, vpi)
+
+    def _grant_into_locked(self, dst_stack: LibraStack,
+                           vpi: int) -> Optional[int]:
         owner = self.find_owner(vpi, exclude=dst_stack)
         if owner is None:
             self.stats["adopt_misses"] += 1
@@ -327,9 +383,16 @@ class LibraCluster:
             root = entry.grant
             root_worker = self._worker_by_pool.get(entry.pool_id, owner)
             root_worker.alloc.export_grant([PageRef(*pg) for pg in pages])
-            new_vpi = dst_stack.registry.import_grant(
-                root.owner_registry, root.owner_vpi, entry.pool_id, pages,
-                entry.payload_len)
+            try:
+                new_vpi = dst_stack.registry.import_grant(
+                    root.owner_registry, root.owner_vpi, entry.pool_id, pages,
+                    entry.payload_len)
+            except BaseException:
+                # a pin must never outlive a failed import — that is the
+                # PR 5 abandoned-grant leak in miniature (OWN001)
+                root_worker.alloc.release_export(
+                    [PageRef(*pg) for pg in pages])
+                raise
             dst_stack.counters.cross_worker_grants += 1
             self.stats["grants"] += 1
             self.stats["grant_pages"] += len(pages)
@@ -355,9 +418,13 @@ class LibraCluster:
         # zero-copy grant: pin the owner's pages, reference them from the
         # destination registry, forward teardown on completion (egress)
         owner.alloc.export_grant([PageRef(*pg) for pg in pages])
-        new_vpi = dst_stack.registry.import_grant(
-            owner.registry, vpi, owner.pool.pool_id, pages,
-            entry.payload_len)
+        try:
+            new_vpi = dst_stack.registry.import_grant(
+                owner.registry, vpi, owner.pool.pool_id, pages,
+                entry.payload_len)
+        except BaseException:
+            owner.alloc.release_export([PageRef(*pg) for pg in pages])
+            raise
         dst_stack.counters.cross_worker_grants += 1
         self.stats["grants"] += 1
         self.stats["grant_pages"] += len(pages)
@@ -375,15 +442,16 @@ class LibraCluster:
         grace periods have drained (the single-stack analogue: staged
         frames abandoned on closed sockets die at shutdown)."""
         reclaimed = 0
-        for w in self.workers:
-            for entry in w.registry.handoffs():
-                if entry.grant is not None:
-                    owner = self._worker_by_pool.get(entry.pool_id)
-                    if owner is not None:
-                        owner.alloc.release_export(
-                            [PageRef(*pg) for pg in entry.pages])
-                w.registry.drop(entry.vpi)
-                reclaimed += 1
+        with self.lock:
+            for w in self.workers:
+                for entry in w.registry.handoffs():
+                    if entry.grant is not None:
+                        owner = self._worker_by_pool.get(entry.pool_id)
+                        if owner is not None:
+                            owner.alloc.release_export(
+                                [PageRef(*pg) for pg in entry.pages])
+                    w.registry.drop(entry.vpi)
+                    reclaimed += 1
         self.stats["grants_reclaimed"] += reclaimed
         return reclaimed
 
@@ -406,7 +474,13 @@ class LibraCluster:
            ``dead_workers``.
 
         Ends by asserting the dead pool leaked nothing: every page free,
-        zero outstanding grant pins. Returns a small accounting dict."""
+        zero outstanding grant pins. Returns a small accounting dict.
+        Holds the cluster-plane lock end to end — the sweep walks and
+        mutates every survivor's grant table and the dying pool."""
+        with self.lock:
+            return self._kill_worker_locked(w)
+
+    def _kill_worker_locked(self, w: int) -> Dict[str, int]:
         assert 0 <= w < len(self.workers), w
         assert w not in self.dead_workers, f"worker {w} already dead"
         dead = self.workers[w]
@@ -579,7 +653,8 @@ class ClusterRuntime:
         if not self.work_stealing:
             for i, rt in enumerate(self.runtimes):
                 if i not in dead:
-                    progressed += rt.step()
+                    with self.cluster.as_worker(i):
+                        progressed += rt.step()
             self.rounds += 1
             if self.fault_plan is not None:
                 self.fault_plan.on_cluster_step(self)
@@ -602,13 +677,18 @@ class ClusterRuntime:
             for ch in take:
                 stolen.add(ch)
                 self.stats["stolen_quanta"] += 1
-                progressed += bool(ch.service())
+                # the THIEF executes the quantum: the stolen channel's
+                # state (the donor's pool/registry) is touched from worker
+                # i's context — exactly what the lockset gate watches
+                with self.cluster.as_worker(i):
+                    progressed += bool(ch.service())
         for i, (rt, rdy) in enumerate(zip(self.runtimes, readys)):
             if i in dead:
                 continue
-            progressed += rt.step(
-                skip=stolen if stolen else None,
-                ready=[c for c in rdy if c not in stolen])
+            with self.cluster.as_worker(i):
+                progressed += rt.step(
+                    skip=stolen if stolen else None,
+                    ready=[c for c in rdy if c not in stolen])
         self.rounds += 1
         if self.fault_plan is not None:
             self.fault_plan.on_cluster_step(self)
@@ -643,21 +723,36 @@ class ClusterRuntime:
         rt = self.runtimes[w]
         dead_stack = cluster.workers[w]
         guard = drain_rounds
-        while guard > 0 and rt.step() > 0:
-            guard -= 1
+        with cluster.as_worker(w):
+            while guard > 0 and rt.step() > 0:
+                guard -= 1
         for i, rt2 in enumerate(self.runtimes):
             if i == w or i in cluster.dead_workers:
                 continue
             for ch in rt2.channels:
                 guard = drain_rounds
-                while ch._inflight is not None \
-                        and ch._inflight.stack is dead_stack and guard > 0:
-                    ch.service()
-                    guard -= 1
+                with cluster.as_worker(i):
+                    while ch._inflight is not None \
+                            and ch._inflight.stack is dead_stack \
+                            and guard > 0:
+                        ch.service()
+                        guard -= 1
         # steering loses the worker now so migration targets are live
         # (idempotent — LibraCluster.kill_worker's call becomes a no-op)
         cluster.steering.remove_worker(w)
         migrated = 0
+        # migration rebinds channels onto survivor workers (fresh sockets,
+        # kTLS session moves, runtime re-registration): survivor state
+        # mutated from the control plane — hold the plane lock throughout
+        with cluster.lock:
+            migrated = self._migrate_channels_locked(rt, w, cluster)
+        info = cluster.kill_worker(w)
+        info["flows_migrated"] = migrated
+        return info
+
+    def _migrate_channels_locked(self, rt, w: int, cluster) -> int:
+        migrated = 0
+        dead_stack = cluster.workers[w]
         for ch in list(rt.channels):
             # stragglers: a held message's anchor dies with this worker —
             # a counted timeout-drop, pages freed via the stack teardown
@@ -695,9 +790,7 @@ class ClusterRuntime:
             self.runtimes[tw].register(ch)
             migrated += 1
             cluster.stats["migrated_flows"] += 1
-        info = cluster.kill_worker(w)
-        info["flows_migrated"] = migrated
-        return info
+        return migrated
 
     def run(self, max_rounds: int = 10 ** 6) -> int:
         """Interleaved cluster loop until no worker has ready work."""
@@ -719,9 +812,10 @@ class ClusterRuntime:
         import time
 
         times: List[float] = []
-        for rt in self.runtimes:
+        for i, rt in enumerate(self.runtimes):
             t0 = time.perf_counter()
-            rt.run(max_rounds)
+            with self.cluster.as_worker(i):
+                rt.run(max_rounds)
             times.append(time.perf_counter() - t0)
         return self.messages_forwarded(), times
 

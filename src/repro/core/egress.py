@@ -44,6 +44,7 @@ from repro.core.crypto import REC_HEADER, record_header
 from repro.core.ingress import reset_rx_from_tx
 from repro.core.state_machine import St
 from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.sync import plane_lock
 from repro.core.vpi import VpiRegistry
 
 
@@ -139,43 +140,52 @@ def libra_send(
             # §A.2 two-phase ownership transfer through the staging list;
             # the payload compose sits INSIDE the stage->commit window so a
             # failure aborts the transfer (restoring the §A.3 budget raise)
-            # instead of leaving it elevated forever
-            staged = data_pool.alloc.stage_transfer(owned)
-            try:
-                if crypto is not None:
-                    seq = int(meta[1])
-                    imeta = len(meta) - REC_HEADER
-                    meta = crypto.seal_meta(meta)
-                # zero-copy "transmission": the NIC consumes anchored pages
-                # in place; the composed frame stays staged across partial
-                # sends. A one-copy cross-worker entry already carries its
-                # payload (entry.stash) — the pool is never consulted.
-                raw = (np.asarray(entry.stash, np.int64)
-                       if entry.stash is not None else None)
-                if payload_prefetched is not None:
-                    payload = payload_prefetched
-                elif crypto is None:
-                    payload = raw if raw is not None else \
-                        data_pool.read_payload(owned, entry.payload_len)
-                elif crypto.mode == "hw":
-                    # hw-kTLS: the TX cipher rides the gather — the NIC
-                    # encrypts inline while consuming the anchored pages
-                    ks = crypto.tx_payload_keystream(
-                        seq, imeta, entry.payload_len)
-                    payload = (np.bitwise_xor(raw, ks) if raw is not None
-                               else data_pool.read_payload(
-                                   owned, entry.payload_len, keystream=ks))
-                else:
-                    # sw-kTLS: encrypt-and-copy re-touches the gathered
-                    # payload in a separate pass (§B.1)
-                    payload = raw if raw is not None else \
-                        data_pool.read_payload(owned, entry.payload_len)
-                    payload = crypto.sw_encrypt_payload(seq, imeta, payload)
-                    counters.crypto_copied += entry.payload_len
-            except BaseException:
-                data_pool.alloc.abort_transfer(staged)
-                raise
-            owned = data_pool.alloc.commit_transfer(staged)
+            # instead of leaving it elevated forever. For a cross-worker
+            # grant entry, data_pool is the OWNING worker's pool and this
+            # code may run from the destination worker's quantum — the
+            # whole stage->commit window holds the cluster-plane lock
+            # (a no-op single-stack; see repro.core.sync).
+            with plane_lock(data_pool.alloc):
+                staged = data_pool.alloc.stage_transfer(owned)
+                try:
+                    if crypto is not None:
+                        seq = int(meta[1])
+                        imeta = len(meta) - REC_HEADER
+                        meta = crypto.seal_meta(meta)
+                    # zero-copy "transmission": the NIC consumes anchored
+                    # pages in place; the composed frame stays staged
+                    # across partial sends. A one-copy cross-worker entry
+                    # already carries its payload (entry.stash) — the pool
+                    # is never consulted.
+                    raw = (np.asarray(entry.stash, np.int64)
+                           if entry.stash is not None else None)
+                    if payload_prefetched is not None:
+                        payload = payload_prefetched
+                    elif crypto is None:
+                        payload = raw if raw is not None else \
+                            data_pool.read_payload(owned, entry.payload_len)
+                    elif crypto.mode == "hw":
+                        # hw-kTLS: the TX cipher rides the gather — the NIC
+                        # encrypts inline while consuming the anchored pages
+                        ks = crypto.tx_payload_keystream(
+                            seq, imeta, entry.payload_len)
+                        payload = (np.bitwise_xor(raw, ks)
+                                   if raw is not None
+                                   else data_pool.read_payload(
+                                       owned, entry.payload_len,
+                                       keystream=ks))
+                    else:
+                        # sw-kTLS: encrypt-and-copy re-touches the gathered
+                        # payload in a separate pass (§B.1)
+                        payload = raw if raw is not None else \
+                            data_pool.read_payload(owned, entry.payload_len)
+                        payload = crypto.sw_encrypt_payload(seq, imeta,
+                                                            payload)
+                        counters.crypto_copied += entry.payload_len
+                except BaseException:
+                    data_pool.alloc.abort_transfer(staged)
+                    raise
+                owned = data_pool.alloc.commit_transfer(staged)
             # data plane: selective copy of the new metadata only (counted
             # after the commit so an aborted compose, retried later, does
             # not double-charge the copy telemetry)
@@ -191,22 +201,27 @@ def libra_send(
     if sm.post_send(n):
         # cross-datapath cleanup: VPI entry out of the global map, pages
         # refcount-released, RX machine of the source connection reset.
+        # A cross-worker completion mutates BOTH the destination registry
+        # and the owner's registry/pool, possibly from the source worker's
+        # quantum — the whole cleanup holds the cluster-plane lock.
         grant = entry.grant if entry is not None else None
-        if owned is not None and registry.release(decision.vpi):
-            if grant is not None:
-                # drop the grant's pin ref on the owning worker's pool, then
-                # forward the completion to the owner: a still-live owner
-                # entry gets the exact single-stack cleanup (entry released,
-                # original page ref dropped); an owner already in — or past —
-                # its §A.4 grace period keeps its deferred-free schedule
-                # (the expiry drops the original ref, we only dropped ours)
-                data_pool.alloc.release_export(owned)
-                oreg, ovpi = grant.owner_registry, grant.owner_vpi
-                if oreg.peek(ovpi) is not None and oreg.release(ovpi):
+        with plane_lock(registry):
+            if owned is not None and registry.release(decision.vpi):
+                if grant is not None:
+                    # drop the grant's pin ref on the owning worker's pool,
+                    # then forward the completion to the owner: a
+                    # still-live owner entry gets the exact single-stack
+                    # cleanup (entry released, original page ref dropped);
+                    # an owner already in — or past — its §A.4 grace
+                    # period keeps its deferred-free schedule (the expiry
+                    # drops the original ref, we only dropped ours)
+                    data_pool.alloc.release_export(owned)
+                    oreg, ovpi = grant.owner_registry, grant.owner_vpi
+                    if oreg.peek(ovpi) is not None and oreg.release(ovpi):
+                        data_pool.alloc.free_pages_list(owned)
+                    src_conn.anchored.pop(ovpi, None)
+                else:
                     data_pool.alloc.free_pages_list(owned)
-                src_conn.anchored.pop(ovpi, None)
-            else:
-                data_pool.alloc.free_pages_list(owned)
         src_conn.anchored.pop(decision.vpi, None)
         reset_rx_from_tx(src_conn)
     return n

@@ -209,40 +209,49 @@ def libra_recv(
             if conn.rx_drain_remaining == 0:
                 sm.reset()
             return out, len(out)
-        if seq is None:
-            pool.write_payload(pages, payload)
-        elif crypto.mode == "sw":
-            # sw-kTLS: decrypt-and-copy into a fresh buffer, THEN anchor —
-            # the separate pass the paper's §B.1 software path cannot
-            # avoid. The verify already produced the plaintext buffer; it
-            # IS that pass (counted as such) — never run the cipher twice.
-            if verified_plain is not None:
-                plain = verified_plain
-                crypto.stats["sw_decrypt_passes"] += 1
+        try:
+            if seq is None:
+                pool.write_payload(pages, payload)
+            elif crypto.mode == "sw":
+                # sw-kTLS: decrypt-and-copy into a fresh buffer, THEN
+                # anchor — the separate pass the paper's §B.1 software path
+                # cannot avoid. The verify already produced the plaintext
+                # buffer; it IS that pass (counted as such) — never run the
+                # cipher twice.
+                if verified_plain is not None:
+                    plain = verified_plain
+                    crypto.stats["sw_decrypt_passes"] += 1
+                else:
+                    plain = crypto.sw_decrypt_payload(seq, imeta, payload)
+                counters.crypto_copied += payload_len
+                pool.write_payload(pages, plain)
+            elif verified_plain is not None:
+                # hw-kTLS: the NIC verified and decrypted in the same
+                # pass — anchor the plaintext the verify produced (one
+                # cipher pass total; the keystream-fused scatter below
+                # serves the rare unverified continuation case)
+                pool.write_payload(pages, verified_plain)
             else:
-                plain = crypto.sw_decrypt_payload(seq, imeta, payload)
-            counters.crypto_copied += payload_len
-            pool.write_payload(pages, plain)
-        elif verified_plain is not None:
-            # hw-kTLS: the NIC verified and decrypted in the same pass —
-            # anchor the plaintext the verify produced (one cipher pass
-            # total; the keystream-fused scatter below serves the rare
-            # unverified continuation case)
-            pool.write_payload(pages, verified_plain)
-        else:
-            # hw-kTLS: the cipher rides the anchoring scatter itself — the
-            # ciphertext is decrypted exactly once, on the fly
-            pool.write_payload(
-                pages, payload,
-                keystream=crypto.rx_payload_keystream(seq, imeta, payload_len))
-        counters.anchored += payload_len
-        counters.allocs += 1
-        conn.rx_advance(payload_len)
-        vpi = registry.register(
-            pool.pool_id,
-            [(p.shard, p.local_pid, p.base_pos) for p in pages],
-            payload_len,
-        )
+                # hw-kTLS: the cipher rides the anchoring scatter itself —
+                # the ciphertext is decrypted exactly once, on the fly
+                pool.write_payload(
+                    pages, payload,
+                    keystream=crypto.rx_payload_keystream(
+                        seq, imeta, payload_len))
+            counters.anchored += payload_len
+            counters.allocs += 1
+            conn.rx_advance(payload_len)
+            vpi = registry.register(
+                pool.pool_id,
+                [(p.shard, p.local_pid, p.base_pos) for p in pages],
+                payload_len,
+            )
+        except BaseException:
+            # the pages are ours until the registry owns them: a datapath
+            # fault between alloc and register hands them straight back to
+            # the freelist instead of leaking them (OWN001)
+            pool.alloc.free_pages_list(pages)
+            raise
         conn.anchored[vpi] = (pages, payload_len)
         out = np.concatenate([meta, np.array([VpiRegistry.to_token(vpi)], np.int64)])
         counters.vpi_injected += 1

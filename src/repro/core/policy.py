@@ -62,6 +62,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.sync import ClusterLock
+
 #: action kinds (dense ``act_kind`` encoding, stable across compile/decode)
 ACT_FORWARD, ACT_REWRITE, ACT_RATE_LIMIT, ACT_DROP, ACT_PUNT = range(5)
 
@@ -110,6 +112,10 @@ class HealthTable:
         self.probe_at = np.full(n_backends, -1, np.int64)
         self.stats = {"trips": 0, "recoveries": 0, "probes": 0,
                       "failures": 0, "successes": 0}
+        # one HealthTable is shared by every worker's PolicyTable clone
+        # (PolicyTable.clone keeps the health reference): self-locking,
+        # per the repro.core.sync discipline
+        self.lock = ClusterLock("health")
 
     def _in_range(self, k: int) -> bool:
         return 0 <= k < self.n_backends
@@ -127,41 +133,46 @@ class HealthTable:
         immediately; HEALTHY trips at ``fail_threshold`` consecutive."""
         if not self._in_range(k):
             return
-        self.stats["failures"] += 1
-        self.fails[k] += 1
-        st = int(self.state[k])
-        if st == UNHEALTHY:
-            return
-        if st == HALF_OPEN or self.fails[k] >= self.fail_threshold:
-            self.state[k] = UNHEALTHY
-            self.probe_at[k] = now + self.probe_after
-            self.stats["trips"] += 1
+        with self.lock:
+            self.stats["failures"] += 1
+            self.fails[k] += 1
+            st = int(self.state[k])
+            if st == UNHEALTHY:
+                return
+            if st == HALF_OPEN or self.fails[k] >= self.fail_threshold:
+                self.state[k] = UNHEALTHY
+                self.probe_at[k] = now + self.probe_after
+                self.stats["trips"] += 1
 
     def note_success(self, k: int) -> None:
         """One completed send to ``k`` — closes the circuit."""
         if not self._in_range(k):
             return
-        self.stats["successes"] += 1
-        self.fails[k] = 0
-        if int(self.state[k]) != HEALTHY:
-            self.state[k] = HEALTHY
-            self.probe_at[k] = -1
-            self.stats["recoveries"] += 1
+        with self.lock:
+            self.stats["successes"] += 1
+            self.fails[k] = 0
+            if int(self.state[k]) != HEALTHY:
+                self.state[k] = HEALTHY
+                self.probe_at[k] = -1
+                self.stats["recoveries"] += 1
 
     def tick(self, now: int) -> None:
         """Advance probe deadlines: UNHEALTHY backends whose deadline
         passed go HALF_OPEN (one probe's worth of traffic re-admitted)."""
-        due = (self.state == UNHEALTHY) & (self.probe_at >= 0) \
-            & (self.probe_at <= now)
-        n = int(due.sum())
-        if n:
-            self.state[due] = HALF_OPEN
-            self.probe_at[due] = -1
-            self.stats["probes"] += n
+        with self.lock:
+            due = (self.state == UNHEALTHY) & (self.probe_at >= 0) \
+                & (self.probe_at <= now)
+            n = int(due.sum())
+            if n:
+                self.state[due] = HALF_OPEN
+                self.probe_at[due] = -1
+                self.stats["probes"] += n
 
     def mark_down(self, k: int, now: int = 0) -> None:
         """Administratively trip ``k`` (fault injection / known-dead)."""
-        if self._in_range(k):
+        if not self._in_range(k):
+            return
+        with self.lock:
             self.state[k] = UNHEALTHY
             self.fails[k] = max(int(self.fails[k]), self.fail_threshold)
             self.probe_at[k] = now + self.probe_after

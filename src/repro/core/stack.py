@@ -35,6 +35,7 @@ from repro.core.parser import BUILTIN_PARSERS, LengthPrefixedParser, ParserPolic
 from repro.core.socket import Events, LibraSocket
 from repro.core.state_machine import MIN_PAYLOAD, St
 from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.sync import plane_lock
 from repro.core.vpi import VpiRegistry
 
 ParserLike = Union[str, ParserPolicy]
@@ -292,6 +293,20 @@ class LibraStack:
         # downstream byte — matches the scalar schedule exactly)
         page_lists = self.alloc.alloc_batch(
             [parsed.payload_len for _, parsed, _ in cands])
+        # every page list the round still owns, keyed by identity: entries
+        # leave as they are freed in-band (reject/overflow) or handed off to
+        # the registry; a fault anywhere below hands the rest back (OWN001)
+        round_owned = {id(pl): pl for pl in page_lists if pl is not None}
+        try:
+            return self._recv_batch_round(cands, page_lists, round_owned,
+                                          policy, impl)
+        except BaseException:
+            if round_owned:
+                self.alloc.free_batch(list(round_owned.values()))
+            raise
+
+    def _recv_batch_round(self, cands, page_lists, round_owned,
+                          policy, impl) -> Dict[int, Tuple[np.ndarray, int]]:
         items: List[_BatchItem] = []
         leaked: List[List[PageRef]] = []
         for (sock, parsed, bl), pages in zip(cands, page_lists):
@@ -314,6 +329,8 @@ class LibraStack:
                                     sm.payload_len, pages))
         if leaked:
             self.alloc.free_batch(leaked)
+            for pl in leaked:
+                round_owned.pop(id(pl), None)
         if not items:
             return {}
 
@@ -368,6 +385,7 @@ class LibraStack:
                         np.concatenate([it.meta[REC_HEADER:], it.plain])):
                     self.counters.meta_copied -= it.meta_len
                     self.alloc.free_batch([it.pages])
+                    round_owned.pop(id(it.pages), None)
                     it.sock.connection.rx_advance(it.payload_len)
                     it.sock.connection.rx_machine.reset()
                     it.sock._auth_rejected = True
@@ -417,6 +435,7 @@ class LibraStack:
                 [(p.shard, p.local_pid, p.base_pos) for p in it.pages],
                 it.payload_len,
             )
+            round_owned.pop(id(it.pages), None)
             conn.anchored[vpi] = (it.pages, it.payload_len)
             buf = np.concatenate(
                 [it.meta, np.array([VpiRegistry.to_token(vpi)], np.int64)])
@@ -494,10 +513,12 @@ class LibraStack:
             pages = [PageRef(*pg) for pg in entry.pages]
             if entry.grant is not None:
                 # cross-worker grant: release our entry and the pin on the
-                # owner's pages
+                # owner's pages — a peer pool's grant state, so the drop
+                # holds the cluster-plane lock (no-op single-stack)
                 owner_alloc = self.pool_for_entry(entry).alloc
-                if self.registry.release(vpi):
-                    owner_alloc.release_export(pages)
+                with plane_lock(owner_alloc):
+                    if self.registry.release(vpi):
+                        owner_alloc.release_export(pages)
                 return True
             owner = self._anchor_owner(vpi)
             if self.registry.release(vpi):

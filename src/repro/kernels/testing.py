@@ -7,13 +7,17 @@ hot path performs no pool-sized copy).
 """
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-#: primitives that would betray a pool-sized copy on the hot path
-POOL_COPY_PRIMS = ("concatenate", "pad")
+# single source of truth for the zero-copy trace invariants lives in the
+# analysis suite; re-exported here for the existing test/gate imports
+from repro.analysis.jaxpr_audit import (  # noqa: F401
+    POOL_COPY_PRIMS,
+    jaxpr_primitives,
+)
 
 
 def selcopy_case(rng: np.random.Generator, b: int = 2, page: int = 8,
@@ -113,18 +117,3 @@ def policy_live_column(rng: np.random.Generator, r: int) -> jnp.ndarray:
     return jnp.array(live)
 
 
-def jaxpr_primitives(jaxpr) -> List[str]:
-    """All primitive names in a jaxpr, recursing through call/closed-call
-    params (pjit bodies etc.)."""
-    acc: List[str] = []
-
-    def walk(j):
-        for eqn in j.eqns:
-            acc.append(eqn.primitive.name)
-            for v in eqn.params.values():
-                inner = getattr(v, "jaxpr", None)
-                if inner is not None:
-                    walk(inner if hasattr(inner, "eqns") else inner.jaxpr)
-
-    walk(jaxpr)
-    return acc

@@ -1,0 +1,484 @@
+"""Datapath verifier (repro.analysis): per-rule positive/negative fixtures
+for the ownership lint, jaxpr audit, and lockset checker; the waiver
+machinery; the runtime lockset monitor against real cluster runs; and
+regression tests for the fault-path leaks the ownership lint caught in
+core/ (each reproduced by monkeypatched faults, asserting the pool and
+grant pins are restored)."""
+import numpy as np
+import pytest
+
+from repro.analysis import importgraph, jaxpr_audit, lockset, ownership
+from repro.analysis.common import Finding, build_report
+from repro.analysis.ownership import OWNERSHIP_RULES, lint_source
+from repro.core import (
+    ClusterRuntime,
+    LibraCluster,
+    LibraStack,
+    build_message,
+)
+
+RNG = np.random.default_rng(7)
+
+STACK_KW = dict(n_shards=4, pages_per_shard=128, page_size=16)
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+def _report(source):
+    return build_report("ownership", lint_source(source, "fix.py"),
+                        {"fix.py": source}, rules=OWNERSHIP_RULES)
+
+
+# ---------------------------------------------------------------------------
+# ownership lint: rule fixtures
+# ---------------------------------------------------------------------------
+
+def test_own001_risky_call_between_acquire_and_handoff():
+    src = '''
+def f(pool, payload):
+    pages = pool.alloc.alloc_page(4)
+    pool.write_payload(pages, payload)
+    return registry.register(pages)
+'''
+    assert _rules(lint_source(src, "fix.py")) == ["OWN001"]
+
+
+def test_own001_raise_while_holding():
+    src = '''
+def f(pool, cond):
+    pages = pool.alloc.alloc_page(4)
+    if cond:
+        raise RuntimeError("x")
+    pool.alloc.free_pages_list(pages)
+'''
+    assert _rules(lint_source(src, "fix.py")) == ["OWN001"]
+
+
+def test_own001_emptiness_guard_exempts_raise():
+    # `if not pages: raise` proves nothing is held on the raising path
+    src = '''
+def f(pool):
+    pages = pool.alloc.alloc_page(4)
+    if not pages:
+        raise RuntimeError("x")
+    pool.alloc.free_pages_list(pages)
+'''
+    assert lint_source(src, "fix.py") == []
+
+
+def test_own001_clean_with_try_finally():
+    src = '''
+def f(pool, payload):
+    pages = pool.alloc.alloc_page(4)
+    try:
+        pool.write_payload(pages, payload)
+    finally:
+        pool.alloc.free_pages_list(pages)
+'''
+    assert lint_source(src, "fix.py") == []
+
+
+def test_own001_clean_with_except_cleanup_then_handoff():
+    src = '''
+def f(pool, registry, payload):
+    pages = pool.alloc.alloc_page(4)
+    try:
+        pool.write_payload(pages, payload)
+        vpi = registry.register(pool.pool_id, pages, 4)
+    except BaseException:
+        pool.alloc.free_pages_list(pages)
+        raise
+    return vpi
+'''
+    assert lint_source(src, "fix.py") == []
+
+
+def test_own002_discarded_acquire():
+    src = '''
+def f(pool):
+    pool.alloc.alloc_page(4)
+'''
+    assert _rules(lint_source(src, "fix.py")) == ["OWN002"]
+
+
+def test_own003_early_return_while_holding():
+    src = '''
+def f(pool, cond):
+    pages = pool.alloc.alloc_page(4)
+    if cond:
+        return None
+    pool.alloc.free_pages_list(pages)
+'''
+    assert _rules(lint_source(src, "fix.py")) == ["OWN003"]
+
+
+def test_own004_rebind_without_release():
+    src = '''
+def f(pool):
+    pages = pool.alloc.alloc_page(4)
+    try:
+        pages = pool.alloc.alloc_page(8)
+    finally:
+        pool.alloc.free_pages_list(pages)
+'''
+    assert _rules(lint_source(src, "fix.py")) == ["OWN004"]
+
+
+def test_handoff_to_registry_is_a_release():
+    src = '''
+def f(pool, registry):
+    pages = pool.alloc.alloc_page(4)
+    return registry.register(pool.pool_id, pages, 4)
+'''
+    assert lint_source(src, "fix.py") == []
+
+
+def test_bare_pin_released_via_reconstructed_refs():
+    # export_grant() binds no name; release_export on reconstructed
+    # PageRefs is the only possible release and must satisfy the lint
+    src = '''
+def f(owner, pages, dst, vpi):
+    owner.alloc.export_grant([PageRef(*p) for p in pages])
+    try:
+        return dst.registry.import_grant(owner.registry, vpi, 1, pages, 4)
+    except BaseException:
+        owner.alloc.release_export([PageRef(*p) for p in pages])
+        raise
+'''
+    assert lint_source(src, "fix.py") == []
+
+
+# ---------------------------------------------------------------------------
+# waiver machinery
+# ---------------------------------------------------------------------------
+
+WAIVED_SRC = '''
+def f(pool, payload):
+    pages = pool.alloc.alloc_page(4)
+    pool.write_payload(pages, payload)  # libra: waive[OWN001] freed by caller
+    return registry.register(pages)
+'''
+
+
+def test_waiver_with_reason_moves_finding_to_waived():
+    rep = _report(WAIVED_SRC)
+    assert rep.ok
+    assert _rules(rep.waived) == ["OWN001"]
+    assert rep.waived[0].waiver_reason == "freed by caller"
+
+
+def test_waiver_without_reason_is_its_own_finding():
+    rep = _report(WAIVED_SRC.replace(" freed by caller", ""))
+    assert _rules(rep.active) == ["WAIVER001"]
+
+
+def test_stale_waiver_is_flagged():
+    src = '''
+def f(pool):
+    pages = pool.alloc.alloc_page(4)  # libra: waive[OWN001] nothing raises
+    pool.alloc.free_pages_list(pages)
+'''
+    rep = _report(src)
+    assert _rules(rep.active) == ["WAIVER002"]
+
+
+# ---------------------------------------------------------------------------
+# jaxpr audit fixtures
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_smuggled_concatenate_is_flagged():
+    import jax.numpy as jnp
+
+    def smuggled(a, b):
+        return jnp.concatenate([a, b])
+
+    x = jnp.zeros((4,), jnp.int32)
+    findings = jaxpr_audit.audit_fn(smuggled, (x, x), name="smuggled",
+                                    n_pallas=0)
+    assert "JAX002" in _rules(findings)
+
+
+def test_jaxpr_pallas_count_regression_is_flagged():
+    import jax.numpy as jnp
+
+    def plain(a):
+        return a + 1
+
+    findings = jaxpr_audit.audit_fn(plain, (jnp.zeros((4,), jnp.int32),),
+                                    name="plain", n_pallas=1)
+    assert "JAX001" in _rules(findings)
+
+
+def test_jaxpr_boundary_budget_mismatch_is_flagged():
+    import jax.numpy as jnp
+
+    def plain(a):
+        return a * 2
+
+    x = jnp.zeros((8,), jnp.int32)
+    ok = jaxpr_audit.audit_fn(plain, (x,), name="b", n_pallas=0,
+                              declared_boundary=16)
+    bad = jaxpr_audit.audit_fn(plain, (x,), name="b", n_pallas=0,
+                               declared_boundary=17)
+    assert ok == []
+    assert _rules(bad) == ["JAX004"]
+
+
+def test_jaxpr_clean_fn_passes():
+    import jax.numpy as jnp
+
+    def clean(a):
+        return a + 1
+
+    assert jaxpr_audit.audit_fn(clean, (jnp.zeros((4,), jnp.int32),),
+                                name="clean", n_pallas=0) == []
+
+
+# ---------------------------------------------------------------------------
+# lockset checker: synthetic fixtures
+# ---------------------------------------------------------------------------
+
+SYNTH_CLUSTER = '''
+class SteeringPolicy:
+    def __init__(self):
+        self.placements = {}
+    def worker_for(self, key):
+        self.placements[key] = 0
+        return 0
+
+class LibraCluster:
+    def __init__(self):
+        self.workers = []
+
+    def bad_grant(self, dst_stack, vpi):
+        dst_stack.registry.import_grant(None, vpi, 0, [], 0)
+
+    def good_grant(self, dst_stack, vpi):
+        with self.lock:
+            return self._good_locked(dst_stack, vpi)
+
+    def _good_locked(self, dst_stack, vpi):
+        return dst_stack.registry.import_grant(None, vpi, 0, [], 0)
+
+    def bad_caller(self, dst_stack, vpi):
+        return self._good_locked(dst_stack, vpi)
+'''
+
+
+@pytest.fixture
+def synth_root(tmp_path):
+    core = tmp_path / "src" / "repro" / "core"
+    core.mkdir(parents=True)
+    (core / "cluster.py").write_text(SYNTH_CLUSTER)
+    (core / "egress.py").write_text("")
+    (core / "stack.py").write_text("")
+    (core / "anchor_pool.py").write_text("class AnchorPool:\n    pass\n")
+    (core / "vpi.py").write_text("class VpiRegistry:\n    pass\n")
+    (core / "policy.py").write_text(
+        "class HealthTable:\n"
+        "    def __init__(self):\n"
+        "        self.state = {}\n")
+    return tmp_path
+
+
+def test_lock001_unlocked_peer_mutation_and_unlocked_locked_call(synth_root):
+    sites, findings = lockset.derive_sites(synth_root)
+    # both the locked and unlocked grant sites are in the manifest...
+    assert {(s["func"], s["path"]) for s in sites} == {
+        ("LibraCluster.bad_grant", "dst_stack.registry.import_grant"),
+        ("LibraCluster._good_locked", "dst_stack.registry.import_grant"),
+    }
+    # ...but only the unlocked one, plus the unlocked *_locked call, fail
+    assert sorted((f.rule, f.message.split(":")[0]) for f in findings) == [
+        ("LOCK001", "LibraCluster.bad_caller"),
+        ("LOCK001", "LibraCluster.bad_grant"),
+    ]
+
+
+def test_lock003_missing_lock_plumbing(synth_root):
+    msgs = [f.message for f in lockset.check_plumbing(synth_root)]
+    assert any("SteeringPolicy.__init__" in m for m in msgs)
+    assert any("HealthTable.__init__" in m for m in msgs)
+    assert any("worker's alloc" in m for m in msgs)
+    assert any("worker's registry" in m for m in msgs)
+
+
+def test_lock002_manifest_drift():
+    derived = {"classes": {"AnchorPool": ["_free", "stats"]},
+               "sites": [{"file": "a.py", "func": "f", "path": "p.q",
+                          "kind": "call"}]}
+    committed = {"classes": {"AnchorPool": ["_free"]}, "sites": []}
+    findings = lockset.compare_manifest(derived, committed)
+    assert _rules(findings) == ["LOCK002", "LOCK002"]
+    assert "stats" in findings[0].message
+    assert lockset.compare_manifest(derived, derived) == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree passes all three gates
+# ---------------------------------------------------------------------------
+
+def test_real_tree_ownership_clean():
+    rep = ownership.run()
+    assert rep.ok, "\n".join(rep.lines())
+
+
+def test_real_tree_lockset_clean_and_manifest_current():
+    rep = lockset.run()
+    assert rep.ok, "\n".join(rep.lines())
+
+
+def test_import_graph_reaches_core():
+    dead = importgraph.unreachable()
+    assert "repro.core.stack" not in dead
+    assert "repro.core.cluster" not in dead
+    assert "repro.analysis.lockset" not in dead  # this test imports it
+
+
+def test_cli_runs_selected_pass():
+    from repro.analysis.__main__ import main
+    assert main(["--pass", "ownership"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# runtime lockset monitor
+# ---------------------------------------------------------------------------
+
+def _cluster(n_workers=2):
+    return LibraCluster(n_workers, secret=b"an", **STACK_KW)
+
+
+def _frames(n_chans, n_msgs=4, seed=11):
+    rng = np.random.default_rng(seed)
+    return [[build_message(rng.integers(100, 200, 4),
+                           rng.integers(1000, 2000, 40))
+             for _ in range(n_msgs)]
+            for _ in range(n_chans)]
+
+
+def test_monitor_clean_on_locked_cross_worker_grants():
+    """Cross-worker flows (grants, owner-pool egress) with stealing off:
+    every cross-worker mutation runs under the plane lock, so the monitor
+    sees shared objects but zero violations."""
+    cl = _cluster(2)
+    crt = ClusterRuntime(cl, work_stealing=False)
+    for i, chan in enumerate(_frames(8)):
+        sw = i % 2
+        dw = (sw + 1) % 2 if i < 4 else sw
+        src, dst = cl.socket(worker=sw), cl.socket(worker=dw)
+        crt.channel(src, dst)
+        for f in chan:
+            src.deliver(f)
+    with lockset.LocksetMonitor(cl) as mon:
+        crt.run()
+    assert mon.violations == [], mon.format()
+    # the grant protocol really did touch both registries from both sides
+    assert "worker0.registry" in mon.shared_objects() \
+        or "worker1.registry" in mon.shared_objects()
+    crt.shutdown()
+    assert cl.pages_in_use == 0
+
+
+def test_monitor_flags_work_stealing_as_unsynchronized():
+    """All flows pinned to worker 0 with stealing on: worker 1's scheduler
+    quantum runs worker 0's channels, mutating worker 0's allocator and
+    registry from the thief's context without the plane lock — exactly the
+    hazard the threaded-executor readiness gate must catch."""
+    cl = _cluster(2)
+    crt = ClusterRuntime(cl, work_stealing=True)
+    for chan in _frames(8):
+        src, dst = cl.socket(worker=0), cl.socket(worker=0)
+        crt.channel(src, dst)
+        for f in chan:
+            src.deliver(f)
+    with lockset.LocksetMonitor(cl) as mon:
+        crt.run()
+    assert mon.violations, "stealing should trip the lockset monitor"
+    assert all(f.rule == "LOCK004" for f in mon.violations)
+    assert any("worker 1's context" in f.message for f in mon.violations)
+    crt.shutdown()
+
+
+def test_monitor_uninstalls_cleanly():
+    cl = _cluster(2)
+    with lockset.LocksetMonitor(cl):
+        assert "alloc_page" in vars(cl.workers[0].alloc)
+    for w in cl.workers:
+        assert "alloc_page" not in vars(w.alloc)
+        assert "register" not in vars(w.registry)
+
+
+# ---------------------------------------------------------------------------
+# regression: the fault-path leaks the ownership lint caught in core/
+# ---------------------------------------------------------------------------
+
+def _stack():
+    return LibraStack(secret=b"an", **STACK_KW)
+
+
+def test_ingress_write_payload_fault_returns_pages_to_pool(monkeypatch):
+    """ingress WRITE_VPI: a fault while anchoring (between alloc and
+    registry handoff) must hand the pages back, not leak them."""
+    stack = _stack()
+    src = stack.socket()
+    src.deliver(build_message(RNG.integers(100, 200, 4),
+                              RNG.integers(1000, 2000, 40)))
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected anchoring fault")
+
+    monkeypatch.setattr(stack.pool, "write_payload", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        src.recv(1 << 20)
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    assert len(stack.registry) == 0
+
+
+def test_recv_batch_crypto_fault_frees_whole_round(monkeypatch):
+    """stack recv_batch: a fault mid-round (vectorized keystream sweep)
+    must free every page list the round still owns."""
+    stack = _stack()
+    socks = []
+    for _ in range(3):
+        s = stack.socket("length-prefixed", tls="hw")
+        frame = build_message(RNG.integers(100, 200, 4),
+                              RNG.integers(1000, 2000, 40))
+        s.deliver(s.tls.seal(frame, s.parser.inner))
+        socks.append(s)
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected crypto fault")
+
+    monkeypatch.setattr("repro.core.stack.keystream_batch", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        stack.recv_batch(socks, 1 << 20)
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_grant_into_import_fault_releases_export_pin(monkeypatch):
+    """cluster grant_into: a fault in the destination's import_grant must
+    release the owner-side export pin, or the owner's pages stay pinned
+    forever (no grantee exists to ever complete)."""
+    cl = _cluster(2)
+    w0, w1 = cl.workers
+    src = cl.socket(worker=0)
+    src.deliver(build_message(RNG.integers(100, 200, 4),
+                              RNG.integers(1000, 2000, 40)))
+    src.recv(1 << 20)
+    vpi = next(iter(src.connection.anchored))
+    assert w0.pages_in_use > 0
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected import fault")
+
+    monkeypatch.setattr(w1.registry, "import_grant", boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        cl.grant_into(w1, vpi)
+    assert w0.alloc.granted_out_pages == 0
+    assert not cl.lock.held            # the with-statement unwound the lock
+    # the anchor is still intact and grantable once the fault clears
+    monkeypatch.undo()
+    assert cl.grant_into(w1, vpi) is not None
+    assert cl.stats["grants"] == 1

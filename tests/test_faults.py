@@ -539,10 +539,23 @@ def test_standard_chaos_scenario_identity_and_recovery_throughput():
         assert len(got) + drops[i] == len(exp), \
             f"channel {i}: {len(exp) - len(got) - drops[i]} uncounted losses"
 
-    # recovery throughput: best-of-2 each way to damp scheduler noise
-    _, _, ref_dt2, _, _ = _run_scenario(False)
-    _, _, dt2, msgs2, _ = _run_scenario(True)
-    steady = ref_msgs / max(min(ref_dt, ref_dt2), 1e-9)
-    under_chaos = max(msgs / max(dt, 1e-9), msgs2 / max(dt2, 1e-9))
+    # recovery throughput: wall-clock ratios of ~50ms runs are noisy on a
+    # shared box, so take best-of-N on BOTH sides, re-measuring up to
+    # three times before declaring a real regression (the same
+    # confirmation-re-run idiom as scripts/check_bench_trend.py)
+    steady_dts = [ref_dt]
+    chaos_rates = [msgs / max(dt, 1e-9)]
+    for _ in range(3):
+        steady = ref_msgs / max(min(steady_dts), 1e-9)
+        under_chaos = max(chaos_rates)
+        if under_chaos >= 0.7 * steady:
+            break
+        _, _, ref_dt2, _, _ = _run_scenario(False)
+        _, _, dt2, msgs2, _ = _run_scenario(True)
+        steady_dts.append(ref_dt2)
+        chaos_rates.append(msgs2 / max(dt2, 1e-9))
+    else:
+        steady = ref_msgs / max(min(steady_dts), 1e-9)
+        under_chaos = max(chaos_rates)
     assert under_chaos >= 0.7 * steady, \
         f"chaos throughput {under_chaos:.0f} < 70% of steady {steady:.0f}"
