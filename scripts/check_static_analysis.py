@@ -1,12 +1,12 @@
 #!/usr/bin/env python
 """CI gate for the datapath verifier (``repro.analysis``).
 
-Runs the three static-analysis passes — page/grant ownership lint, jaxpr
-zero-copy audit, cluster-plane lockset check — and fails on any unwaived
-finding. The advisory import-graph hygiene report prints but never fails
-the gate. A wall-clock budget keeps the gate honest: static analysis that
-takes minutes stops being run, so the whole suite must finish in under
-30 s on CPU.
+Runs the static-analysis passes — page/grant ownership lint, jaxpr
+zero-copy audit, cluster-plane lockset check, the concurrency verifier
+(lock order, atomicity, steal path), and the import-graph hygiene check —
+and fails on any unwaived finding. A wall-clock budget keeps the gate
+honest: static analysis that takes minutes stops being run, so the whole
+suite must finish in under 30 s on CPU.
 
 Usage: python scripts/check_static_analysis.py
 """
@@ -40,8 +40,17 @@ def main() -> int:
     print("\n".join(rep.lines()))
     failed |= not rep.ok
 
+    from repro.analysis import concurrency
+    rep = concurrency.run()
+    print("\n".join(rep.lines()))
+    failed |= not rep.ok
+
     from repro.analysis import importgraph
-    print("\n".join(importgraph.report_lines()))  # advisory, never fails
+    rep = importgraph.run()
+    print(rep.summary())
+    for f in rep.active:
+        print("  " + f.format())
+    failed |= not rep.ok
 
     wall = time.monotonic() - t0
     print(f"static analysis wall clock: {wall:.1f}s (budget {WALL_BUDGET_S:.0f}s)")

@@ -11,7 +11,7 @@ python -m pytest -x -q
 echo "== kernel parity: fused selective-copy + gather + policy-match vs oracles (interpret mode) =="
 python scripts/check_kernel_parity.py
 
-echo "== static analysis: ownership lint + jaxpr audit + lockset check =="
+echo "== static analysis: ownership + jaxpr + lockset + concurrency + imports =="
 python scripts/check_static_analysis.py
 
 if command -v ruff >/dev/null 2>&1; then

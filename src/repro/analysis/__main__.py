@@ -1,16 +1,17 @@
 """CLI for the datapath verifier: ``python -m repro.analysis``.
 
-Runs the three analysis passes (ownership lint, jaxpr zero-copy audit,
-cluster-plane lockset check) plus the advisory import-graph report, and
-exits non-zero on any unwaived finding. ``--write-manifest`` regenerates
-the committed shared-state manifest after a reviewed locking change.
+Runs the analysis passes (ownership lint, jaxpr zero-copy audit,
+cluster-plane lockset check, concurrency verifier, import-graph hygiene)
+and exits non-zero on any unwaived finding. ``--write-manifest``
+regenerates the committed shared-state and lock-hierarchy manifests
+after a reviewed locking change.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 
-PASSES = ("ownership", "jaxpr", "lockset", "imports")
+PASSES = ("ownership", "jaxpr", "lockset", "concurrency", "imports")
 
 
 def main(argv=None) -> int:
@@ -30,11 +31,14 @@ def main(argv=None) -> int:
         selected = set(PASSES)
 
     if args.write_manifest:
-        from repro.analysis import lockset
+        from repro.analysis import concurrency, lockset
         m = lockset.write_manifest()
         print(f"wrote {lockset.MANIFEST_PATH} "
               f"({len(m['classes'])} classes, {len(m['sites'])} sites)")
-        selected.add("lockset")
+        h = concurrency.write_hierarchy_manifest()
+        print(f"wrote {concurrency.HIERARCHY_PATH} "
+              f"({len(h['edges'])} lock-order edges)")
+        selected |= {"lockset", "concurrency"}
 
     failed = False
     if "ownership" in selected:
@@ -52,9 +56,17 @@ def main(argv=None) -> int:
         rep = lockset.run()
         print("\n".join(rep.lines()))
         failed |= not rep.ok
+    if "concurrency" in selected:
+        from repro.analysis import concurrency
+        rep = concurrency.run()
+        print("\n".join(rep.lines()))
+        failed |= not rep.ok
     if "imports" in selected:
         from repro.analysis import importgraph
-        print("\n".join(importgraph.report_lines()))  # advisory only
+        rep = importgraph.run()
+        print(rep.summary())
+        print("\n".join("  " + f.format() for f in rep.active))
+        failed |= not rep.ok
     return 1 if failed else 0
 
 

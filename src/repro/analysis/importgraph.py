@@ -1,13 +1,17 @@
-"""Import-graph hygiene report (warn-only).
+"""Import-graph hygiene check (``IMPORT001``).
 
 Builds the static import graph of the ``repro`` package plus the repo's
 executable roots (``tests/``, ``scripts/``, ``examples/``,
-``benchmarks/``) and reports any ``repro`` module that no root can reach.
+``benchmarks/``) and flags any ``repro`` module that no root can reach.
 Unreachable modules are dead weight: nothing tests them, nothing ships
-them, and they silently rot. The report is advisory — it prints in the
-CI gate but never fails it, because intentional staging of future work is
-legitimate; promoting a module out of the report means wiring it into a
-test or an entry point.
+them, and they silently rot. Intentional staging of future work is
+legitimate — waive it in the module itself with the standard comment
+(``libra: waive[IMPORT001] <reason>`` after a ``#``, anywhere in the
+file; the finding anchors to the waiver line). A module
+driven only through ``subprocess``/``importlib`` is invisible to the
+static graph and needs the same waiver. The gate runs at zero unexplained
+findings; a stale waiver on a module that became reachable is itself
+flagged (``WAIVER002``).
 
 Pure-AST: modules are never imported, so a module with a missing optional
 dependency still participates in the graph.
@@ -17,6 +21,10 @@ from __future__ import annotations
 import ast
 from pathlib import Path
 from typing import Dict, List, Set
+
+from repro.analysis.common import Finding, Report, build_report
+
+IMPORT_RULES = ("IMPORT001",)
 
 REPO_ROOT = Path(__file__).resolve().parents[3]
 PKG_ROOT = REPO_ROOT / "src" / "repro"
@@ -123,6 +131,36 @@ def report_lines() -> List[str]:
         return ["imports: all repro modules reachable from "
                 f"{'/'.join(ENTRY_DIRS)}"]
     lines = [f"imports: {len(dead)} module(s) unreachable from any "
-             f"executable root ({'/'.join(ENTRY_DIRS)}) — advisory only:"]
+             f"executable root ({'/'.join(ENTRY_DIRS)}):"]
     lines += [f"  {m}" for m in dead]
     return lines
+
+
+def run() -> Report:
+    """Gated report: one IMPORT001 finding per unreachable module, waived
+    by a standard waiver comment anywhere inside the module."""
+    modules = {_module_name(py): py for py in PKG_ROOT.rglob("*.py")}
+    findings: List[Finding] = []
+    sources: Dict[str, str] = {}
+    for mod in unreachable():
+        py = modules[mod]
+        rel = str(py.relative_to(REPO_ROOT))
+        text = py.read_text()
+        sources[rel] = text
+        # anchor the finding to the module's waiver comment if it has one
+        # (the waiver mechanism is line-based; "this whole module" is not)
+        line = 1
+        for i, t in enumerate(text.splitlines(), start=1):
+            if "waive[IMPORT001]" in t:
+                line = i
+                break
+        findings.append(Finding(
+            rel, line, "IMPORT001",
+            f"module {mod} is unreachable from any executable root "
+            f"({'/'.join(ENTRY_DIRS)}) — wire it into a test or entry "
+            f"point, or waive it with a staging reason"))
+    # reachable modules still participate in the stale-waiver sweep
+    for py in PKG_ROOT.rglob("*.py"):
+        rel = str(py.relative_to(REPO_ROOT))
+        sources.setdefault(rel, py.read_text())
+    return build_report("imports", findings, sources, rules=IMPORT_RULES)

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """hymba-1.5b [hybrid] — arXiv:2411.13676 / hf.
 
 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.

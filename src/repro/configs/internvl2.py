@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """internvl2-76b [vlm] — arXiv:2404.16821 (InternViT-6B + LLaMA-3-70B-style LM).
 
 Backbone: 80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256.

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """libra-proxy-125m — the paper-scenario model.
 
 A small dense LM standing in for the L7-proxy workload driver: the serving

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """minicpm-2b [dense] — arXiv:2404.06395 / hf (llama-like, WSD schedule).
 
 40L d_model=2304 36H (kv=36) d_ff=5760 vocab=122753.

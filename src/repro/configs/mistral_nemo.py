@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """mistral-nemo-12b [dense] — hf:mistralai/Mistral-Nemo-Base-2407.
 
 40L d_model=5120 32H (GQA kv=8) d_ff=14336 vocab=131072, 128k context.

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """phi3-mini-3.8b [dense] — arXiv:2404.14219.
 
 32L d_model=3072 32H (GQA kv=32, i.e. MHA) d_ff=8192 vocab=32064,

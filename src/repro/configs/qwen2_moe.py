@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """qwen2-moe-a2.7b [moe] — hf:Qwen/Qwen1.5-MoE-A2.7B.
 
 24L d_model=2048 16H (kv=16) per-expert d_ff=1408 vocab=151936,

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """qwen3-moe-30b-a3b [moe] — hf:Qwen/Qwen3-30B-A3B.
 
 48L d_model=2048 32H (GQA kv=4) per-expert d_ff=768 vocab=151936,

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] model-config data staged for the launch tooling (loaded by name via repro.configs)
 """whisper-medium [audio] — arXiv:2212.04356.
 
 24L d_model=1024 16H (kv=16) d_ff=4096 vocab=51865 — encoder-decoder.

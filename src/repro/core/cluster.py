@@ -53,6 +53,8 @@ from __future__ import annotations
 import bisect
 import hashlib
 import struct
+import threading
+import time
 from typing import Callable, Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -247,8 +249,11 @@ class LibraCluster:
         self.lock = ClusterLock()
         # the worker whose scheduling quantum is executing right now (None
         # = control plane); maintained by ClusterRuntime via as_worker()
-        # and read by the test-time LocksetMonitor
-        self.current_worker: Optional[int] = None
+        # and read by the test-time LocksetMonitor. Thread-local: under
+        # run_parallel(threads=True) each worker thread carries its own
+        # attribution, while the cooperative scheduler keeps setting it
+        # from the main thread exactly as before.
+        self._worker_ctx = threading.local()
         self.workers: List[LibraStack] = []
         for i in range(n_workers):
             wsecret = (None if secret is None
@@ -286,6 +291,14 @@ class LibraCluster:
     # -- placement -----------------------------------------------------------
     def __len__(self) -> int:
         return len(self.workers)
+
+    @property
+    def current_worker(self) -> Optional[int]:
+        return getattr(self._worker_ctx, "w", None)
+
+    @current_worker.setter
+    def current_worker(self, w: Optional[int]) -> None:
+        self._worker_ctx.w = w
 
     def as_worker(self, w: Optional[int]) -> "_WorkerCtx":
         """Scope ``current_worker`` to ``w`` for one scheduling quantum —
@@ -677,11 +690,15 @@ class ClusterRuntime:
             for ch in take:
                 stolen.add(ch)
                 self.stats["stolen_quanta"] += 1
-                # the THIEF executes the quantum: the stolen channel's
-                # state (the donor's pool/registry) is touched from worker
-                # i's context — exactly what the lockset gate watches
-                with self.cluster.as_worker(i):
-                    progressed += bool(ch.service())
+                # steal-under-lock: the THIEF executes the quantum while
+                # holding the plane lock, so the stolen channel's state
+                # (the donor's pool/registry) is owner-pinned for the
+                # whole handoff — LocksetMonitor attributes the mutations
+                # with no special case, and a threaded donor can never
+                # race the thief on its own freelists
+                with self.cluster.lock:
+                    with self.cluster.as_worker(i):
+                        progressed += bool(ch.service())
         for i, (rt, rdy) in enumerate(zip(self.runtimes, readys)):
             if i in dead:
                 continue
@@ -801,22 +818,91 @@ class ClusterRuntime:
             rounds += 1
         return self.messages_forwarded()
 
-    def run_parallel(self, max_rounds: int = 10 ** 6
+    def run_parallel(self, max_rounds: int = 10 ** 6, *,
+                     threads: bool = False, epoch_rounds: int = 256
                      ) -> Tuple[int, List[float]]:
         """Run each worker's runtime to completion independently and
         return ``(messages_forwarded, per-worker wall seconds)``. The
         workers are independent event loops (cross-worker forwards are
         driven entirely by the src-side channel), so on real cores they
-        run concurrently; the single-process repro emulates the parallel
-        wall clock as ``max(per-worker seconds)`` — the critical path."""
-        import time
+        run concurrently; with ``threads=False`` the single-process repro
+        emulates the parallel wall clock as ``max(per-worker seconds)``
+        — the critical path.
 
-        times: List[float] = []
-        for i, rt in enumerate(self.runtimes):
+        ``threads=True`` makes it real: one OS thread per live worker,
+        each scoped to its island via the thread-local worker context.
+        Byte- and counter-identical to the emulated scheduler (the only
+        cross-thread state — peer pools/registries on the grant path —
+        is plane-locked end to end; the grant-vs-copy choice depends
+        only on destination watermark pressure, not on interleaving).
+        With a ``fault_plan``, workers run in *epochs* of
+        ``epoch_rounds`` rounds with a full barrier between epochs: the
+        control plane fires due fault events (worker kills migrate flows
+        while every worker thread is joined), so ``at=`` times are in
+        epoch units under this executor.
+        """
+        if not threads:
+            times: List[float] = []
+            for i, rt in enumerate(self.runtimes):
+                t0 = time.perf_counter()
+                with self.cluster.as_worker(i):
+                    rt.run(max_rounds)
+                times.append(time.perf_counter() - t0)
+            return self.messages_forwarded(), times
+        return self._run_threads(max_rounds, epoch_rounds)
+
+    def _run_threads(self, max_rounds: int, epoch_rounds: int
+                     ) -> Tuple[int, List[float]]:
+        times = [0.0] * len(self.runtimes)
+        errors: List[BaseException] = []
+
+        def drive(i: int, rt: ProxyRuntime, budget: int) -> None:
             t0 = time.perf_counter()
-            with self.cluster.as_worker(i):
-                rt.run(max_rounds)
-            times.append(time.perf_counter() - t0)
+            try:
+                with self.cluster.as_worker(i):
+                    rt.run(budget)
+            except BaseException as e:  # propagate to the joining thread
+                errors.append(e)
+            finally:
+                times[i] += time.perf_counter() - t0
+
+        def epoch(budget: int) -> None:
+            ts = [threading.Thread(target=drive, args=(i, rt, budget),
+                                   name=f"libra-worker-{i}")
+                  for i, rt in enumerate(self.runtimes)
+                  if i not in self.cluster.dead_workers]
+            for t in ts:
+                t.start()
+            for t in ts:
+                t.join()
+            if errors:
+                raise errors[0]
+
+        if self.fault_plan is None:
+            epoch(max_rounds)
+            return self.messages_forwarded(), times
+
+        # epoch-barrier loop: threads run epoch_rounds, join, then the
+        # control plane (single-threaded) fires due fault events — a
+        # kill_worker migration never races a live worker thread
+        plan = self.fault_plan
+        rounds_left = max_rounds
+        last_msgs = -1
+        while rounds_left > 0:
+            epoch(min(epoch_rounds, rounds_left))
+            rounds_left -= epoch_rounds
+            self.rounds += 1
+            plan.on_cluster_step(self)
+            msgs = self.messages_forwarded()
+            pending = any(
+                (ev.kind in ("kill", "at") and not ev.done)
+                or (ev.kind == "reset" and plan.now < ev.at)
+                for ev in plan.events)
+            busy = any(rt.poll() for i, rt in enumerate(self.runtimes)
+                       if i not in self.cluster.dead_workers)
+            if msgs == last_msgs and not busy and not pending:
+                break
+            last_msgs = msgs
         return self.messages_forwarded(), times
 
     def shutdown(self) -> int:

@@ -237,16 +237,21 @@ def libra_close(
     closes, defer the free by a grace period instead of dangling."""
     conn.closed = True
     deferred = 0
-    for vpi, (pages, _ln) in list(conn.anchored.items()):
-        if vpi in registry:
-            registry.begin_teardown(vpi, now_tick)
-            pool.alloc.defer_free(pages, now_tick + registry.grace_ticks)
-            deferred += 1
-        conn.anchored.pop(vpi, None)
+    # membership check → teardown+defer is one atomic region (a threaded
+    # peer completing a grant forward could drop the entry in between)
+    with plane_lock(registry):
+        for vpi, (pages, _ln) in list(conn.anchored.items()):
+            if vpi in registry:
+                registry.begin_teardown(vpi, now_tick)
+                pool.alloc.defer_free(pages, now_tick + registry.grace_ticks)
+                deferred += 1
+            conn.anchored.pop(vpi, None)
     return deferred
 
 
 def expire_teardowns(pool: TokenPool, registry: VpiRegistry, now_tick: int) -> int:
     """Periodic tick: release grace-period-expired anchors (§A.4)."""
-    registry.expire_teardowns(now_tick)
-    return pool.alloc.expire_deferred(now_tick)
+    with plane_lock(registry):
+        registry.expire_teardowns(now_tick)
+    with plane_lock(pool.alloc):
+        return pool.alloc.expire_deferred(now_tick)

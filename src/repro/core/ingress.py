@@ -35,6 +35,7 @@ from repro.core.anchor_pool import PoolExhausted
 from repro.core.crypto import REC_HEADER, TAG_SLOT, RecordAuthError, xor_tokens
 from repro.core.state_machine import St
 from repro.core.stream import Connection, CopyCounters, TokenPool
+from repro.core.sync import plane_lock
 from repro.core.vpi import VpiRegistry
 
 
@@ -185,7 +186,8 @@ def libra_recv(
         # until the rx_advance below)
         payload = conn.rx_peek(payload_len)
         try:
-            pages = pool.alloc.alloc_sequence(payload_len)
+            with plane_lock(pool.alloc):
+                pages = pool.alloc.alloc_sequence(payload_len)
         except PoolExhausted:
             # anchor nothing; serve the whole payload via native copies.
             # the metadata was already accounted as meta_copied above — only
@@ -241,16 +243,18 @@ def libra_recv(
             counters.anchored += payload_len
             counters.allocs += 1
             conn.rx_advance(payload_len)
-            vpi = registry.register(
-                pool.pool_id,
-                [(p.shard, p.local_pid, p.base_pos) for p in pages],
-                payload_len,
-            )
+            with plane_lock(registry):
+                vpi = registry.register(
+                    pool.pool_id,
+                    [(p.shard, p.local_pid, p.base_pos) for p in pages],
+                    payload_len,
+                )
         except BaseException:
             # the pages are ours until the registry owns them: a datapath
             # fault between alloc and register hands them straight back to
             # the freelist instead of leaking them (OWN001)
-            pool.alloc.free_pages_list(pages)
+            with plane_lock(pool.alloc):
+                pool.alloc.free_pages_list(pages)
             raise
         conn.anchored[vpi] = (pages, payload_len)
         out = np.concatenate([meta, np.array([VpiRegistry.to_token(vpi)], np.int64)])

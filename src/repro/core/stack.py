@@ -291,8 +291,9 @@ class LibraStack:
         # ONE freelist pass allocates the whole round (placement identical
         # to per-item alloc_sequence calls, so the pool layout — and every
         # downstream byte — matches the scalar schedule exactly)
-        page_lists = self.alloc.alloc_batch(
-            [parsed.payload_len for _, parsed, _ in cands])
+        with plane_lock(self.alloc):
+            page_lists = self.alloc.alloc_batch(
+                [parsed.payload_len for _, parsed, _ in cands])
         # every page list the round still owns, keyed by identity: entries
         # leave as they are freed in-band (reject/overflow) or handed off to
         # the registry; a fault anywhere below hands the rest back (OWN001)
@@ -302,7 +303,8 @@ class LibraStack:
                                           policy, impl)
         except BaseException:
             if round_owned:
-                self.alloc.free_batch(list(round_owned.values()))
+                with plane_lock(self.alloc):
+                    self.alloc.free_batch(list(round_owned.values()))
             raise
 
     def _recv_batch_round(self, cands, page_lists, round_owned,
@@ -328,7 +330,8 @@ class LibraStack:
             items.append(_BatchItem(sock, bl, decision.copy_meta,
                                     sm.payload_len, pages))
         if leaked:
-            self.alloc.free_batch(leaked)
+            with plane_lock(self.alloc):
+                self.alloc.free_batch(leaked)
             for pl in leaked:
                 round_owned.pop(id(pl), None)
         if not items:
@@ -384,7 +387,8 @@ class LibraStack:
                         int(it.meta[1]), it.meta[TAG_SLOT],
                         np.concatenate([it.meta[REC_HEADER:], it.plain])):
                     self.counters.meta_copied -= it.meta_len
-                    self.alloc.free_batch([it.pages])
+                    with plane_lock(self.alloc):
+                        self.alloc.free_batch([it.pages])
                     round_owned.pop(id(it.pages), None)
                     it.sock.connection.rx_advance(it.payload_len)
                     it.sock.connection.rx_machine.reset()
@@ -430,11 +434,12 @@ class LibraStack:
             self.counters.anchored += it.payload_len
             self.counters.allocs += 1
             conn.rx_advance(it.payload_len)
-            vpi = self.registry.register(
-                self.pool.pool_id,
-                [(p.shard, p.local_pid, p.base_pos) for p in it.pages],
-                it.payload_len,
-            )
+            with plane_lock(self.registry):
+                vpi = self.registry.register(
+                    self.pool.pool_id,
+                    [(p.shard, p.local_pid, p.base_pos) for p in it.pages],
+                    it.payload_len,
+                )
             round_owned.pop(id(it.pages), None)
             conn.anchored[vpi] = (it.pages, it.payload_len)
             buf = np.concatenate(
@@ -503,26 +508,34 @@ class LibraStack:
         the connection would wedge in FAST_PATH forever."""
         buf64 = np.asarray(msg, np.int64)
         try:
-            _meta_len, vpi, entry, _res = sock._peek_message(buf64)
-            if entry is None:
-                return False
-            if entry.stash is not None:
-                # one-copy handoff entry: the payload rides the entry itself
-                self.registry.release(vpi)
-                return True
-            pages = [PageRef(*pg) for pg in entry.pages]
-            if entry.grant is not None:
-                # cross-worker grant: release our entry and the pin on the
-                # owner's pages — a peer pool's grant state, so the drop
-                # holds the cluster-plane lock (no-op single-stack)
-                owner_alloc = self.pool_for_entry(entry).alloc
-                with plane_lock(owner_alloc):
+            # the peek→release pair is one atomic region: a grantee
+            # completing a forward of the same anchor releases the owner
+            # VPI concurrently, and VpiRegistry.release() on an already-
+            # gone entry reports "last reference" — peeking outside the
+            # lock would double-free the pages (lock order: registry
+            # before the owner's alloc, per the committed hierarchy)
+            with plane_lock(self.registry):
+                _meta_len, vpi, entry, _res = sock._peek_message(buf64)
+                if entry is None:
+                    return False
+                if entry.stash is not None:
+                    # one-copy handoff entry: payload rides the entry itself
+                    self.registry.release(vpi)
+                    return True
+                pages = [PageRef(*pg) for pg in entry.pages]
+                if entry.grant is not None:
+                    # cross-worker grant: release our entry and the pin on
+                    # the owner's pages — a peer pool's grant state, so the
+                    # drop holds the cluster-plane lock (no-op single-stack)
+                    owner_alloc = self.pool_for_entry(entry).alloc
+                    with plane_lock(owner_alloc):
+                        if self.registry.release(vpi):
+                            owner_alloc.release_export(pages)
+                    return True
+                owner = self._anchor_owner(vpi)
+                with plane_lock(self.alloc):
                     if self.registry.release(vpi):
-                        owner_alloc.release_export(pages)
-                return True
-            owner = self._anchor_owner(vpi)
-            if self.registry.release(vpi):
-                self.alloc.free_pages_list(pages)
+                        self.alloc.free_pages_list(pages)
             if owner is not None:
                 owner.connection.anchored.pop(vpi, None)
             self._gc_anchor_owners()

@@ -28,8 +28,25 @@ the executor lands):
 3. ``SteeringPolicy`` and ``HealthTable`` are self-locking: their mutators
    take their own per-object lock internally (they are shared through
    ``PolicyTable.clone()`` across every worker's table).
-4. Lock order: plane lock before any per-object lock; per-object locks
-   never nest with each other.
+4. Lock order (statically enforced by the DEAD pass of
+   :mod:`repro.analysis.concurrency` against the committed
+   ``lock_hierarchy_manifest.json``) — acquisition must follow strictly
+   increasing rank:
+
+   ====================  ====  ===================================
+   lock class            rank  acquired as
+   ====================  ====  ===================================
+   plane                 0     ``with cluster.lock`` / ``*_locked``
+   registry              1     ``with plane_lock(<registry>)``
+   alloc                 2     ``with plane_lock(<pool>.alloc)``
+   steering / health     3     ``with self.lock`` (leaf, self-locking)
+   ====================  ====  ===================================
+
+   Same-class re-acquisition is always fine (``ClusterLock`` is
+   reentrant, and in a cluster the plane/registry/alloc classes are
+   today the *same* lock object — the ranking is the contract that
+   keeps a future per-island fine-graining deadlock-free). Leaves never
+   nest with each other.
 """
 from __future__ import annotations
 

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] launch entry point driven via subprocess in test_dryrun_launch (invisible to the static graph)
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 

@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] launch entry point driven via subprocess in test_dryrun_launch (invisible to the static graph)
 """Serving launcher: run a model under any of the four engines and print
 throughput / latency / boundary-traffic stats.
 

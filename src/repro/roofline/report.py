@@ -1,3 +1,4 @@
+# libra: waive[IMPORT001] report renderer invoked as python -m repro.roofline.report (subprocess, not statically imported)
 """Render the §Roofline markdown table from dry-run artifacts.
 
   PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]

@@ -7,7 +7,13 @@ grant pins are restored)."""
 import numpy as np
 import pytest
 
-from repro.analysis import importgraph, jaxpr_audit, lockset, ownership
+from repro.analysis import (
+    concurrency,
+    importgraph,
+    jaxpr_audit,
+    lockset,
+    ownership,
+)
 from repro.analysis.common import Finding, build_report
 from repro.analysis.ownership import OWNERSHIP_RULES, lint_source
 from repro.core import (
@@ -381,11 +387,13 @@ def test_monitor_clean_on_locked_cross_worker_grants():
     assert cl.pages_in_use == 0
 
 
-def test_monitor_flags_work_stealing_as_unsynchronized():
+def test_monitor_clean_on_work_stealing():
     """All flows pinned to worker 0 with stealing on: worker 1's scheduler
-    quantum runs worker 0's channels, mutating worker 0's allocator and
-    registry from the thief's context without the plane lock — exactly the
-    hazard the threaded-executor readiness gate must catch."""
+    quantum runs worker 0's channels under steal-under-lock — the thief
+    holds the plane lock for the whole stolen quantum, so the monitor
+    attributes every donor-state mutation with no by-design carve-out.
+    (Before owner-pinned steal queues this scenario was the one designed
+    LOCK004 source; it must now run clean, like every other path.)"""
     cl = _cluster(2)
     crt = ClusterRuntime(cl, work_stealing=True)
     for chan in _frames(8):
@@ -395,9 +403,9 @@ def test_monitor_flags_work_stealing_as_unsynchronized():
             src.deliver(f)
     with lockset.LocksetMonitor(cl) as mon:
         crt.run()
-    assert mon.violations, "stealing should trip the lockset monitor"
-    assert all(f.rule == "LOCK004" for f in mon.violations)
-    assert any("worker 1's context" in f.message for f in mon.violations)
+    assert crt.stats["stolen_quanta"] > 0, \
+        "scenario must actually exercise stealing"
+    assert mon.violations == [], mon.format()
     crt.shutdown()
 
 
@@ -482,3 +490,231 @@ def test_grant_into_import_fault_releases_export_pin(monkeypatch):
     monkeypatch.undo()
     assert cl.grant_into(w1, vpi) is not None
     assert cl.stats["grants"] == 1
+
+
+# ---------------------------------------------------------------------------
+# concurrency verifier: lock-order / deadlock fixtures
+# ---------------------------------------------------------------------------
+
+def _conc_scan(src):
+    """All three concurrency scanners over one synthetic plane file."""
+    sources = {"src/repro/core/cluster.py": src}
+    edges, findings = concurrency.derive_lock_graph(sources)
+    findings += concurrency.check_lock_order(edges)
+    findings += concurrency.scan_atomicity(sources)
+    findings += concurrency.scan_steal(sources)
+    return findings
+
+
+def test_dead001_opposing_acquisition_orders_are_a_cycle():
+    src = '''
+def fwd(dst_stack):
+    with plane_lock(dst_stack.registry):
+        with plane_lock(dst_stack.alloc):
+            dst_stack.alloc.free_pages_list([])
+
+def rev(dst_stack):
+    with plane_lock(dst_stack.alloc):
+        with plane_lock(dst_stack.registry):
+            dst_stack.registry.release(0)
+'''
+    rules = set(_rules(_conc_scan(src)))
+    # the reversed nesting is both a rank inversion and a static deadlock
+    assert "DEAD001" in rules and "DEAD002" in rules
+
+
+def test_dead002_rank_inversion_without_cycle():
+    src = '''
+def bad(self, pool):
+    with plane_lock(pool.alloc):
+        with self.cluster.lock:
+            self.cluster.stats["x"] = 1
+'''
+    assert _rules(_conc_scan(src)) == ["DEAD002"]
+
+
+def test_dead003_unclassifiable_lock():
+    src = '''
+def bad(self, mystery):
+    with plane_lock(mystery):
+        mystery.release(0)
+'''
+    assert _rules(_conc_scan(src)) == ["DEAD003"]
+
+
+def test_dead_clean_on_ordered_and_reentrant_nesting():
+    src = '''
+def good(self, dst_stack):
+    with self.cluster.lock:
+        with plane_lock(dst_stack.registry):
+            with plane_lock(dst_stack.alloc):
+                dst_stack.alloc.free_pages_list([])
+
+def reentrant(self, dst_stack):
+    with plane_lock(dst_stack.registry):
+        with plane_lock(dst_stack.registry):
+            dst_stack.registry.release(0)
+'''
+    assert _conc_scan(src) == []
+
+
+def test_dead_locked_function_holds_plane_from_entry():
+    # a *_locked body acquiring a leaf is a plane->steering edge, in order
+    src = '''
+def _kill_locked(self, dst_stack):
+    self.steering.remove_worker(0)
+'''
+    sources = {"src/repro/core/cluster.py": src}
+    edges, findings = concurrency.derive_lock_graph(sources)
+    assert findings == []
+    assert {(e["src"], e["dst"]) for e in edges} == {("plane", "steering")}
+    assert concurrency.check_lock_order(edges) == []
+
+
+def test_dead003_hierarchy_manifest_drift():
+    base = {"version": 1, "ranks": dict(concurrency.LOCK_RANKS),
+            "edges": [{"src": "plane", "dst": "steering",
+                       "file": "a.py", "func": "f"}]}
+    assert concurrency.compare_hierarchy(base, base) == []
+    missing = concurrency.compare_hierarchy(base, None)
+    assert _rules(missing) == ["DEAD003"] and "missing" in missing[0].message
+    grown = {**base, "edges": base["edges"] + [
+        {"src": "registry", "dst": "alloc", "file": "b.py", "func": "g"}]}
+    new = concurrency.compare_hierarchy(grown, base)
+    assert _rules(new) == ["DEAD003"] and "new lock-order edge" in new[0].message
+    gone = concurrency.compare_hierarchy(base, grown)
+    assert _rules(gone) == ["DEAD003"] and "no longer exists" in gone[0].message
+
+
+# ---------------------------------------------------------------------------
+# concurrency verifier: atomicity fixtures
+# ---------------------------------------------------------------------------
+
+def test_atom001_unlocked_check_then_act_on_peer_state():
+    src = '''
+def bad(self, dst_stack, vpi):
+    if dst_stack.registry.peek(vpi) is not None:
+        dst_stack.registry.release(vpi)
+'''
+    assert _rules(_conc_scan(src)) == ["ATOM001"]
+
+
+def test_atom001_clean_when_region_shares_one_lock_scope():
+    src = '''
+def good(self, dst_stack, vpi):
+    with plane_lock(dst_stack.registry):
+        if dst_stack.registry.peek(vpi) is not None:
+            dst_stack.registry.release(vpi)
+'''
+    assert _conc_scan(src) == []
+
+
+def test_atom002_unlocked_rmw_on_allocator_state():
+    src = '''
+def bad(self, pool, n):
+    pool.alloc.accounted_pages += n
+'''
+    assert _rules(_conc_scan(src)) == ["ATOM002"]
+
+
+def test_atom002_clean_under_lock():
+    src = '''
+def good(self, pool, n):
+    with plane_lock(pool.alloc):
+        pool.alloc.accounted_pages += n
+'''
+    assert _conc_scan(src) == []
+
+
+def test_atom003_guard_result_crosses_fragmented_lock_scopes():
+    src = '''
+def bad(self, dst_stack, vpi):
+    with plane_lock(dst_stack.registry):
+        entry = dst_stack.registry.peek(vpi)
+    with plane_lock(dst_stack.registry):
+        dst_stack.registry.release(entry)
+'''
+    assert _rules(_conc_scan(src)) == ["ATOM003"]
+
+
+def test_atom003_clean_in_one_continuous_scope():
+    src = '''
+def good(self, dst_stack, vpi):
+    with plane_lock(dst_stack.registry):
+        entry = dst_stack.registry.peek(vpi)
+        dst_stack.registry.release(entry)
+'''
+    assert _conc_scan(src) == []
+
+
+# ---------------------------------------------------------------------------
+# concurrency verifier: steal-path fixtures
+# ---------------------------------------------------------------------------
+
+def test_steal001_stolen_quantum_serviced_without_lock():
+    src = '''
+def bad(self):
+    for i, rt in enumerate(self.runtimes):
+        for ch in rt.poll():
+            with self.cluster.as_worker(i):
+                ch.service()
+'''
+    assert _rules(_conc_scan(src)) == ["STEAL001"]
+
+
+def test_steal001_clean_under_cluster_lock():
+    src = '''
+def good(self):
+    for i, rt in enumerate(self.runtimes):
+        for ch in rt.poll():
+            with self.cluster.lock:
+                with self.cluster.as_worker(i):
+                    ch.service()
+'''
+    assert _conc_scan(src) == []
+
+
+def test_steal002_stolen_reference_escapes_into_attribute():
+    src = '''
+def bad(self, rt):
+    take = list(rt.poll())
+    for ch in take:
+        self.backlog.append(ch)
+    self.pending = take
+'''
+    assert _rules(_conc_scan(src)) == ["STEAL002", "STEAL002"]
+
+
+def test_steal002_local_bookkeeping_containers_allowed():
+    src = '''
+def good(self, rt):
+    stolen = set()
+    take = list(rt.poll())
+    for ch in take:
+        stolen.add(ch)
+    return stolen
+'''
+    assert _conc_scan(src) == []
+
+
+# ---------------------------------------------------------------------------
+# the real tree passes the concurrency and import gates
+# ---------------------------------------------------------------------------
+
+def test_real_tree_concurrency_clean_and_manifest_current():
+    rep = concurrency.run()
+    assert rep.ok, "\n".join(rep.lines())
+
+
+def test_real_tree_lock_graph_is_exactly_the_committed_hierarchy():
+    sources = {rel: (concurrency.REPO_ROOT / rel).read_text()
+               for rel in concurrency.CONCURRENCY_FILES}
+    edges, findings = concurrency.derive_lock_graph(sources)
+    assert findings == []
+    assert {(e["src"], e["dst"]) for e in edges} == {
+        ("plane", "steering"), ("registry", "alloc")}
+
+
+def test_real_tree_imports_gated_clean():
+    rep = importgraph.run()
+    assert rep.ok, "\n".join(rep.lines())

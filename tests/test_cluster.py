@@ -421,3 +421,41 @@ def test_batched_cluster_counts_auth_rejects_on_the_channel():
     assert ch.stats.messages == 1
     rt.shutdown()
     assert stack.alloc.free_pages == stack.alloc.total_pages
+
+
+def test_run_parallel_threads_byte_and_counter_identical():
+    """run_parallel(threads=True) — real worker threads — forwards exactly
+    the same messages, wire bytes and aggregate counters as the emulated
+    per-worker executor. Pool headroom is ample so the grant-vs-copy
+    watermark never trips: the decision sequence is deterministic even
+    though thread interleaving reorders VPI-ID allocation."""
+    frames = _workload(n_chans=9, n_msgs=4)
+
+    def run(threads):
+        cl = _cluster(3, pages_per_shard=512)
+        crt = ClusterRuntime(cl, work_stealing=False)
+        w = len(cl.workers)
+        dsts = []
+        for i, chan_frames in enumerate(frames):
+            sw = i % w
+            dw = (sw + 1) % w if i < 4 else sw
+            src = cl.socket(worker=sw)
+            dst = cl.socket(worker=dw)
+            crt.channel(src, dst)
+            dsts.append(dst)
+            for f in chan_frames:
+                src.deliver(f)
+        msgs, times = crt.run_parallel(threads=threads)
+        wires = [d.tx_wire() for d in dsts]
+        snap = cl.counters_aggregate().snapshot()
+        crt.shutdown()
+        assert cl.pages_in_use == 0
+        assert len(times) == w and all(t >= 0 for t in times)
+        return msgs, wires, snap
+
+    msgs_e, wires_e, snap_e = run(False)
+    msgs_t, wires_t, snap_t = run(True)
+    assert msgs_t == msgs_e == sum(len(c) for c in frames)
+    assert snap_t == snap_e
+    for a, b in zip(wires_e, wires_t):
+        assert np.array_equal(a, b)

@@ -559,3 +559,56 @@ def test_standard_chaos_scenario_identity_and_recovery_throughput():
         under_chaos = max(chaos_rates)
     assert under_chaos >= 0.7 * steady, \
         f"chaos throughput {under_chaos:.0f} < 70% of steady {steady:.0f}"
+
+
+def test_threaded_chaos_conservation_and_clean_lockset():
+    """The standard chaos scenario driven by real worker threads
+    (run_parallel(threads=True)): backend reset at 25%, worker kill at
+    50%, policy hot-swap at 75% of the epoch budget. Every delivered
+    frame is one of the originals (exactly once), delivered + counted
+    drops == sent on every channel, the LocksetMonitor observes zero
+    unlocked cross-worker mutations from the real threads, and shutdown
+    proves zero leaked pages/grant pins. Fault `at=` times are in EPOCH
+    units under the threaded executor (the plan ticks once per epoch
+    barrier, not once per scheduler round)."""
+    from repro.analysis import lockset
+
+    epochs = 8
+    cl = LibraCluster(3, secret=b"chaos", **STACK_KW)
+    health = HealthTable(2, fail_threshold=2)
+    plan = FaultPlan(seed=13)
+    crt = ClusterRuntime(cl, policy=_fo_table(health), fault_plan=plan)
+    plan.reset(0, at=epochs // 4)
+    plan.kill_worker(2, at=epochs // 2)
+
+    def swap_all(rt):
+        for t in rt.policies:
+            if t is not None:
+                t.swap([rule(forward(0, failover=1), eq(TAG, 7))])
+    plan.at(3 * epochs // 4, swap_all)
+
+    chans, dst_pairs, sent = [], [], []
+    for i in range(6):
+        src = cl.socket(worker=i % 3)
+        pair = [cl.socket(worker=(i + 1) % 3) for _ in range(2)]
+        chans.append(crt.channel(src, pair))
+        dst_pairs.append(pair)
+        sent.append(_deliver(src, 4, seed=300 + i))
+
+    with lockset.LocksetMonitor(cl) as mon:
+        msgs, times = crt.run_parallel(threads=True, epoch_rounds=64)
+    assert mon.violations == [], mon.format()
+    assert cl.stats["worker_kills"] == 1
+    assert all(t is None or t.epoch == 1 for t in crt.policies
+               if t is not None)
+    assert len(times) == 3 and all(t >= 0 for t in times)
+
+    for i, (d0, d1) in enumerate(dst_pairs):
+        got = sorted(_frames_of(d0.tx_wire()) + _frames_of(d1.tx_wire()))
+        exp = sorted(tuple(int(x) for x in f) for f in sent[i])
+        assert len(got) == len(set(got))
+        assert set(got) <= set(exp), f"channel {i} delivered foreign bytes"
+        drops = chans[i].stats.timeouts + chans[i].stats.drops
+        assert len(got) + drops == len(exp), \
+            f"channel {i}: {len(exp) - len(got) - drops} uncounted losses"
+    crt.shutdown()         # asserts zero leaked pages/grants on every pool
