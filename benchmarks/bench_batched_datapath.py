@@ -29,6 +29,47 @@ from benchmarks.common import counters_fields, csv, is_smoke, record, run_stream
 
 MIXED = ["length-prefixed", "delimiter", "chunked"]
 
+FUSED_N = 64   # the acceptance point: one-kernel vs three-launch at N=64
+
+
+def run_fused_once(impl: str, *, n_conns: int, n_msgs: int, payload: int,
+                   seed: int = 3):
+    """One policy-routed proxy run for the one-kernel series: an L7 table
+    (metadata route + payload-prefix route + drop) makes the multi-pass
+    path pay its full three launches per round (anchor + policy match +
+    egress gather) while ``impl='fused-round:*'`` folds them into one,
+    with the egress gather riding the round as a speculative TX against
+    each channel's primary backend."""
+    from repro.core import (LibraStack, PolicyTable, ProxyRuntime,
+                            between, build_message, drop, forward, rule)
+    from repro.core.policy import payload_at
+
+    stack = LibraStack(n_shards=4, pages_per_shard=2048, page_size=16,
+                       secret=b"bench", device_pool=True)
+    table = PolicyTable([
+        rule(drop(), between(0, 196, 199)),
+        rule(forward(1), payload_at(0, 1950, 2000)),
+        rule(forward(0), between(0, 100, 199)),
+    ])
+    rt = ProxyRuntime(stack, tick_every=32, policy=table, batched=True,
+                      batch_impl=impl)
+    rng = np.random.default_rng(seed)
+    for i in range(n_conns):
+        src = stack.socket("length-prefixed")
+        dsts = [stack.socket("length-prefixed") for _ in range(2)]
+        rt.channel(src, dsts, name=f"ch{i}")
+        for _ in range(n_msgs):
+            src.deliver(build_message(rng.integers(100, 200, 8),
+                                      rng.integers(1000, 2000, payload)))
+    t0 = time.perf_counter()
+    rt.run()
+    dt = time.perf_counter() - t0
+    wires = tuple(d.tx_wire().tobytes()
+                  for ch in rt.channels for d in ch.dsts)
+    rt.shutdown()
+    assert stack.alloc.free_pages == stack.alloc.total_pages
+    return stack, rt, n_conns * n_msgs, dt, wires
+
 
 def run_once(*, n_conns: int, n_msgs: int, payload: int, batched: bool,
              batch_impl: str = "host", parsers=None, device_pool=True):
@@ -129,6 +170,52 @@ def main() -> None:
         record(f"batched_datapath_device_{name}_counters", impl="ref",
                n_conns=n_res, rounds_per_s=rounds_s,
                **counters_fields(stack))
+    # the one-kernel scheduling round (tentpole series): anchor + kTLS
+    # crypto + policy match + egress gather as ONE launch per round vs the
+    # multi-pass three (anchor, match, gather), same policy-routed workload
+    # at N=64. Identity is asserted per pair — wire bytes, the CopyCounters
+    # snapshot, and forwarded message count must be EQUAL before the
+    # speedup is reported.
+    fused_msgs = 4 if smoke else 8
+    fused = {}
+    for _ in range(reps):       # interleaved best-of-k, same seed
+        for impl in ("ref", "fused-round:ref"):
+            got = run_fused_once(impl, n_conns=FUSED_N, n_msgs=fused_msgs,
+                                 payload=96)
+            if impl not in fused or got[3] < fused[impl][3]:
+                fused[impl] = got
+    multi, one = fused["ref"], fused["fused-round:ref"]
+    assert multi[4] == one[4], "fused round: wire bytes differ"
+    assert multi[0].counters.snapshot() == one[0].counters.snapshot(), \
+        "fused round: copy counters differ"
+    assert multi[1].messages_forwarded() == one[1].messages_forwarded()
+    for name, (stack, rt, msgs, dt, _) in (("multi_pass", multi),
+                                           ("fused", one)):
+        x = stack.pool.xfer
+        rounds_s = rt.rounds / max(dt, 1e-9)
+        launches = x["device_rounds"] + x["policy_match_rounds"]
+        csv(f"batched_datapath_fused_c{FUSED_N}_{name}",
+            dt * 1e6 / max(rt.rounds, 1),
+            f"rounds_per_s={rounds_s:.0f} msgs_per_s={msgs / max(dt, 1e-9):.0f} "
+            f"launches={launches} fused_rounds={x['fused_rounds']} "
+            f"tx_spec_hits={x['tx_spec_hits']}")
+        record(f"batched_datapath_fused_c{FUSED_N}_{name}_series",
+               impl="ref" if name == "multi_pass" else "fused-round:ref",
+               n_conns=FUSED_N, rounds_per_s=rounds_s,
+               msgs_per_s=msgs / max(dt, 1e-9), launches=launches,
+               **counters_fields(stack))
+    f_tput = one[1].rounds / max(one[3], 1e-9)
+    m_tput = multi[1].rounds / max(multi[3], 1e-9)
+    mx, ox = multi[0].pool.xfer, one[0].pool.xfer
+    csv(f"batched_datapath_fused_c{FUSED_N}_speedup", 0.0,
+        f"fused_over_multi={f_tput / max(m_tput, 1e-9):.2f}x "
+        f"launches_{mx['device_rounds'] + mx['policy_match_rounds']}"
+        f"_to_{ox['device_rounds'] + ox['policy_match_rounds']}")
+    record(f"batched_datapath_fused_c{FUSED_N}_speedup_series",
+           fused_over_multi=f_tput / max(m_tput, 1e-9),
+           multi_launches=mx["device_rounds"] + mx["policy_match_rounds"],
+           fused_launches=ox["device_rounds"] + ox["policy_match_rounds"])
+
     r_tput = series["resident"][1].rounds / max(series["resident"][3], 1e-9)
     h_tput = series["host_sync"][1].rounds / max(series["host_sync"][3], 1e-9)
     rx, hx = series["resident"][0].pool.xfer, series["host_sync"][0].pool.xfer

@@ -24,6 +24,7 @@ BENCHES = [
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("batched_datapath", "benchmarks.bench_batched_datapath"),
+    ("dma_overlap", "benchmarks.bench_dma_overlap"),
     ("cluster_proxy", "benchmarks.bench_cluster_proxy"),
     ("fig6c_ktls", "benchmarks.bench_ktls_analogue"),
     ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
@@ -42,6 +43,7 @@ SMOKE_BENCHES = [
     ("fig6_throughput_latency", "benchmarks.bench_throughput"),
     ("fig6_stream_proxy", "benchmarks.bench_proxy_runtime"),
     ("batched_datapath", "benchmarks.bench_batched_datapath"),
+    ("dma_overlap", "benchmarks.bench_dma_overlap"),
     ("cluster_proxy", "benchmarks.bench_cluster_proxy"),
     ("fig6cd_ktls_proxy", "benchmarks.bench_ktls_proxy"),
     ("policy_proxy", "benchmarks.bench_policy_proxy"),

@@ -4,7 +4,8 @@ the committed (git HEAD) baselines and FAIL on a throughput regression.
 
 For every artifact present in the working tree, the committed version is
 read via ``git show HEAD:<path>``. Rows are matched by ``name``; every
-shared throughput metric (``msgs_per_s``, ``rounds_per_s``) must not drop
+shared throughput metric (``msgs_per_s``, ``rounds_per_s``, and the kTLS
+``hw_over_sw``/``hw_fused_over_sw`` ratios) must not drop
 below ``(1 - tolerance)`` of its baseline (default tolerance 30%, i.e. a
 >30% regression fails — override with ``LIBRA_TREND_TOLERANCE``).
 
@@ -34,7 +35,7 @@ import os
 import subprocess
 import sys
 
-METRICS = ("msgs_per_s", "rounds_per_s")
+METRICS = ("msgs_per_s", "rounds_per_s", "hw_over_sw", "hw_fused_over_sw")
 
 
 def _baseline(repo: str, relpath: str):

@@ -26,13 +26,16 @@ import numpy as np
 from repro.analysis.jaxpr_audit import assert_fused
 from repro.kernels import ref as R
 from repro.kernels.selective_copy import (
+    fused_round,
     policy_match,
     selective_copy,
     selective_gather,
 )
 from repro.kernels.testing import (
+    fused_round_case,
     policy_case,
     policy_live_column,
+    policy_payload_case,
     selcopy_case,
     selcopy_crypto_case,
     selgather_case,
@@ -143,6 +146,93 @@ def check_policy_parity() -> None:
           "+keystream, +live)")
 
 
+def check_payload_policy_parity() -> None:
+    """Payload-prefix conditions (``cond_off <= -2`` peeking the first
+    anchored page window) vs the oracle, bit-exact, ± keystream ± live."""
+    rng = np.random.default_rng(46)
+    for b, meta_max, r, k, w in [(1, 8, 2, 1, 8), (4, 16, 6, 3, 8),
+                                 (3, 16, 8, 2, 16)]:
+        meta, ml, off, lo, hi, ks, pay, plen = policy_payload_case(
+            rng, b=b, meta_max=meta_max, r=r, k=k, w=w)
+        live = policy_live_column(rng, r)
+        for kk in (None, ks):
+            for lv in (None, live):
+                m = meta if kk is None else np.bitwise_xor(np.array(meta),
+                                                           np.array(kk))
+                got = policy_match(m, ml, off, lo, hi, interpret=True,
+                                   keystream=kk, live=lv, payload=pay,
+                                   payload_len=plen)
+                want = R.policy_match_ref(m, ml, off, lo, hi, kk, lv,
+                                          payload=pay, payload_len=plen)
+                assert np.array_equal(np.array(got), np.array(want)), \
+                    (b, meta_max, r, k, w, kk is not None, lv is not None,
+                     "payload-policy")
+    print("parity: payload-prefix conditions == oracle (bit-exact)")
+
+
+def check_fused_round_parity() -> None:
+    """The one-kernel scheduling round vs ``fused_round_ref`` across the
+    optional-operand matrix (crypto keystreams, policy table, live column,
+    metadata keystream) and the DMA-staged buffer depths — meta, pool,
+    verdict, and gathered payload all bit-exact."""
+    rng = np.random.default_rng(47)
+    for b, page, pps, meta_max in [(1, 8, 2, 8), (2, 8, 4, 16)]:
+        case = fused_round_case(rng, b=b, page=page, pps=pps,
+                                meta_max=meta_max)
+        base = (case["stream"], case["meta_len"], case["total_len"],
+                case["pool"], case["tables"])
+        for crypto in (False, True):
+            for policy in (False, True):
+                kw = dict(meta_max=meta_max)
+                if crypto:
+                    kw.update(keystream=case["keystream"],
+                              tx_keystream=case["tx_keystream"])
+                if policy:
+                    kw.update(cond_off=case["cond_off"],
+                              cond_lo=case["cond_lo"],
+                              cond_hi=case["cond_hi"], live=case["live"])
+                    if crypto:
+                        kw.update(meta_ks=case["meta_ks"])
+                want = R.fused_round_ref(*base, **kw)
+                # quad buffering only for the full-operand combo (each
+                # extra depth is a fresh interpret compile; 2 covers the
+                # staged control flow, 4 only the ring-index arithmetic)
+                depths = (0, 2, 4) if (crypto and policy) else (0, 2)
+                for n_buffers in depths:
+                    got = fused_round(*base, interpret=True,
+                                      n_buffers=n_buffers, **kw)
+                    for gi, wi, tag in zip(got, want,
+                                           ("meta", "pool", "verdict",
+                                            "gathered")):
+                        if wi is None:
+                            assert gi is None, (tag, "verdict expected None")
+                            continue
+                        assert np.array_equal(np.array(gi), np.array(wi)), \
+                            (b, page, pps, meta_max, crypto, policy,
+                             n_buffers, tag)
+    print("parity: one-kernel fused round == oracle (bit-exact, "
+          "crypto/policy matrix, DMA-staged depths)")
+
+
+def check_fused_round_single_launch() -> None:
+    """The fusion claim itself: the full-operand round traces to exactly
+    ONE pallas_call with no pool-sized copy (3-to-1 launch collapse), in
+    both the blocked and the DMA-staged layouts."""
+    case = fused_round_case(np.random.default_rng(12))
+    args = (case["stream"], case["meta_len"], case["total_len"],
+            case["pool"], case["tables"])
+    for n_buffers in (0, 2):
+        fn = functools.partial(
+            fused_round, meta_max=16, interpret=True, n_buffers=n_buffers,
+            keystream=case["keystream"], tx_keystream=case["tx_keystream"],
+            cond_off=case["cond_off"], cond_lo=case["cond_lo"],
+            cond_hi=case["cond_hi"], live=case["live"],
+            meta_ks=case["meta_ks"])
+        assert_fused(fn, args, name=f"fused_round[nb={n_buffers}]")
+    print("one-kernel: fused round jaxpr is a single pallas_call "
+          "(blocked + DMA-staged)")
+
+
 def check_policy_no_pool_copy() -> None:
     """The match pass touches only the round's [B, M] metadata block — its
     jaxpr must contain no pool-sized copy primitive and exactly one fused
@@ -165,8 +255,11 @@ if __name__ == "__main__":
     check_crypto_parity()
     check_gather_parity()
     check_policy_parity()
+    check_payload_policy_parity()
+    check_fused_round_parity()
     check_no_pool_copy()
     check_gather_no_pool_copy()
     check_policy_no_pool_copy()
+    check_fused_round_single_launch()
     print("check_kernel_parity: OK")
     sys.exit(0)

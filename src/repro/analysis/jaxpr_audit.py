@@ -3,8 +3,9 @@
 Generalizes ``check_kernel_parity.py``'s ad-hoc jaxpr walks into one
 audited registry.  For each entry (``selective_copy`` legacy/reserved/
 crypto, ``selective_gather`` ± keystream, ``policy_match`` ± keystream ±
-live — the ops behind the batched read/write paths) the trace-level
-invariants are:
+live ± payload-prefix window, and ``fused_round`` — the one-kernel
+scheduling round — across its optional-operand matrix and the DMA-staged
+layout) the trace-level invariants are:
 
 - ``JAX001`` — exactly one ``pallas_call`` per fused op (the whole round
   is ONE kernel; a second call means the fusion regressed).
@@ -194,6 +195,67 @@ def _policy_entry(keystream: bool, live: bool):
     return build
 
 
+def _policy_payload_entry(keystream: bool, live: bool):
+    def build():
+        from repro.kernels.selective_copy import policy_match
+        from repro.kernels.testing import (policy_live_column,
+                                           policy_payload_case)
+        rng = np.random.default_rng(10)
+        b, meta_max, r, k, w = 4, 16, 6, 3, 8
+        meta, ml, off, lo, hi, ks, pay, plen = policy_payload_case(
+            rng, b=b, meta_max=meta_max, r=r, k=k, w=w)
+        lv = policy_live_column(rng, r) if live else None
+        fn = functools.partial(policy_match, interpret=True,
+                               keystream=ks if keystream else None, live=lv,
+                               payload=pay, payload_len=plen)
+        declared = (b * meta_max + b + 3 * r * k
+                    + (b * meta_max if keystream else 0)
+                    + (r if live else 0)
+                    + b * w + b       # payload window + payload_len consts
+                    + b)              # verdict out
+        return fn, (meta, ml, off, lo, hi), declared
+    return build
+
+
+def _fused_entry(crypto: bool, policy: bool, n_buffers: int = 0):
+    """One-kernel scheduling round: anchor + kTLS XOR + policy match +
+    egress gather as a SINGLE pallas_call (the fusion JAX001 guards is the
+    3-to-1 launch collapse itself). The full-operand variant adds the TX
+    keystream, the policy cond tables, the live column, and the metadata
+    keystream; ``n_buffers >= 2`` audits the DMA-pipelined staging layout
+    (same boundary budget — scratch buffers never cross the boundary)."""
+    def build():
+        from repro.kernels.selective_copy import fused_round
+        from repro.kernels.testing import fused_round_case
+        rng = np.random.default_rng(12)
+        b, page, pps, meta_max, r, k = 2, 8, 4, 16, 6, 3
+        s, p_total = _case_dims(b, page, pps, meta_max)
+        case = fused_round_case(rng, b=b, page=page, pps=pps,
+                                meta_max=meta_max, r=r, k=k)
+        kw = dict(meta_max=meta_max, interpret=True, n_buffers=n_buffers)
+        if crypto:
+            kw.update(keystream=case["keystream"],
+                      tx_keystream=case["tx_keystream"])
+        if policy:
+            kw.update(cond_off=case["cond_off"], cond_lo=case["cond_lo"],
+                      cond_hi=case["cond_hi"], live=case["live"])
+            if crypto:
+                kw.update(meta_ks=case["meta_ks"])
+        fn = functools.partial(fused_round, **kw)
+        args = (case["stream"], case["meta_len"], case["total_len"],
+                case["pool"], case["tables"])
+        pool_rows = p_total + 1
+        declared = (b * s + 2 * b + pool_rows * page + b * pps     # inputs
+                    + (b * s + b * pps * page if crypto else 0)    # rx+tx ks
+                    + (3 * r * k + r if policy else 0)             # conds+live
+                    + (b * meta_max if crypto and policy else 0)   # meta ks
+                    + b * meta_max + pool_rows * page              # meta, pool
+                    + b * pps * page                               # gather out
+                    + (b if policy else 0))                        # verdict
+        return fn, args, declared
+    return build
+
+
 KERNEL_ENTRIES: List[KernelEntry] = [
     KernelEntry("selective_copy[reserved]", _selcopy_entry(True, False)),
     KernelEntry("selective_copy[keystream]", _selcopy_entry(True, True)),
@@ -207,6 +269,17 @@ KERNEL_ENTRIES: List[KernelEntry] = [
     KernelEntry("policy_match[keystream]", _policy_entry(True, False)),
     KernelEntry("policy_match[live]", _policy_entry(False, True)),
     KernelEntry("policy_match[keystream+live]", _policy_entry(True, True)),
+    KernelEntry("policy_match[payload]", _policy_payload_entry(False, False)),
+    KernelEntry("policy_match[payload+keystream+live]",
+                _policy_payload_entry(True, True)),
+    # the one-kernel scheduling round: JAX001 == 1 here IS the 3-to-1
+    # launch collapse (anchor + crypt + match + gather in one pallas_call)
+    KernelEntry("fused_round", _fused_entry(False, False)),
+    KernelEntry("fused_round[policy]", _fused_entry(False, True)),
+    KernelEntry("fused_round[crypto]", _fused_entry(True, False)),
+    KernelEntry("fused_round[crypto+policy]", _fused_entry(True, True)),
+    KernelEntry("fused_round[crypto+policy+dma2]",
+                _fused_entry(True, True, n_buffers=2)),
 ]
 
 
@@ -275,7 +348,7 @@ def audit_donation() -> List[Finding]:
     buffer (otherwise two full pools stay live per round)."""
     import jax.numpy as jnp
     from repro.kernels import ops
-    from repro.kernels.testing import selcopy_case
+    from repro.kernels.testing import fused_round_case, selcopy_case
     rng = np.random.default_rng(11)
     stream, ml, tl, pool, tables = selcopy_case(rng)
     donated = jnp.array(np.array(pool))
@@ -287,6 +360,20 @@ def audit_donation() -> List[Finding]:
             "<jaxpr:selective_copy[donated]>", 0, "JAX005",
             "donate_pool=True did not consume the input pool buffer — "
             "donation is declared but not honored"))
+    case = fused_round_case(rng)
+    fused_pool = jnp.array(np.array(case["pool"]))
+    ops.fused_round(case["stream"], case["meta_len"], case["total_len"],
+                    fused_pool, case["tables"], meta_max=16, impl="ref",
+                    keystream=case["keystream"],
+                    tx_keystream=case["tx_keystream"],
+                    cond_off=case["cond_off"], cond_lo=case["cond_lo"],
+                    cond_hi=case["cond_hi"], live=case["live"],
+                    meta_ks=case["meta_ks"], donate_pool=True)
+    if not fused_pool.is_deleted():
+        findings.append(Finding(
+            "<jaxpr:fused_round[donated]>", 0, "JAX005",
+            "donate_pool=True did not consume the fused round's input pool "
+            "buffer — donation is declared but not honored"))
     return findings
 
 

@@ -59,6 +59,10 @@ class DevicePool(TokenPool):
         rows = self._flat.shape[0]
         self._host_dirty = np.zeros((rows,), bool)
         self._dev_dirty = np.zeros((rows,), bool)
+        # DMA staging ring depth for the fused one-kernel round (0 =
+        # blocked layout); set from kernels.dma_profile.auto_buffer_depth
+        # or the LIBRA_FUSED_BUFFERS env var by the deployment
+        self.fused_buffers = 0
 
     # -- residency -----------------------------------------------------------
     @property
@@ -216,6 +220,68 @@ class DevicePool(TokenPool):
         self._dev_dirty[rows] = True
         self.xfer["device_rounds"] += 1
         self.xfer["anchor_rounds"] += 1
+
+    def fused_round_device(
+        self, stream: np.ndarray, meta_len: np.ndarray,
+        total_len: np.ndarray, tables: np.ndarray, *, meta_max: int,
+        impl: str, keystream: Optional[np.ndarray] = None,
+        tx_keystream: Optional[np.ndarray] = None,
+        cond_off: Optional[np.ndarray] = None,
+        cond_lo: Optional[np.ndarray] = None,
+        cond_hi: Optional[np.ndarray] = None,
+        live: Optional[np.ndarray] = None,
+        meta_ks: Optional[np.ndarray] = None,
+        n_buffers: int = 0,
+    ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        """The **one-kernel scheduling round**: anchor + hw-kTLS keystream
+        XOR + policy first-match + egress gather in a SINGLE launch against
+        the resident pool — ``xfer['fused_rounds']`` counts exactly one
+        ``device_rounds`` bump where the multi-pass path pays three
+        (anchor + policy match + gather). Upload is O(batch) operands plus
+        any host-dirty rows the round overwrites; only the verdict column
+        and the gathered payload block come down. Touched rows become
+        device-truth, and the resident pool is donated through the outer
+        jit exactly like :meth:`anchor_batch_device`.
+
+        Returns ``(verdict [B] | None, gathered [B, pps*page] int64)`` —
+        the int64-exact metadata stays host-side (the caller already holds
+        it), and ``gathered`` is the round's speculative egress block
+        (TX-encrypted when ``tx_keystream`` is supplied)."""
+        from repro.kernels import ops
+
+        self._ensure_device()
+        rows = np.unique(tables[tables >= 0]).astype(np.int64)
+        self._upload_rows(rows)               # may raise DeviceRangeError
+        self.xfer["h2d_tokens"] += stream.size + tables.size \
+            + meta_len.size + total_len.size \
+            + sum(op.size for op in (keystream, tx_keystream, cond_off,
+                                     cond_lo, cond_hi, live, meta_ks)
+                  if op is not None)
+        donated_in = self._dev
+        new_meta, new_pool, verdict, gathered = ops.fused_round(
+            stream, meta_len, total_len, self._dev, tables,
+            meta_max=meta_max, impl=impl, keystream=keystream,
+            tx_keystream=tx_keystream, cond_off=cond_off, cond_lo=cond_lo,
+            cond_hi=cond_hi, live=live, meta_ks=meta_ks,
+            n_buffers=n_buffers, donate_pool=True)
+        del new_meta  # host buffers keep the int64-exact metadata
+        self._dev = new_pool
+        try:
+            if donated_in is not new_pool and donated_in.is_deleted():
+                self.xfer["donated_rounds"] += 1
+        except Exception:  # pragma: no cover - backend without the API
+            pass
+        self._dev_dirty[rows] = True
+        self.xfer["device_rounds"] += 1
+        self.xfer["anchor_rounds"] += 1
+        self.xfer["fused_rounds"] += 1
+        host_out = np.asarray(gathered)
+        self.xfer["d2h_tokens"] += host_out.size
+        host_verdict = None
+        if verdict is not None:
+            host_verdict = np.asarray(verdict)
+            self.xfer["d2h_tokens"] += host_verdict.size
+        return host_verdict, host_out.astype(np.int64)
 
     def gather_batch_device(self, tables: np.ndarray, lengths: np.ndarray, *,
                             impl: str,

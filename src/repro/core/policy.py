@@ -19,9 +19,16 @@ Match semantics (the contract shared by the kernel, the jnp oracle, the
 numpy fast path, and :meth:`PolicyTable.interpret` — the naive Python
 interpreter the property tests compare against):
 
-* a condition ``(offset, lo, hi)`` holds iff ``offset < meta_len`` and
-  ``lo <= meta[offset] <= hi`` (padding slots, ``offset == -1``, always
-  hold);
+* a condition ``(offset, lo, hi)`` with ``offset >= 0`` holds iff
+  ``offset < meta_len`` and ``lo <= meta[offset] <= hi`` (padding slots,
+  ``offset == -1``, always hold);
+* a *payload-prefix* condition — ``offset <= -2``, encoding position
+  ``-offset - 2`` of the message's **first anchored page** (built with
+  :func:`payload_at` / :func:`payload_prefix`) — holds iff that position
+  is inside both the page window and the payload and the *plaintext*
+  payload token is in ``[lo, hi]``. The fused device round evaluates it
+  directly against the page tokens it is anchoring (still in registers);
+  the host paths peek the first page window;
 * a rule matches iff all its conditions hold;
 * the verdict row is the FIRST matching rule (rule order is priority);
   ``R`` (the row count) is the no-match sentinel.
@@ -82,6 +89,13 @@ PUNT_UNHEALTHY = "unhealthy"
 
 #: HealthTable backend states
 HEALTHY, UNHEALTHY, HALF_OPEN = range(3)
+
+#: condition-offset encoding shared with the device plane
+#: (repro.kernels.selective_copy.PAD_COND / PAYLOAD_COND_BASE): ``-1`` is
+#: the dense-array padding slot; ``offset <= -2`` encodes first-anchored-
+#: page position ``-offset - 2``
+PAD_COND = -1
+PAYLOAD_COND_BASE = -2
 
 
 class HealthTable:
@@ -190,14 +204,23 @@ class HealthTable:
 
 @dataclasses.dataclass(frozen=True)
 class MatchCond:
-    """``lo <= meta[offset] <= hi`` (and ``offset < meta_len``)."""
+    """``lo <= meta[offset] <= hi`` (and ``offset < meta_len``) for
+    ``offset >= 0``; ``offset <= -2`` matches first-anchored-page position
+    ``-offset - 2`` instead (see :func:`payload_at`)."""
     offset: int
     lo: int
     hi: int
 
     def __post_init__(self):
-        assert self.offset >= 0, "condition offsets are metadata positions"
+        assert self.offset != PAD_COND, \
+            "-1 is the dense padding slot, not a condition offset"
         assert self.lo <= self.hi, (self.lo, self.hi)
+
+    @property
+    def payload_pos(self) -> int:
+        """Payload position for a payload-prefix condition, ``-1`` for a
+        metadata condition."""
+        return PAYLOAD_COND_BASE - self.offset if self.offset < 0 else -1
 
 
 def eq(offset: int, value: int) -> MatchCond:
@@ -213,6 +236,20 @@ def between(offset: int, lo: int, hi: int) -> MatchCond:
 def prefix(*values: int) -> Tuple[MatchCond, ...]:
     """Header-prefix matcher: tokens 0..n-1 must equal ``values``."""
     return tuple(eq(i, v) for i, v in enumerate(values))
+
+
+def payload_at(pos: int, lo: int, hi: int) -> MatchCond:
+    """Inclusive byte-range matcher on *payload* position ``pos`` of the
+    message's first anchored page (plaintext). Only positions inside the
+    first page can match — the window the data plane has in registers."""
+    assert pos >= 0, pos
+    return MatchCond(PAYLOAD_COND_BASE - pos, lo, hi)
+
+
+def payload_prefix(*values: int) -> Tuple[MatchCond, ...]:
+    """Payload-prefix matcher: payload tokens 0..n-1 must equal
+    ``values`` (the L7 'first bytes of the body' classifier)."""
+    return tuple(payload_at(i, v, v) for i, v in enumerate(values))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -373,6 +410,13 @@ class PolicyTable:
     def n_rules(self) -> int:
         return len(self.rules)
 
+    @property
+    def has_payload_conds(self) -> bool:
+        """True iff any rule peeks the payload — callers only build (and
+        ship) first-page windows when this is set, so metadata-only tables
+        keep their exact pre-payload operand shapes."""
+        return bool((self.cond_off <= PAYLOAD_COND_BASE).any())
+
     def clone(self) -> "PolicyTable":
         """Same rules, fresh buckets/stats (per-worker tables). The
         :class:`HealthTable` instance is SHARED — backend health is a
@@ -393,7 +437,7 @@ class PolicyTable:
             conds = tuple(
                 MatchCond(int(cond_off[i, j]), int(cond_lo[i, j]),
                           int(cond_hi[i, j]))
-                for j in range(cond_off.shape[1]) if cond_off[i, j] >= 0)
+                for j in range(cond_off.shape[1]) if cond_off[i, j] != -1)
             kind = int(act_kind[i])
             if kind == ACT_FORWARD:
                 a = Action(kind, backend=int(act_a[i]),
@@ -441,36 +485,63 @@ class PolicyTable:
         return live.astype(np.int32)
 
     def interpret(self, meta: np.ndarray, meta_len: int,
-                  live: Optional[np.ndarray] = None) -> int:
+                  live: Optional[np.ndarray] = None,
+                  payload: Optional[np.ndarray] = None,
+                  payload_len: int = 0) -> int:
         """Naive Python interpreter of the rows — the oracle the vectorized
         pass (and the kernel) must agree with. Returns the first matching
         row, or ``n_rules``. ``live`` (the :meth:`rule_live` column) skips
-        dead rows exactly as the vectorized paths do."""
+        dead rows exactly as the vectorized paths do. ``payload`` is the
+        plaintext first-page window (payload-prefix conditions never hold
+        without one)."""
         for i, ru in enumerate(self.rules):
             if live is not None and not live[i]:
                 continue
-            if all(c.offset < meta_len and c.lo <= int(meta[c.offset]) <= c.hi
+            if all(self._cond_holds(c, meta, meta_len, payload, payload_len)
                    for c in ru.conds):
                 return i
         return self.n_rules
 
+    @staticmethod
+    def _cond_holds(c: MatchCond, meta, meta_len: int, payload,
+                    payload_len: int) -> bool:
+        if c.offset >= 0:
+            return c.offset < meta_len and c.lo <= int(meta[c.offset]) <= c.hi
+        pos = c.payload_pos
+        return (payload is not None and pos < payload_len
+                and pos < len(payload)
+                and c.lo <= int(payload[pos]) <= c.hi)
+
     def match_rows(self, metas: np.ndarray, meta_lens: np.ndarray,
                    keystreams: Optional[np.ndarray] = None,
-                   live: Optional[np.ndarray] = None) -> np.ndarray:
+                   live: Optional[np.ndarray] = None,
+                   payload: Optional[np.ndarray] = None,
+                   payload_lens: Optional[np.ndarray] = None) -> np.ndarray:
         """Vectorized numpy first-match over a round: ``metas`` [B, M]
         (int64-exact host truth), ``meta_lens`` [B] → [B] row indices.
         ``keystreams`` (same shape, 0 where plaintext) is XORed in first —
         matching against *decrypted* metadata without a separate pass.
-        ``live`` ([R] int32) masks out rules whose backends are down."""
+        ``live`` ([R] int32) masks out rules whose backends are down.
+        ``payload`` ([B, W] plaintext first-page windows, with
+        ``payload_lens``) serves payload-prefix conditions."""
         m = metas if keystreams is None else np.bitwise_xor(
             metas, keystreams.astype(metas.dtype))
         mm = m.shape[1]
         off = self.cond_off.astype(np.int64)                 # [R, K]
         vals = m[:, np.clip(off, 0, mm - 1)]                 # [B, R, K]
-        pad = off < 0
-        present = (~pad) & (off < meta_lens[:, None, None]) & (off < mm)
+        pad = off == PAD_COND
+        present = (off >= 0) & (off < meta_lens[:, None, None]) & (off < mm)
         ok = pad[None] | (present & (vals >= self.cond_lo) &
                           (vals <= self.cond_hi))
+        if payload is not None:
+            w = payload.shape[1]
+            ppos = PAYLOAD_COND_BASE - off                   # [R, K]
+            pvals = payload[:, np.clip(ppos, 0, w - 1)]      # [B, R, K]
+            pay_ok = (off <= PAYLOAD_COND_BASE)[None] \
+                & (ppos[None] < payload_lens[:, None, None]) \
+                & (ppos < w)[None] \
+                & (pvals >= self.cond_lo) & (pvals <= self.cond_hi)
+            ok = ok | pay_ok
         rule_ok = ok.all(axis=2)                             # [B, R]
         if live is not None:
             rule_ok &= live[None, :] > 0
@@ -479,30 +550,42 @@ class PolicyTable:
 
     def match_batch(self, metas: np.ndarray, meta_lens: np.ndarray, *,
                     keystreams: Optional[np.ndarray] = None,
-                    impl: str = "host") -> np.ndarray:
+                    impl: str = "host",
+                    payload: Optional[np.ndarray] = None,
+                    payload_lens: Optional[np.ndarray] = None) -> np.ndarray:
         """One vectorized match pass for a whole batched round.
         ``impl='host'`` is the int64-exact numpy path; anything else goes
         through :func:`repro.kernels.ops.policy_match` (the fused kernel /
         its jnp oracle) on the int32 device plane — rounds whose tokens do
         not survive int32 bounce back to the numpy path (the same rule as
         the anchoring pass). The :meth:`rule_live` health column rides
-        along as an extra dense operand on every path."""
+        along as an extra dense operand on every path, as does the
+        plaintext first-page ``payload`` window when the table has
+        payload-prefix conditions."""
         self.stats["rounds"] += 1
         live = self.rule_live()
         if impl != "host":
-            lo, hi = int(metas.min(initial=0)), int(metas.max(initial=0))
-            if -(1 << 31) <= lo and hi < (1 << 31):
+            vals = [int(metas.min(initial=0)), int(metas.max(initial=0))]
+            if payload is not None and payload.size:
+                vals += [int(payload.min()), int(payload.max())]
+            if -(1 << 31) <= min(vals) and max(vals) < (1 << 31):
                 from repro.kernels import ops
 
                 ks = (None if keystreams is None
                       else np.asarray(keystreams, np.int32))
+                pw = (None if payload is None
+                      else np.asarray(payload, np.int32))
+                pln = (None if payload_lens is None
+                       else np.asarray(payload_lens, np.int32))
                 rids = ops.policy_match(
                     np.asarray(metas, np.int32),
                     np.asarray(meta_lens, np.int32),
                     self.cond_off, self.cond_lo, self.cond_hi,
-                    impl=impl, keystream=ks, live=live)
+                    impl=impl, keystream=ks, live=live,
+                    payload=pw, payload_len=pln)
                 return np.asarray(rids, np.int32)
-        return self.match_rows(metas, meta_lens, keystreams, live)
+        return self.match_rows(metas, meta_lens, keystreams, live,
+                               payload=payload, payload_lens=payload_lens)
 
     # -- action resolution (host-side, stateful) ---------------------------
     def _bucket_debit(self, row: int, key: int, now: int) -> bool:
@@ -595,11 +678,15 @@ class PolicyTable:
                 for i, rid in enumerate(rids)]
 
     def decide(self, buf: np.ndarray, *, parser, crypto: bool = False,
-               now: int = 0, counters=None) -> Verdict:
+               now: int = 0, counters=None,
+               payload: Optional[np.ndarray] = None,
+               payload_len: int = 0) -> Verdict:
         """Scalar-path verdict for one delivered message (``[meta...,
         VPI]`` or a full copy): parse for the metadata boundary, run the
         naive interpreter, resolve. Unparseable frames PUNT
-        (``malformed``)."""
+        (``malformed``). ``payload``/``payload_len`` is the plaintext
+        first-page window for payload-prefix conditions (callers peek it
+        only when :attr:`has_payload_conds`)."""
         buf = np.asarray(buf)
         res = parser.parse(buf)
         if not res.ok or res.meta_len > len(buf):
@@ -607,7 +694,8 @@ class PolicyTable:
             return Verdict("punt", rule=self.n_rules, reason=PUNT_MALFORMED,
                            epoch=self.epoch)
         self.stats["rounds"] += 1
-        rid = self.interpret(buf, res.meta_len, self.rule_live())
+        rid = self.interpret(buf, res.meta_len, self.rule_live(),
+                             payload=payload, payload_len=payload_len)
         return self._resolve_one(rid, buf, res.meta_len, crypto, now,
                                  counters)
 
@@ -656,13 +744,16 @@ class PythonPolicyRouter:
     """
 
     def __init__(self, table: PolicyTable, dsts: Sequence, *, parser,
-                 crypto: bool = False, stack=None,
+                 crypto: bool = False, stack=None, src=None,
                  punt_router=None, punt_rewrite=None):
         self.table = table
         self.dsts = list(dsts)
         self.parser = parser
         self.crypto = crypto
         self.stack = stack
+        # the channel's source socket — needed (with ``stack``) to peek the
+        # anchored first-page window when the table has payload conditions
+        self.src = src
         self.punt_router = punt_router
         self.punt_rewrite = punt_rewrite
         self._verdict: Optional[Verdict] = None
@@ -671,8 +762,13 @@ class PythonPolicyRouter:
         return self.stack.now_tick if self.stack is not None else 0
 
     def rewrite(self, buf: np.ndarray, logical: int) -> np.ndarray:
+        payload, plen = None, 0
+        if self.table.has_payload_conds and self.stack is not None \
+                and self.src is not None:
+            payload, plen = self.stack._policy_window(buf, self.src)
         v = self.table.decide(buf, parser=self.parser, crypto=self.crypto,
-                              now=self._now())
+                              now=self._now(), payload=payload,
+                              payload_len=plen)
         if v.kind == "forward" and v.backend >= len(self.dsts):
             v = Verdict("punt", rule=v.rule, reason=PUNT_BAD_BACKEND)
         self._verdict = v

@@ -356,12 +356,18 @@ class ProxyChannel:
             v, self._pending_verdict = self._pending_verdict, None
             if v is None:
                 # scalar quantum (or batched fallback): same table, Python
-                # resolution — the slow path the offload keeps
+                # resolution — the slow path the offload keeps. Payload-
+                # prefix conditions peek the anchored first page through
+                # the host mirror, matching the fused kernel's window.
                 st = self.src.stack
+                payload, plen = (None, 0)
+                if getattr(self.policy, "has_payload_conds", False):
+                    payload, plen = st._policy_window(buf, self.src)
                 v = self.policy.decide(
                     buf, parser=self.src.parser,
                     crypto=self.src.connection.crypto is not None,
-                    now=st.now_tick, counters=st.counters)
+                    now=st.now_tick, counters=st.counters,
+                    payload=payload, payload_len=plen)
             intent = self._apply_verdict(v, buf, logical)
             if intent is not _PUNT:
                 return intent
@@ -606,7 +612,9 @@ class ProxyRuntime:
         self.quantum_bytes = quantum_bytes
         self.tick_every = tick_every
         self.batched = batched
-        self.batch_impl = batch_impl   # recv_batch/forward_batch data plane
+        # recv_batch/forward_batch data plane ('host', a kernel impl, or
+        # 'fused-round[:impl]' for one-kernel scheduling rounds)
+        self.batch_impl = batch_impl
         # channels fused per recv/forward pass: one round is processed in
         # tiles so a tile's anchored pages are transmitted while still
         # cache-hot. None (default) = adaptive — the tile is sized each
@@ -792,11 +800,18 @@ class ProxyRuntime:
         pol = self.policy
         if pol is not None and not all(ch.policy is pol for ch in batch):
             pol = None
+        # fused one-kernel rounds speculate each flow's egress: hint the
+        # primary destination so the fused gather TX-encrypts in the same
+        # launch (forward_batch validates the guess — policy reroutes and
+        # failovers simply miss the cache and pay the classic gather)
+        hints = None
+        if self.batch_impl.startswith("fused-round"):
+            hints = {ch.src.fileno(): ch.dsts[0] for ch in batch if ch.dsts}
         t0 = time.perf_counter()
         results = self.stack.recv_batch(
             [ch.src for ch in batch],
             {ch.src.fileno(): ch.recv_buf for ch in batch},
-            impl=self.batch_impl, policy=pol)
+            impl=self.batch_impl, policy=pol, tx_hints=hints)
         # data-plane time only: scalar fallbacks below record their own
         # quanta and must not inflate the batched channels' share
         dp_elapsed = time.perf_counter() - t0

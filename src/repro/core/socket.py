@@ -96,6 +96,10 @@ class LibraSocket:
         # message this socket delivered in the round; the runtime pops it
         # into the owning channel so routing skips the per-channel callbacks
         self._policy_verdict = None
+        # set by the one-kernel fused round: the speculative TX descriptor
+        # (gather output + hw-kTLS keystream spans) for the message this
+        # socket delivered; forward_batch validates and consumes it
+        self._fused_tx = None
 
     # -- identity / state ---------------------------------------------------
     def fileno(self) -> int:

@@ -44,6 +44,13 @@ ParserLike = Union[str, ParserPolicy]
 SEND_OK = "ok"
 SEND_EAGAIN = "eagain"
 
+#: below this many rows a batched gather skips the device plane: the
+#: per-launch overhead exceeds the copy cost of a handful of pages, and
+#: the host gather reads the same bytes (device-truth rows materialize
+#: row-wise). This is what keeps the fused round's rare speculation-miss
+#: gathers (typically 1-3 rows) from costing a full extra launch.
+_SMALL_GATHER_ROWS = 4
+
 
 @dataclasses.dataclass
 class _BatchItem:
@@ -63,12 +70,29 @@ class _BatchItem:
     # other crypto operands (host rounds match the plaintext directly)
     cmeta: np.ndarray = None
     meta_ks: np.ndarray = None
+    # one-kernel round speculation: the forward-time cache descriptor the
+    # fused gather output lands in (parked on the socket after the VPI is
+    # registered; forward_batch validates the guess before consuming it)
+    fused_tx: dict = None
 
 
 def _fits_int32(a: np.ndarray) -> bool:
     """True when every token survives the int32 device stream round-trip."""
     return len(a) == 0 or (int(a.min()) >= -(1 << 31)
                            and int(a.max()) < (1 << 31))
+
+
+def _fused_base(impl: str) -> Optional[str]:
+    """The device impl underlying a fused-round dispatch string:
+    ``'fused-round'`` -> ``'auto'``, ``'fused-round:ref'`` -> ``'ref'``
+    (same for ``:interpret``/``:pallas``); ``None`` for a non-fused impl.
+    The base impl also serves ineligible/bounced rounds through the
+    classic three-launch path."""
+    if impl == "fused-round":
+        return "auto"
+    if impl.startswith("fused-round:"):
+        return impl.split(":", 1)[1]
+    return None
 
 
 class LibraStack:
@@ -208,6 +232,7 @@ class LibraStack:
         *,
         impl: str = "host",
         policy=None,
+        tx_hints: Optional[Dict[int, LibraSocket]] = None,
     ) -> Dict[int, Tuple[np.ndarray, int]]:
         """Batched instrumented recvmsg (§3.3) across many sockets.
 
@@ -230,6 +255,21 @@ class LibraStack:
         nothing syncs back (rows materialize lazily for scalar readers);
         the legacy host pool (``device_pool=False``) pays one whole-pool
         bounce per round (``pool.xfer['pool_syncs']``).
+
+        ``impl='fused-round'`` (or ``'fused-round:ref'`` /
+        ``':interpret'`` / ``':pallas'`` to pin the backend) runs the
+        whole round as ONE device launch — anchoring, hw-kTLS decrypt, the
+        L7 first-match AND the egress gather fused into a single kernel
+        against the resident pool (``pool.xfer['fused_rounds']``), instead
+        of the three launches the multi-pass path costs. ``tx_hints``
+        (src fd -> likely destination socket) lets the fused round
+        speculatively TX-encrypt the gather output for hw-kTLS
+        destinations; ``forward_batch`` validates each guess and consumes
+        the prefetched payload (``pool.xfer['tx_spec_hits']``), falling
+        back to its own gather on a miss. Ineligible or bounced rounds
+        (host pool, int64-only tokens, non-contiguous pages,
+        DeviceRangeError) are served by the classic multi-pass path on the
+        underlying impl and counted as ``device_fallbacks``.
 
         ``policy`` (a :class:`~repro.core.policy.PolicyTable`) fuses the
         L7 routing decision into this same metadata pass: ONE vectorized
@@ -300,15 +340,16 @@ class LibraStack:
         round_owned = {id(pl): pl for pl in page_lists if pl is not None}
         try:
             return self._recv_batch_round(cands, page_lists, round_owned,
-                                          policy, impl)
+                                          policy, impl, tx_hints)
         except BaseException:
             if round_owned:
                 with plane_lock(self.alloc):
                     self.alloc.free_batch(list(round_owned.values()))
             raise
 
-    def _recv_batch_round(self, cands, page_lists, round_owned,
-                          policy, impl) -> Dict[int, Tuple[np.ndarray, int]]:
+    def _recv_batch_round(self, cands, page_lists, round_owned, policy,
+                          impl, tx_hints=None
+                          ) -> Dict[int, Tuple[np.ndarray, int]]:
         items: List[_BatchItem] = []
         leaked: List[List[PageRef]] = []
         for (sock, parsed, bl), pages in zip(cands, page_lists):
@@ -401,6 +442,16 @@ class LibraStack:
                 if not items:
                     return {}
 
+        # -- one-kernel round: anchor + decrypt + match + gather, 1 launch --
+        base = _fused_base(impl)
+        if base is not None:
+            if self._recv_batch_fused(items, policy, base, tx_hints):
+                return self._recv_batch_scatter(items, round_owned)
+            # not device-eligible (or bounced): the classic three-launch
+            # path serves the round on the same underlying impl
+            self.counters.device_fallbacks += 1
+            impl = base
+
         # -- L7 policy: ONE vectorized match pass for the round -------------
         if policy is not None:
             self._policy_match_round(items, policy, impl)
@@ -426,7 +477,13 @@ class LibraStack:
                 keystreams=[None if it.plain is not None else it.ks
                             for it in items])
 
-        # -- scatter back through per-socket bookkeeping --------------------
+        return self._recv_batch_scatter(items, round_owned)
+
+    def _recv_batch_scatter(self, items: List[_BatchItem], round_owned
+                            ) -> Dict[int, Tuple[np.ndarray, int]]:
+        """The round's per-socket bookkeeping tail, shared by the fused and
+        multi-pass data planes: register each anchor, advance the RX
+        machine, and hand back the ``[meta..., VPI]`` user buffers."""
         results: Dict[int, Tuple[np.ndarray, int]] = {}
         for it in items:
             conn = it.sock.connection
@@ -451,6 +508,12 @@ class LibraStack:
             logical = it.meta_len + it.payload_len
             sm.on_payload_consumed(it.payload_len)
             self._note_anchor_owner(it.sock)
+            # park (or clear) the fused round's speculative TX descriptor:
+            # unconditional, so a stale guess from an earlier round can
+            # never alias a recycled VPI
+            if it.fused_tx is not None:
+                it.fused_tx["vpi"] = vpi
+            it.sock._fused_tx = it.fused_tx
             results[it.sock.fileno()] = (buf, logical)
         return results
 
@@ -463,16 +526,18 @@ class LibraStack:
         its socket for the runtime to consume. Device impls match hw-kTLS
         rows as ciphertext + keystream (the kernel's fused decrypt); the
         host impl matches the plaintext the crypt sweep already produced —
-        the verdicts are identical either way."""
-        mm = max(it.meta_len for it in items)
+        the verdicts are identical either way. Payload-prefix conditions
+        get the plaintext first-page window (built only when the table has
+        any — metadata-only tables keep their exact operand shapes)."""
+        pmetas, mlens = self._round_meta_block(items)
         b = len(items)
-        pmetas = np.zeros((b, mm), np.int64)
-        mlens = np.empty((b,), np.int32)
-        for i, it in enumerate(items):
-            pmetas[i, : it.meta_len] = it.meta
-            mlens[i] = it.meta_len
+        mm = pmetas.shape[1]
+        pw = plens = None
+        if getattr(policy, "has_payload_conds", False):
+            pw, plens = self._round_payload_windows(items)
         if impl == "host":
-            rids = policy.match_batch(pmetas, mlens)
+            rids = policy.match_batch(pmetas, mlens, payload=pw,
+                                      payload_lens=plens)
         else:
             cmetas = pmetas
             ksm = None
@@ -484,13 +549,79 @@ class LibraStack:
                         cmetas[i, : it.meta_len] = it.cmeta
                         ksm[i, REC_HEADER : it.meta_len] = it.meta_ks
             rids = policy.match_batch(cmetas, mlens, keystreams=ksm,
-                                      impl=impl)
+                                      impl=impl, payload=pw,
+                                      payload_lens=plens)
+            # launch accounting for the 3-vs-1 claim: a device-impl
+            # multi-pass round dispatches its match as its own launch
+            self.pool.xfer["policy_match_rounds"] += 1
+        self._park_verdicts(items, policy, rids, pmetas, mlens)
+
+    def _round_meta_block(self, items: List[_BatchItem]):
+        """The round's plaintext metadata flattened to [B, M] int64 (+ [B]
+        lengths) — the block both match paths and verdict resolution share."""
+        mm = max(it.meta_len for it in items)
+        b = len(items)
+        pmetas = np.zeros((b, mm), np.int64)
+        mlens = np.empty((b,), np.int32)
+        for i, it in enumerate(items):
+            pmetas[i, : it.meta_len] = it.meta
+            mlens[i] = it.meta_len
+        return pmetas, mlens
+
+    def _round_payload_windows(self, items: List[_BatchItem]):
+        """[B, page] plaintext first-page windows + [B] payload lengths for
+        payload-prefix policy conditions — the host mirror of the window
+        the fused kernel matches while the page is still in registers."""
+        page = self.alloc.page_size
+        pw = np.zeros((len(items), page), np.int64)
+        plens = np.empty((len(items),), np.int32)
+        for i, it in enumerate(items):
+            src = it.plain if it.plain is not None else it.payload
+            w = min(page, it.payload_len)
+            pw[i, :w] = src[:w]
+            plens[i] = it.payload_len
+        return pw, plens
+
+    def _park_verdicts(self, items: List[_BatchItem], policy, rids,
+                       pmetas, mlens) -> None:
+        """Resolve a round's matched rows host-side (token buckets debit in
+        round order) and park each verdict on its socket for the runtime."""
         verdicts = policy.resolve(
             rids, pmetas, mlens,
             crypto=[it.sock.connection.crypto is not None for it in items],
             now=self.now_tick, counters=self.counters)
         for it, v in zip(items, verdicts):
             it.sock._policy_verdict = v
+
+    def _policy_window(self, buf: np.ndarray, sock: LibraSocket
+                       ) -> Tuple[Optional[np.ndarray], int]:
+        """The plaintext first-page payload window of one delivered message
+        (``[meta..., VPI]`` or a full copy), for scalar payload-prefix
+        policy decisions — the host mirror of the window the fused kernel
+        matches in registers. Anchored messages peek the pool (which holds
+        plaintext in every kTLS mode — ingress decrypts before anchoring);
+        full copies slice the inline buffer. Returns ``(window,
+        payload_len)``, ``(None, 0)`` when there is nothing to peek."""
+        page = self.alloc.page_size
+        buf64 = np.asarray(buf, np.int64)
+        _meta_len, _vpi, entry, res = sock._peek_message(buf64)
+        if entry is not None:
+            w = min(page, entry.payload_len)
+            if w <= 0:
+                return None, 0
+            if entry.stash is not None:
+                win = np.asarray(entry.stash, np.int64)[:w]
+            else:
+                pages = [PageRef(*pg) for pg in entry.pages]
+                win = self.pool_for_entry(entry).read_payload(pages[:1], w)
+            return win, entry.payload_len
+        if res.ok and res.payload_len > 0:
+            avail = min(res.payload_len, max(len(buf64) - res.meta_len, 0))
+            w = min(page, avail)
+            if w <= 0:
+                return None, 0
+            return buf64[res.meta_len : res.meta_len + w], avail
+        return None, 0
 
     def drop_message(self, msg: np.ndarray, sock: LibraSocket) -> bool:
         """Policy ``DROP``: consume a delivered ``[meta..., VPI]`` message
@@ -542,6 +673,124 @@ class LibraStack:
             return True
         finally:
             reset_rx_from_tx(sock.connection)
+
+    def _recv_batch_fused(self, items: List[_BatchItem], policy, impl: str,
+                          tx_hints) -> bool:
+        """The one-kernel scheduling round: flatten the round into the same
+        [B, S] operands as :meth:`_recv_batch_device` and run
+        :meth:`DevicePool.fused_round_device` ONCE — payload anchoring,
+        hw-kTLS RX decrypt, the L7 first-match (payload-prefix conditions
+        evaluated against the page tokens still in registers) and the
+        egress gather all in a single device launch, instead of the three
+        the multi-pass path costs. The gather output is parked per message
+        in a :attr:`_BatchItem.fused_tx` descriptor (the scatter tail moves
+        it onto the socket once the VPI exists): a speculative TX —
+        ``tx_hints`` names each flow's likely destination so hw-kTLS TX
+        encryption is fused in too, and ``forward_batch`` validates the
+        guess before consuming it. Returns False when the round is not
+        device-eligible (host pool, int64-only tokens, non-contiguous page
+        lists) or bounced (DeviceRangeError) — the caller then serves it
+        through the classic three-launch path."""
+        if not isinstance(self.pool, DevicePool):
+            return False
+        page = self.alloc.page_size
+        for it in items:
+            if not (_fits_int32(it.meta) and _fits_int32(it.payload)):
+                return False
+            if any(pg.base_pos != j * page
+                   for j, pg in enumerate(it.pages)):
+                # the in-register gather addresses payload position
+                # [j*page, (j+1)*page) through table slot j — only the
+                # allocator's contiguous layout qualifies
+                return False
+        b = len(items)
+        pps = max(max(len(it.pages) for it in items), 1)
+        meta_max = max(max(it.meta_len for it in items), 1)
+        s = max(it.meta_len + len(it.pages) * page for it in items)
+        s = max(-(-max(s, meta_max) // page) * page, page)
+        stream = np.zeros((b, s), np.int32)
+        meta_len = np.zeros((b,), np.int32)
+        total_len = np.zeros((b,), np.int32)
+        tables = np.full((b, pps), -1, np.int32)
+        ks = np.zeros((b, s), np.int32) if any(
+            it.ks is not None for it in items) else None
+        for i, it in enumerate(items):
+            msg = it.meta_len + it.payload_len
+            stream[i, : it.meta_len] = it.meta
+            stream[i, it.meta_len : msg] = it.payload
+            meta_len[i] = it.meta_len
+            total_len[i] = msg
+            if it.ks is not None:
+                ks[i, it.meta_len : msg] = it.ks
+            for j, pg in enumerate(it.pages):
+                tables[i, j] = self.alloc.flat_pid(pg)
+        txks = self._speculate_tx(items, tx_hints, pps * page)
+        off = lo = hi = live = None
+        if policy is not None:
+            off, lo, hi = policy.cond_off, policy.cond_lo, policy.cond_hi
+            live = policy.rule_live()
+        try:
+            verdict, gathered = self.pool.fused_round_device(
+                stream, meta_len, total_len, tables, meta_max=meta_max,
+                impl=impl, keystream=ks, tx_keystream=txks,
+                cond_off=off, cond_lo=lo, cond_hi=hi, live=live,
+                n_buffers=getattr(self.pool, "fused_buffers", 0))
+        except DeviceRangeError:
+            return False
+        if policy is not None:
+            # the fused launch IS this round's match pass; resolution stays
+            # host-side exactly as in _policy_match_round
+            policy.stats["rounds"] += 1
+            pmetas, mlens = self._round_meta_block(items)
+            self._park_verdicts(items, policy, verdict, pmetas, mlens)
+        for i, it in enumerate(items):
+            if it.fused_tx is not None:
+                it.fused_tx["payload"] = gathered[i, : it.payload_len]
+        return True
+
+    def _speculate_tx(self, items: List[_BatchItem], tx_hints,
+                      width: int) -> Optional[np.ndarray]:
+        """Speculative TX operands for the fused round: each message whose
+        likely destination (``tx_hints``: src fd -> socket) is known gets a
+        forward-time cache descriptor on its :class:`_BatchItem`; hw-kTLS
+        destinations additionally contribute rows to the returned
+        [B, width] TX-keystream operand (ONE vectorized sweep, exactly the
+        forward_batch schedule) so the fused gather emits ciphertext and
+        the metadata span is stashed for seal_meta at forward time. Wrong
+        guesses cost nothing — forward_batch validates the descriptor and
+        falls back to its own gather."""
+        txks = None
+        enc: List[Tuple[int, object, int, int]] = []
+        for i, it in enumerate(items):
+            dst = tx_hints.get(it.sock.fileno()) if tx_hints else None
+            if dst is None or dst.closed:
+                continue
+            crypto = dst.connection.crypto
+            if crypto is None:
+                it.fused_tx = {"dst_fd": dst.fileno(), "crypto": None,
+                               "plen": it.payload_len, "seq": None,
+                               "meta_ks": None, "payload": None}
+            elif crypto.mode == "hw" and it.ks is not None:
+                # encrypted record toward an hw session: the record seq
+                # rides the header (slot 1), so the whole TX keystream is
+                # computable before the destination ever sees the message
+                enc.append((i, crypto, int(it.meta[1]),
+                            it.meta_len - REC_HEADER))
+            # sw destinations: scalar encrypt-and-copy, never speculated
+        if enc:
+            kss = keystream_batch(
+                [crypto.tx_key for _, crypto, _, _ in enc],
+                [seq for _, _, seq, _ in enc],
+                [imeta + items[i].payload_len for i, _, _, imeta in enc])
+            txks = np.zeros((len(items), width), np.int32)
+            for (i, crypto, seq, imeta), ksr in zip(enc, kss):
+                it = items[i]
+                txks[i, : it.payload_len] = ksr[imeta:]
+                it.fused_tx = {
+                    "dst_fd": tx_hints[it.sock.fileno()].fileno(),
+                    "crypto": crypto, "plen": it.payload_len, "seq": seq,
+                    "meta_ks": ksr[:imeta], "payload": None}
+        return txks
 
     def _recv_batch_device(self, items: List[_BatchItem], impl: str) -> bool:
         """Flatten the round into one [B, S] batch and run the fused
@@ -608,6 +857,12 @@ class LibraStack:
         the batched gather (NIC-inline encrypt, still one pass); sw-mode
         destinations are excluded from the prefetch — their encrypt pass
         runs per message inside the scalar transmit (the §B.1 penalty).
+        Messages a fused recv round already gathered
+        (``recv_batch(impl='fused-round', tx_hints=...)``) skip even that
+        single launch: the speculative descriptor parked on the source
+        socket is validated (same VPI, destination session and payload
+        length, plain local anchor) and consumed directly
+        (``pool.xfer['tx_spec_hits']``); misses fall back to the gather.
 
         Cross-worker sends work here too: a VPI that does not resolve on
         the destination's stack is adopted through the cluster interconnect
@@ -616,6 +871,11 @@ class LibraStack:
         pool that owns each entry's pages — a grant's payload is gathered
         straight off the owning worker's (device-resident) pool."""
         sends = list(sends)
+        # under one-kernel rounds, sends the fused recv did not speculate
+        # (or whose guess missed) gather on the same underlying device impl
+        base = _fused_base(impl)
+        if base is not None:
+            impl = base
         prefetch: List[Optional[np.ndarray]] = [None] * len(sends)
         peeks: List[Optional[Tuple]] = [None] * len(sends)
         # (send slot, entry, (pages, len), ksinfo) per prefetch-eligible send
@@ -642,6 +902,26 @@ class LibraStack:
             crypto = dst.connection.crypto
             if crypto is not None and crypto.mode == "sw":
                 continue  # software record layer: scalar encrypt-and-copy
+            spec = getattr(src, "_fused_tx", None) if src is not None \
+                else None
+            if spec is not None and spec.get("vpi") == peek[1]:
+                # the fused round speculated this send: its gather output
+                # (TX-encrypted for an hw destination) is already in hand.
+                # Validate the guess — right destination session, same
+                # payload, a plain local anchor — and skip the gather; a
+                # miss just falls through to the classic path below.
+                src._fused_tx = None
+                if spec["payload"] is not None \
+                        and spec["dst_fd"] == dst.fileno() \
+                        and spec["crypto"] is crypto \
+                        and spec["plen"] == entry.payload_len \
+                        and entry.stash is None and entry.grant is None:
+                    if spec["meta_ks"] is not None:
+                        crypto.stash_tx_meta_ks(spec["seq"],
+                                                spec["meta_ks"])
+                    prefetch[k] = np.asarray(spec["payload"], np.int64)
+                    self.pool.xfer["tx_spec_hits"] += 1
+                    continue
             ksinfo = None
             if crypto is not None:
                 # hw-kTLS: (session, seq, inner-meta length) — the whole
@@ -719,7 +999,8 @@ class LibraStack:
         worker's, for cross-worker grant entries); default = our own."""
         pool = self.pool if pool is None else pool
         page = pool.alloc.page_size
-        if impl != "host" and isinstance(pool, DevicePool) and all(
+        if impl != "host" and isinstance(pool, DevicePool) \
+                and len(seqs) > _SMALL_GATHER_ROWS and all(
                 all(pg.base_pos == j * page for j, pg in enumerate(pages))
                 for pages, _ in seqs):
             # the kernel addresses payload position [j*page, (j+1)*page)

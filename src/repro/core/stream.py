@@ -146,7 +146,20 @@ class TokenPool:
                                      # on backends that honour donation
                                      # (CPU/TPU do)
                                      "anchor_rounds": 0,
-                                     "donated_rounds": 0}
+                                     "donated_rounds": 0,
+                                     # one-kernel rounds: fused_rounds
+                                     # counts single-launch scheduling
+                                     # rounds (anchor + crypto + policy +
+                                     # gather in ONE device_rounds bump);
+                                     # policy_match_rounds counts the
+                                     # standalone device match launches
+                                     # the fused path eliminates
+                                     "fused_rounds": 0,
+                                     "policy_match_rounds": 0,
+                                     # forward_batch consumed a fused
+                                     # round's speculative TX gather
+                                     # output (no gather launch needed)
+                                     "tx_spec_hits": 0}
 
     @property
     def data(self) -> np.ndarray:

@@ -24,6 +24,10 @@ from repro.kernels.selective_copy import (
 )
 from repro.kernels.selective_copy import policy_match as _polmatch_pallas
 from repro.kernels.selective_copy import selective_gather as _selgather_pallas
+from repro.kernels.selective_copy import fused_round as _fused_pallas
+from repro.kernels.selective_copy import (
+    fused_round_donated as _fused_pallas_donated,
+)
 
 # donated oracle entries: same jnp bodies, outer jit donates the pool arg —
 # the resident DevicePool's rounds keep one pool buffer instead of two
@@ -32,6 +36,10 @@ _selcopy_ref_donated = functools.partial(
 _selcopy_ref_donated_plain = _selcopy_ref_donated(_ref.selective_copy_ref)
 _selcopy_ref_donated_crypto = _selcopy_ref_donated(
     _ref.selective_copy_crypto_ref)
+_fused_ref = jax.jit(_ref.fused_round_ref, static_argnames=("meta_max",))
+_fused_ref_donated = jax.jit(_ref.fused_round_ref,
+                             static_argnames=("meta_max",),
+                             donate_argnums=(3,))
 
 
 def _on_tpu() -> bool:
@@ -121,23 +129,62 @@ def selective_gather(pool, tables, lengths, *, impl="auto", keystream=None):
 
 
 def policy_match(meta, meta_len, cond_off, cond_lo, cond_hi, *, impl="auto",
-                 keystream=None, live=None):
+                 keystream=None, live=None, payload=None, payload_len=None):
     """L7 policy-table first-match pass over one batched round's metadata
     block: [B, M] meta × dense [R, K] conditions → [B] first matching rule
     (R = no match). ``keystream`` (0 on plaintext lanes) fuses the hw-kTLS
     metadata decrypt into the match. ``live`` ([R] int32, the backend
     HealthTable rule mask; ``None`` = all live) masks dead rules out of
-    the scan. The routing-decision half of the in-data-plane policy
-    engine (:mod:`repro.core.policy` resolves actions host-side)."""
+    the scan. ``payload``/``payload_len`` ([B, W] plaintext first-page
+    window + [B] lengths) serve payload-prefix conditions (``cond_off <=
+    -2``); omitted, those conditions never match. The routing-decision
+    half of the in-data-plane policy engine (:mod:`repro.core.policy`
+    resolves actions host-side)."""
     impl = _resolve(impl)
     ks = None if keystream is None else jnp.asarray(keystream)
     lv = None if live is None else jnp.asarray(live, jnp.int32)
+    pw = None if payload is None else jnp.asarray(payload)
+    pln = None if payload_len is None else jnp.asarray(payload_len, jnp.int32)
     if impl == "ref":
         return _ref.policy_match_ref(meta, meta_len, cond_off, cond_lo,
-                                     cond_hi, ks, lv)
+                                     cond_hi, ks, lv, payload=pw,
+                                     payload_len=pln)
     return _polmatch_pallas(meta, meta_len, cond_off, cond_lo, cond_hi,
                             interpret=(impl == "interpret"), keystream=ks,
-                            live=lv)
+                            live=lv, payload=pw, payload_len=pln)
+
+
+def fused_round(stream, meta_len, total_len, pool, tables, *, meta_max,
+                impl="auto", keystream=None, tx_keystream=None,
+                cond_off=None, cond_lo=None, cond_hi=None, live=None,
+                meta_ks=None, n_buffers=0, donate_pool=False):
+    """The one-kernel scheduling round: anchor + hw-kTLS RX decrypt +
+    policy first-match (payload-prefix conditions included) + egress
+    gather in a SINGLE device launch against the resident pool (the pool's
+    last row must be the reserved scratch page). Returns ``(meta,
+    new_pool, verdict | None, out)``. ``tx_keystream`` speculatively
+    TX-encrypts the gather output for a hinted destination session;
+    ``n_buffers >= 2`` enables the kernel's internal DMA pipelining
+    (ignored by the oracle). ``donate_pool=True`` donates the pool through
+    the outer jit — one live pool buffer per round (see
+    DevicePool.fused_round_device)."""
+    impl = _resolve(impl)
+    ks = None if keystream is None else jnp.asarray(keystream)
+    tks = None if tx_keystream is None else jnp.asarray(tx_keystream)
+    mks = None if meta_ks is None else jnp.asarray(meta_ks)
+    lv = None if live is None else jnp.asarray(live, jnp.int32)
+    if impl == "ref":
+        entry = _fused_ref_donated if donate_pool else _fused_ref
+        return entry(stream, meta_len, total_len, pool, tables,
+                     meta_max=meta_max, keystream=ks, tx_keystream=tks,
+                     cond_off=cond_off, cond_lo=cond_lo, cond_hi=cond_hi,
+                     live=lv, meta_ks=mks)
+    entry = _fused_pallas_donated if donate_pool else _fused_pallas
+    return entry(stream, meta_len, total_len, pool, tables,
+                 keystream=ks, tx_keystream=tks, cond_off=cond_off,
+                 cond_lo=cond_lo, cond_hi=cond_hi, live=lv, meta_ks=mks,
+                 meta_max=meta_max, interpret=(impl == "interpret"),
+                 n_buffers=n_buffers)
 
 
 def mlstm_scan(q, k, v, log_i, log_f, *, chunk=64, impl="auto"):

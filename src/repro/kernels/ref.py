@@ -172,39 +172,105 @@ def selective_gather_ref(
 def policy_match_ref(
     meta: jax.Array,       # [B, M] int32 metadata tokens (round-padded)
     meta_len: jax.Array,   # [B] int32 valid metadata lengths
-    cond_off: jax.Array,   # [R, K] int32 condition offsets (-1 = padding)
+    cond_off: jax.Array,   # [R, K] int32 offsets (-1 pad; <= -2 payload)
     cond_lo: jax.Array,    # [R, K] int32 inclusive lower bounds
     cond_hi: jax.Array,    # [R, K] int32 inclusive upper bounds
     keystream: Optional[jax.Array] = None,   # [B, M] int32 or None
     live: Optional[jax.Array] = None,        # [R] int32 health mask or None
+    payload: Optional[jax.Array] = None,     # [B, W] first-page window
+    payload_len: Optional[jax.Array] = None, # [B] payload lengths
 ) -> jax.Array:
     """L7 policy table first-match pass (the in-data-plane routing
-    decision). A condition holds iff its offset is padding (< 0) or
-    ``offset < meta_len`` and ``lo <= meta[offset] <= hi``; a rule matches
-    iff all K conditions hold; the result is the FIRST matching rule per
-    message (rule order is priority), ``R`` when none match. ``keystream``
-    (0 on plaintext lanes) is XORed in before matching — the hw-kTLS
-    analogue matches against *decrypted* metadata without a separate
-    decrypt pass. ``live`` (the backend-health rule mask; 0 = every
-    backend of the rule is down) excludes dead rules from the first-match
-    scan so priority falls through in-plane. Returns [B] int32 rule
-    indices."""
+    decision). A condition holds iff its offset is the padding slot
+    (``-1``), or ``0 <= offset < meta_len`` and ``lo <= meta[offset] <=
+    hi``, or — *payload-prefix* conditions, ``offset <= -2`` encoding
+    first-anchored-page position ``-offset - 2`` — the position is inside
+    both the window and the payload and the window token is in bounds.
+    A rule matches iff all K conditions hold; the result is the FIRST
+    matching rule per message (rule order is priority), ``R`` when none
+    match. ``keystream`` (0 on plaintext lanes) is XORed in before
+    matching — the hw-kTLS analogue matches against *decrypted* metadata
+    without a separate decrypt pass. ``live`` (the backend-health rule
+    mask; 0 = every backend of the rule is down) excludes dead rules from
+    the first-match scan so priority falls through in-plane. ``payload``
+    is the [B, W] *plaintext* window of each message's first anchored
+    page; when omitted, payload-prefix conditions never hold. Returns [B]
+    int32 rule indices."""
     b, mm = meta.shape
     r, k = cond_off.shape
     m = meta if keystream is None else jnp.bitwise_xor(
         meta, keystream.astype(meta.dtype))
     vals = m[:, jnp.clip(cond_off, 0, mm - 1)]               # [B, R, K]
-    pad = cond_off < 0                                        # [R, K]
-    present = (~pad) & (cond_off[None] < meta_len[:, None, None]) \
+    pad = cond_off == -1                                      # [R, K]
+    present = (cond_off >= 0)[None] \
+        & (cond_off[None] < meta_len[:, None, None]) \
         & (cond_off[None] < mm)
     ok = pad[None] | (present & (vals >= cond_lo[None])
                       & (vals <= cond_hi[None]))
+    if payload is not None:
+        w = payload.shape[1]
+        ppos = -cond_off - 2                                  # [R, K]
+        pvals = payload[:, jnp.clip(ppos, 0, w - 1)]          # [B, R, K]
+        pay_ok = (cond_off <= -2)[None] \
+            & (ppos[None] < payload_len[:, None, None]) & (ppos < w)[None] \
+            & (pvals >= cond_lo[None]) & (pvals <= cond_hi[None])
+        ok = ok | pay_ok
     rule_ok = ok.all(axis=2)                                  # [B, R]
     if live is not None:
         rule_ok &= live.reshape(1, r) > 0
     ridx = jnp.arange(r, dtype=jnp.int32)
     return jnp.min(jnp.where(rule_ok, ridx[None, :], r),
                    axis=1).astype(jnp.int32)
+
+
+def fused_round_ref(
+    stream: jax.Array,     # [B, S] int32 token stream
+    meta_len: jax.Array,   # [B] int32
+    total_len: jax.Array,  # [B] int32
+    pool: jax.Array,       # [P+1, page] int32 (+ reserved scratch row)
+    tables: jax.Array,     # [B, pps] int32 page ids (-1 unused)
+    *,
+    meta_max: int,
+    keystream: Optional[jax.Array] = None,      # [B, S] hw-kTLS RX
+    tx_keystream: Optional[jax.Array] = None,   # [B, pps*page] hw-kTLS TX
+    cond_off: Optional[jax.Array] = None,       # [R, K] policy table
+    cond_lo: Optional[jax.Array] = None,
+    cond_hi: Optional[jax.Array] = None,
+    live: Optional[jax.Array] = None,           # [R] health column
+    meta_ks: Optional[jax.Array] = None,        # [B, meta_max] meta keystream
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array], jax.Array]:
+    """One-kernel scheduling round oracle: selective copy + hw-kTLS RX
+    decrypt + policy first-match (with payload-prefix conditions peeking
+    the first anchored page) + egress gather, composed from the per-pass
+    references. Returns ``(meta [B, meta_max], new_pool, verdict [B] |
+    None, out [B, pps*page])`` — the exact semantics
+    ``selective_copy.fused_round`` must reproduce."""
+    if keystream is None:
+        meta, new_pool = selective_copy_ref(
+            stream, meta_len, total_len, pool, tables, meta_max=meta_max)
+        plain = stream
+    else:
+        meta, new_pool = selective_copy_crypto_ref(
+            stream, meta_len, total_len, pool, tables, keystream,
+            meta_max=meta_max)
+        plain = jnp.bitwise_xor(stream, keystream.astype(stream.dtype))
+    plen = total_len - meta_len
+    verdict = None
+    if cond_off is not None:
+        b, s = stream.shape
+        page = pool.shape[1]
+        # first-anchored-page window: payload-relative positions [0, page)
+        # (clamped in-stream; lanes past the payload are gated off by the
+        # ppos < payload_len check inside the match)
+        idx = jnp.minimum(meta_len[:, None] + jnp.arange(page)[None, :], s - 1)
+        window = jnp.take_along_axis(plain, idx, axis=1)
+        mrow = meta if meta_ks is None else jnp.bitwise_xor(
+            meta, meta_ks.astype(meta.dtype))
+        verdict = policy_match_ref(mrow, meta_len, cond_off, cond_lo, cond_hi,
+                                   None, live, payload=window,
+                                   payload_len=plen)
+    out = selective_gather_ref(new_pool, tables, plen, tx_keystream)
+    return meta, new_pool, verdict, out
 
 
 def mlstm_scan_ref(q, k, v, log_i, log_f):

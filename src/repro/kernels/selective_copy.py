@@ -194,14 +194,54 @@ selective_copy_donated = jax.jit(_selective_copy_impl,
                                  donate_argnums=(3,))
 
 
-def _policy_kernel(mlen_ref, meta_ref, *rest, m: int, r: int, k: int,
-                   has_ks: bool, has_live: bool):
-    rest = list(rest)
-    ks_ref = rest.pop(0) if has_ks else None
-    off_ref, lo_ref, hi_ref = rest[:3]
-    rest = rest[3:]
-    live_ref = rest.pop(0) if has_live else None
-    (out_ref,) = rest
+#: policy condition-offset encoding (shared with repro.core.policy):
+#: ``-1`` is a padding slot (always true); ``<= -2`` is a *payload-prefix*
+#: condition matching first-anchored-page position ``-offset - 2``
+PAD_COND = -1
+PAYLOAD_COND_BASE = -2
+
+
+def _policy_rule_match(row, mlen, off, lo, hi, *, m: int, r: int, k: int,
+                       payload=None, plen=None, w: int = 0):
+    """Shared condition-evaluation body for the standalone policy kernel
+    and the fused round: metadata conditions gather ``row[off]`` via a
+    one-hot lane mask (no dynamic indexing); payload-prefix conditions
+    (``off <= -2``) gather position ``-off - 2`` of the first anchored
+    page window the same way. Returns the [R] rule_ok mask."""
+    lane = jax.lax.broadcasted_iota(jnp.int32, (r * k, m), 1)
+    oh = lane == off.reshape(r * k, 1)
+    vals = jnp.sum(jnp.where(oh, jnp.broadcast_to(row[None, :], (r * k, m)),
+                             0), axis=1).reshape(r, k)
+    pad = off == PAD_COND
+    present = (off >= 0) & (off < mlen) & (off < m)
+    ok = pad | (present & (vals >= lo) & (vals <= hi))
+    if payload is not None:
+        # payload-prefix conditions: position -off-2 of the message's
+        # first anchored page, gated on the window and the payload length
+        ppos = PAYLOAD_COND_BASE - off
+        plane = jax.lax.broadcasted_iota(jnp.int32, (r * k, w), 1)
+        poh = plane == ppos.reshape(r * k, 1)
+        pvals = jnp.sum(
+            jnp.where(poh, jnp.broadcast_to(payload[None, :], (r * k, w)), 0),
+            axis=1).reshape(r, k)
+        pay_ok = (off <= PAYLOAD_COND_BASE) & (ppos < plen) & (ppos < w) \
+            & (pvals >= lo) & (pvals <= hi)
+        ok = ok | pay_ok
+    return jnp.all(ok, axis=1)                             # [R]
+
+
+def _policy_kernel(*refs, m: int, r: int, k: int,
+                   has_ks: bool, has_live: bool, has_payload: bool, w: int):
+    refs = list(refs)
+    mlen_ref = refs.pop(0)
+    plen_ref = refs.pop(0) if has_payload else None
+    meta_ref = refs.pop(0)
+    ks_ref = refs.pop(0) if has_ks else None
+    off_ref, lo_ref, hi_ref = refs[:3]
+    refs = refs[3:]
+    live_ref = refs.pop(0) if has_live else None
+    payload_ref = refs.pop(0) if has_payload else None
+    (out_ref,) = refs
     b = pl.program_id(0)
     mlen = mlen_ref[b]
     row = meta_ref[0, :]                                   # [M]
@@ -209,19 +249,10 @@ def _policy_kernel(mlen_ref, meta_ref, *rest, m: int, r: int, k: int,
         # hw-kTLS: match against decrypted metadata — the keystream XOR
         # fused into the match pass, no separate decrypt
         row = jnp.bitwise_xor(row, ks_ref[0, :])
-    off = off_ref[:, :]                                    # [R, K]
-    lo = lo_ref[:, :]
-    hi = hi_ref[:, :]
-    # gather meta[off] for every condition without dynamic indexing: a
-    # one-hot lane mask per condition, reduced over the metadata lanes
-    lane = jax.lax.broadcasted_iota(jnp.int32, (r * k, m), 1)
-    oh = lane == off.reshape(r * k, 1)
-    vals = jnp.sum(jnp.where(oh, jnp.broadcast_to(row[None, :], (r * k, m)),
-                             0), axis=1).reshape(r, k)
-    pad = off < 0
-    present = (~pad) & (off < mlen) & (off < m)
-    ok = pad | (present & (vals >= lo) & (vals <= hi))
-    rule_ok = jnp.all(ok, axis=1)                          # [R]
+    rule_ok = _policy_rule_match(
+        row, mlen, off_ref[:, :], lo_ref[:, :], hi_ref[:, :], m=m, r=r, k=k,
+        payload=payload_ref[0, :] if has_payload else None,
+        plen=plen_ref[b] if has_payload else None, w=w)
     if has_live:
         # backend-health column: dead rules (every backend down) never
         # win the first-match scan — failover priority in-plane
@@ -234,13 +265,15 @@ def _policy_kernel(mlen_ref, meta_ref, *rest, m: int, r: int, k: int,
 def policy_match(
     meta: jax.Array,       # [B, M] int32 metadata tokens (round-padded)
     meta_len: jax.Array,   # [B] int32
-    cond_off: jax.Array,   # [R, K] int32 (-1 = padding slot)
+    cond_off: jax.Array,   # [R, K] int32 (-1 = padding; <= -2 payload-prefix)
     cond_lo: jax.Array,    # [R, K] int32
     cond_hi: jax.Array,    # [R, K] int32
     *,
     interpret: bool = False,
     keystream: jax.Array = None,   # [B, M] int32 (hw-kTLS) or None
     live: jax.Array = None,        # [R] int32 backend-health mask or None
+    payload: jax.Array = None,     # [B, W] int32 first-page window or None
+    payload_len: jax.Array = None, # [B] int32 payload lengths (with payload)
 ) -> jax.Array:
     """L7 policy-table first-match kernel — the in-data-plane routing
     decision, fused into the batched metadata pass. One grid step per
@@ -251,19 +284,29 @@ def policy_match(
     hw-kTLS rounds match against decrypted metadata with zero extra
     passes. The optional ``live`` operand ([R] int32, the HealthTable
     rule mask) masks dead rules out of the first-match scan — backend
-    failover priority resolved in-plane. Touches only [B, M] metadata and
-    the [R, K] table — never the payload pool — so the hot path performs
-    no pool-sized copy by construction (gated in check_kernel_parity).
-    Matches ``kernels.ref.policy_match_ref``. Returns [B] int32."""
+    failover priority resolved in-plane. The optional ``payload`` operand
+    ([B, W] plaintext window of each message's first anchored page, with
+    ``payload_len``) serves *payload-prefix* conditions (``cond_off <=
+    -2`` encodes page position ``-cond_off - 2``); without it those
+    conditions simply never match. Touches only [B, M] metadata, the
+    [R, K] table, and the page-sized window — never the payload pool — so
+    the hot path performs no pool-sized copy by construction (gated in
+    check_kernel_parity). Matches ``kernels.ref.policy_match_ref``.
+    Returns [B] int32."""
     b, m = meta.shape
     r, k = cond_off.shape
     has_ks = keystream is not None
     if has_ks:
         assert keystream.shape == meta.shape, (keystream.shape, meta.shape)
     has_live = live is not None
+    has_payload = payload is not None
+    w = payload.shape[1] if has_payload else 0
+    if has_payload:
+        assert payload.shape[0] == b and payload_len is not None, \
+            (payload.shape, b)
 
-    meta_spec = pl.BlockSpec((1, m), lambda b_, ml: (b_, 0))
-    table_spec = pl.BlockSpec((r, k), lambda b_, ml: (0, 0))
+    meta_spec = pl.BlockSpec((1, m), lambda b_, *_: (b_, 0))
+    table_spec = pl.BlockSpec((r, k), lambda b_, *_: (0, 0))
     in_specs = [meta_spec]
     operands = [meta]
     if has_ks:
@@ -273,21 +316,27 @@ def policy_match(
     operands += [cond_off, cond_lo, cond_hi]
     if has_live:
         assert live.shape == (r,), (live.shape, r)
-        in_specs.append(pl.BlockSpec((1, r), lambda b_, ml: (0, 0)))
+        in_specs.append(pl.BlockSpec((1, r), lambda b_, *_: (0, 0)))
         operands.append(jnp.asarray(live, jnp.int32).reshape(1, r))
+    if has_payload:
+        in_specs.append(pl.BlockSpec((1, w), lambda b_, *_: (b_, 0)))
+        operands.append(payload)
+        prefetch = (meta_len, jnp.asarray(payload_len, jnp.int32))
+    else:
+        prefetch = (meta_len,)
 
     out = pl.pallas_call(
         functools.partial(_policy_kernel, m=m, r=r, k=k, has_ks=has_ks,
-                          has_live=has_live),
+                          has_live=has_live, has_payload=has_payload, w=w),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=len(prefetch),
             grid=(b,),
             in_specs=in_specs,
-            out_specs=pl.BlockSpec((1, 1), lambda b_, ml: (b_, 0)),
+            out_specs=pl.BlockSpec((1, 1), lambda b_, *_: (b_, 0)),
         ),
         out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
         interpret=interpret,
-    )(meta_len, *operands)
+    )(*prefetch, *operands)
     return out[:, 0]
 
 
@@ -363,3 +412,299 @@ def selective_gather(
         interpret=interpret,
     )(lengths, tables, *operands)
     return out
+
+
+def _fused_round_kernel(mlen_ref, tlen_ref, tables_ref, *refs,
+                        page: int, s: int, meta_max: int, b_rows: int,
+                        r: int, k: int, has_ks: bool, has_txks: bool,
+                        has_policy: bool, has_live: bool, has_meta_ks: bool,
+                        n_buffers: int):
+    refs = list(refs)
+    stream_ref = refs.pop(0)
+    ks_ref = refs.pop(0) if has_ks else None
+    txks_ref = refs.pop(0) if has_txks else None
+    pool_in_ref = refs.pop(0)
+    off_ref = lo_ref = hi_ref = metaks_ref = live_ref = None
+    if has_policy:
+        off_ref, lo_ref, hi_ref = refs[:3]
+        refs = refs[3:]
+        metaks_ref = refs.pop(0) if has_meta_ks else None
+        live_ref = refs.pop(0) if has_live else None
+    meta_ref = refs.pop(0)
+    pool_ref = refs.pop(0)
+    out_ref = refs.pop(0)
+    verdict_ref = refs.pop(0) if has_policy else None
+    stream_buf = stream_sem = ks_buf = ks_sem = None
+    if n_buffers:
+        stream_buf, stream_sem = refs.pop(0), refs.pop(0)
+        if has_ks:
+            ks_buf, ks_sem = refs.pop(0), refs.pop(0)
+    assert not refs, refs
+
+    b = pl.program_id(0)
+    j = pl.program_id(1)   # 0 = metadata+policy step; j >= 1 = payload page j-1
+    mlen = mlen_ref[b]
+    tlen = tlen_ref[b]
+
+    if n_buffers:
+        # row-level DMA staging: the [1, S] stream row (and its keystream
+        # row) for batch row b + D - 1 is prefetched from off-chip memory
+        # into VMEM slot (b + D - 1) % D while row b computes — metadata
+        # prefetch for tile i+1 overlaps compute on tile i. Slot reuse is
+        # safe under the sequential grid: row b + D - 1 lands in slot
+        # (b - 1) % D, whose previous owner (row b - 1) ran its last grid
+        # step before (b, 0) executes.
+        def _start(row):
+            slot = row % n_buffers
+            pltpu.make_async_copy(stream_ref.at[pl.ds(row, 1), :],
+                                  stream_buf.at[slot],
+                                  stream_sem.at[slot]).start()
+            if has_ks:
+                pltpu.make_async_copy(ks_ref.at[pl.ds(row, 1), :],
+                                      ks_buf.at[slot],
+                                      ks_sem.at[slot]).start()
+
+        def _wait(row):
+            slot = row % n_buffers
+            pltpu.make_async_copy(stream_ref.at[pl.ds(row, 1), :],
+                                  stream_buf.at[slot],
+                                  stream_sem.at[slot]).wait()
+            if has_ks:
+                pltpu.make_async_copy(ks_ref.at[pl.ds(row, 1), :],
+                                      ks_buf.at[slot],
+                                      ks_sem.at[slot]).wait()
+
+        @pl.when(j == 0)
+        def _dma():
+            @pl.when(b == 0)
+            def _warm_up():
+                for i in range(min(n_buffers - 1, b_rows)):
+                    _start(i)
+
+            nxt = b + n_buffers - 1
+
+            @pl.when(nxt < b_rows)
+            def _prefetch_ahead():
+                _start(nxt)
+
+            _wait(b)
+
+    def _load_row(start, width, ks=False):
+        # one row window [start, start+width) of the stream (or keystream):
+        # from this row's VMEM staging slot when DMA-pipelined, else from
+        # the blocked operand directly
+        if n_buffers:
+            buf = ks_buf if ks else stream_buf
+            return pl.load(buf, (pl.dslice(b % n_buffers, 1), pl.dslice(0, 1),
+                                 pl.dslice(start, width)))[0, 0]
+        ref = ks_ref if ks else stream_ref
+        return pl.load(ref, (pl.dslice(0, 1), pl.dslice(start, width)))[0]
+
+    # ---- anchor + egress gather (j >= 1; j == 0 routed to scratch) ----
+    jj = jnp.maximum(j - 1, 0)
+    pid = tables_ref[b, jj]
+    start = jnp.minimum(mlen + jj * page, s - page)  # in-bounds (caller pads S)
+    toks = _load_row(start, page)
+    if has_ks:
+        # hw-kTLS RX: decrypt on the fly, inside the one placement pass
+        toks = jnp.bitwise_xor(toks, _load_row(start, page, ks=True))
+    rel = jj * page + jax.lax.broadcasted_iota(jnp.int32, (page,), 0)
+    valid = (j > 0) & (pid >= 0) & (rel + mlen < tlen)
+    pool_ref[0, :] = jnp.where(valid, toks, pool_in_ref[0, :])
+
+    @pl.when(j > 0)
+    def _gather():
+        # egress half fused in: the freshly anchored tokens are still in
+        # registers, so the gather re-reads nothing from the pool. Anchor
+        # validity (rel + mlen < tlen) IS gather validity (rel < plen).
+        gtoks = toks
+        if has_txks:
+            # speculative hw-kTLS TX encrypt for the hinted destination
+            gtoks = jnp.bitwise_xor(gtoks, txks_ref[0, :])
+        out_ref[0, :] = jnp.where(valid, gtoks, 0)
+
+    @pl.when(j == 0)
+    def _meta():
+        idx = jax.lax.broadcasted_iota(jnp.int32, (meta_max,), 0)
+        window = _load_row(0, meta_max)
+        meta_ref[0, :] = jnp.where(idx < mlen, window, 0)
+        if has_policy:
+            plen = tlen - mlen
+            row = window
+            if has_meta_ks:
+                row = jnp.bitwise_xor(row, metaks_ref[0, :])
+            # payload-prefix window: the first anchored page, decrypted
+            # with the same rx-keystream lanes the anchoring step consumes.
+            # Whenever plen >= 1 the caller's S >= mlen + page invariant
+            # makes the clamp a no-op; at plen == 0 the ppos < plen gate
+            # discards the window, so its content is irrelevant.
+            pstart = jnp.minimum(mlen, s - page)
+            prow = _load_row(pstart, page)
+            if has_ks:
+                prow = jnp.bitwise_xor(prow, _load_row(pstart, page, ks=True))
+            rule_ok = _policy_rule_match(
+                row, mlen, off_ref[:, :], lo_ref[:, :], hi_ref[:, :],
+                m=meta_max, r=r, k=k, payload=prow, plen=plen, w=page)
+            if has_live:
+                rule_ok &= live_ref[0, :] > 0
+            ridx = jax.lax.broadcasted_iota(jnp.int32, (r,), 0)
+            verdict_ref[0, 0] = jnp.min(jnp.where(rule_ok, ridx, r))
+
+
+def _fused_round_impl(
+    stream: jax.Array,     # [B, S] int32
+    meta_len: jax.Array,   # [B] int32
+    total_len: jax.Array,  # [B] int32
+    pool: jax.Array,       # [P+1, page] int32; last row = reserved scratch
+    tables: jax.Array,     # [B, pps] int32
+    keystream: jax.Array = None,      # [B, S] int32 hw-kTLS RX or None
+    tx_keystream: jax.Array = None,   # [B, pps*page] int32 hw-kTLS TX or None
+    cond_off: jax.Array = None,       # [R, K] int32 policy table or None
+    cond_lo: jax.Array = None,
+    cond_hi: jax.Array = None,
+    live: jax.Array = None,           # [R] int32 health column or None
+    meta_ks: jax.Array = None,        # [B, meta_max] int32 meta ks or None
+    *,
+    meta_max: int,
+    interpret: bool = False,
+    n_buffers: int = 0,
+):
+    """The **one-kernel scheduling round**: a single ``pallas_call`` chains
+    selective-copy anchoring, the hw-kTLS keystream XOR, the policy-table
+    first-match pass (live health column + payload-prefix conditions
+    included), and the egress gather — one launch per round instead of
+    three, against the resident pool. Returns ``(meta [B, meta_max],
+    new_pool, verdict [B] | None, out [B, pps*page])``; matches
+    ``kernels.ref.fused_round_ref`` bit-for-bit.
+
+    Grid ``(B, 1 + pps)``: step ``j == 0`` of each row compacts metadata
+    AND produces the policy verdict (the first-page window is loaded once
+    and shared); steps ``j >= 1`` anchor payload page ``j - 1`` in place
+    (pool aliased/donated, scratch-row routing — no pool-sized copy) and
+    write the same tokens, optionally TX-encrypted, to the gather output
+    while they are still in registers.
+
+    ``n_buffers >= 2`` enables DMA pipelining: the stream (and RX
+    keystream) operands move to off-chip ``ANY`` memory and each [1, S]
+    row is staged into one of ``n_buffers`` VMEM slots by an async copy
+    issued one row ahead of compute (double/quad buffering; depth chosen
+    by :mod:`repro.kernels.dma_profile`). ``n_buffers == 0`` compiles the
+    plain blocked layout.
+
+    Caller invariants (both hold for `_recv_batch_device` streams and
+    ``testing.fused_round_case``): ``S`` is page-aligned with ``S >=
+    meta_max``, and ``S >= meta_len[i] + pps_i * page`` per row, so the
+    page-window clamp never fires on a lane that passes the valid gate."""
+    b, s = stream.shape
+    p_ext, page = pool.shape
+    pps = tables.shape[1]
+    assert s % page == 0 and s >= page and s >= meta_max, (s, page, meta_max)
+    assert pps >= 1, "fused_round needs >= 1 table column (pad tables)"
+    assert n_buffers == 0 or n_buffers >= 2, n_buffers
+    has_ks = keystream is not None
+    has_txks = tx_keystream is not None
+    has_policy = cond_off is not None
+    has_live = live is not None
+    has_meta_ks = meta_ks is not None
+    if has_ks:
+        assert keystream.shape == stream.shape, (keystream.shape, stream.shape)
+    if has_txks:
+        assert tx_keystream.shape == (b, pps * page), tx_keystream.shape
+    r = k = 0
+    if has_policy:
+        r, k = cond_off.shape
+        if has_meta_ks:
+            assert meta_ks.shape == (b, meta_max), (meta_ks.shape, b, meta_max)
+    else:
+        assert not (has_live or has_meta_ks)
+    scratch = p_ext - 1
+
+    def _pool_index(b_, j, ml, tl, tbl):
+        # invalid table entries (-1) and the metadata step are routed to the
+        # scratch row so no real page is ever revisited by a non-owner step
+        pid = tbl[b_, jnp.maximum(j - 1, 0)]
+        return (jnp.where((j == 0) | (pid < 0), scratch, pid), 0)
+
+    if n_buffers:
+        # stream rows live off-chip and are staged by the kernel's own DMAs
+        stream_spec = pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)
+    else:
+        stream_spec = pl.BlockSpec((1, s), lambda b_, j, ml, tl, tbl: (b_, 0))
+    row_spec = pl.BlockSpec((1, meta_max), lambda b_, j, ml, tl, tbl: (b_, 0))
+    gather_spec = pl.BlockSpec(
+        (1, page), lambda b_, j, ml, tl, tbl: (b_, jnp.maximum(j - 1, 0)))
+    in_specs = [stream_spec]
+    operands = [stream]
+    if has_ks:
+        in_specs.append(stream_spec)        # keystream rides the stream layout
+        operands.append(keystream)
+    if has_txks:
+        in_specs.append(gather_spec)        # payload-relative TX keystream
+        operands.append(tx_keystream)
+    in_specs.append(pl.BlockSpec((1, page), _pool_index))
+    operands.append(pool)
+    # pool operand index counts the 3 scalar-prefetch args
+    pool_operand = 3 + len(operands) - 1
+    if has_policy:
+        table_spec = pl.BlockSpec((r, k), lambda b_, j, ml, tl, tbl: (0, 0))
+        in_specs += [table_spec, table_spec, table_spec]
+        operands += [cond_off, cond_lo, cond_hi]
+        if has_meta_ks:
+            in_specs.append(row_spec)
+            operands.append(meta_ks)
+        if has_live:
+            assert live.shape == (r,), (live.shape, r)
+            in_specs.append(
+                pl.BlockSpec((1, r), lambda b_, j, ml, tl, tbl: (0, 0)))
+            operands.append(jnp.asarray(live, jnp.int32).reshape(1, r))
+
+    out_specs = [row_spec,
+                 pl.BlockSpec((1, page), _pool_index),
+                 gather_spec]
+    out_shape = [jax.ShapeDtypeStruct((b, meta_max), stream.dtype),
+                 jax.ShapeDtypeStruct((p_ext, page), pool.dtype),
+                 jax.ShapeDtypeStruct((b, pps * page), stream.dtype)]
+    if has_policy:
+        out_specs.append(
+            pl.BlockSpec((1, 1), lambda b_, j, ml, tl, tbl: (b_, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((b, 1), jnp.int32))
+    scratch_shapes = []
+    if n_buffers:
+        scratch_shapes += [pltpu.VMEM((n_buffers, 1, s), stream.dtype),
+                           pltpu.SemaphoreType.DMA((n_buffers,))]
+        if has_ks:
+            scratch_shapes += [pltpu.VMEM((n_buffers, 1, s), stream.dtype),
+                               pltpu.SemaphoreType.DMA((n_buffers,))]
+
+    res = pl.pallas_call(
+        functools.partial(_fused_round_kernel, page=page, s=s,
+                          meta_max=meta_max, b_rows=b, r=r, k=k,
+                          has_ks=has_ks, has_txks=has_txks,
+                          has_policy=has_policy, has_live=has_live,
+                          has_meta_ks=has_meta_ks, n_buffers=n_buffers),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(b, 1 + pps),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch_shapes,
+        ),
+        out_shape=out_shape,
+        input_output_aliases={pool_operand: 1},
+        interpret=interpret,
+    )(meta_len, total_len, tables, *operands)
+    verdict = res[3][:, 0] if has_policy else None
+    return res[0], res[1], verdict, res[2]
+
+
+_FUSED_STATICS = ("meta_max", "interpret", "n_buffers")
+
+#: default fused-round entry — pool buffer NOT donated (parity checks)
+fused_round = jax.jit(_fused_round_impl, static_argnames=_FUSED_STATICS)
+
+#: donating fused-round entry — the pool argument (index 3) is donated so
+#: the resident device pool is updated truly in place across one-kernel
+#: rounds (see DevicePool.fused_round_device)
+fused_round_donated = jax.jit(_fused_round_impl,
+                              static_argnames=_FUSED_STATICS,
+                              donate_argnums=(3,))

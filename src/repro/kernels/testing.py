@@ -117,3 +117,58 @@ def policy_live_column(rng: np.random.Generator, r: int) -> jnp.ndarray:
     return jnp.array(live)
 
 
+def policy_payload_case(rng: np.random.Generator, b: int = 4,
+                        meta_max: int = 16, r: int = 6, k: int = 3,
+                        w: int = 8) -> Tuple:
+    """A :func:`policy_case` where ~a third of the conditions are remapped
+    to *payload-prefix* slots (``offset <= -2`` encodes first-anchored-page
+    position ``-offset - 2``, in-window and past-window positions both
+    drawn), plus the [B, W] plaintext first-page window and the [B]
+    payload lengths the match gates on. Returns (meta, meta_len, cond_off,
+    cond_lo, cond_hi, keystream, payload, payload_len)."""
+    meta, ml, off, lo, hi, ks = policy_case(rng, b=b, meta_max=meta_max,
+                                            r=r, k=k)
+    off = np.array(off)
+    sel = rng.random((r, k)) < 0.35
+    ppos = rng.integers(0, w + 3, (r, k))
+    off = np.where(sel, -2 - ppos, off).astype(np.int32)
+    payload = rng.integers(0, 200, (b, w)).astype(np.int32)
+    payload_len = rng.integers(0, w + 1, b).astype(np.int32)
+    return (meta, ml, jnp.array(off), lo, hi, ks,
+            jnp.array(payload), jnp.array(payload_len))
+
+
+def fused_round_case(rng: np.random.Generator, b: int = 2, page: int = 8,
+                     pps: int = 4, meta_max: int = 16, r: int = 6,
+                     k: int = 3) -> dict:
+    """Full operand bundle for the one-kernel fused round: a crypto
+    selective-copy case plus a payload-relative TX keystream (zeroed past
+    each payload length), a policy table mixing metadata / padding /
+    payload-prefix conditions, a live health column, and a
+    standalone-contract metadata keystream. Preserves the fused-round
+    caller invariant ``S = meta_max + pps*page >= meta_len + pps*page``.
+    Returned as a dict keyed by :func:`repro.kernels.ops.fused_round`
+    argument names (drop keys to exercise the optional-operand matrix)."""
+    stream, ml, tl, pool, tables, ks = selcopy_crypto_case(
+        rng, b=b, page=page, pps=pps, meta_max=meta_max)
+    mlv, tlv = np.array(ml), np.array(tl)
+    plen = tlv - mlv
+    tx = rng.integers(0, 1 << 31, (b, pps * page)).astype(np.int32)
+    pos = np.arange(pps * page)[None, :]
+    tx = np.where(pos < plen[:, None], tx, 0).astype(np.int32)
+    cond_off = rng.integers(-1, meta_max + 3, (r, k)).astype(np.int32)
+    pay = rng.random((r, k)) < 0.3
+    ppos = rng.integers(0, page + 3, (r, k))
+    cond_off = np.where(pay, -2 - ppos, cond_off).astype(np.int32)
+    lo = rng.integers(0, 1200, (r, k)).astype(np.int32)
+    width = rng.integers(0, 800, (r, k)).astype(np.int32)
+    mks = rng.integers(0, 1 << 31, (b, meta_max)).astype(np.int32)
+    mks = np.where(np.arange(meta_max)[None, :] < mlv[:, None], mks, 0)
+    return dict(stream=stream, meta_len=ml, total_len=tl, pool=pool,
+                tables=tables, keystream=ks, tx_keystream=jnp.array(tx),
+                cond_off=jnp.array(cond_off), cond_lo=jnp.array(lo),
+                cond_hi=jnp.array((lo + width).astype(np.int32)),
+                live=policy_live_column(rng, r),
+                meta_ks=jnp.array(mks.astype(np.int32)))
+
+

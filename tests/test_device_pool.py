@@ -147,13 +147,15 @@ def test_resident_hw_ktls_matches_scalar(impl):
 def test_forward_batch_device_gather_matches_host_gather():
     """The fused egress gather must hand each transmit the exact bytes
     read_payload would compose — wires identical between impl='host' and
-    the kernel path, same stack."""
+    the kernel path, same stack. The round must exceed the small-gather
+    threshold (tiny rounds intentionally stay host-side: per-launch
+    overhead beats a few rows' copy cost)."""
     for impl in ("ref", "interpret"):
         stack = _stack()
         srcs, sends = [], []
         rng = np.random.default_rng(3)
         payloads = []
-        for _ in range(3):
+        for _ in range(6):
             src, dst = stack.socket_pair("length-prefixed")
             p = rng.integers(1000, 2000, 56)
             payloads.append(p)
@@ -203,10 +205,13 @@ def test_device_rounds_materialize_lazily_for_host_views():
     assert np.array_equal(pool.data, stack_h.pool.data)
 
 
-def test_host_writes_interleave_with_device_rounds():
+def test_host_writes_interleave_with_device_rounds(monkeypatch):
     """Scalar (host-path) anchoring between device rounds: host-dirty rows
     upload lazily when a later device gather needs them; payloads stay
-    byte-exact in both directions."""
+    byte-exact in both directions. (The small-gather shortcut is pinned
+    off: this test drives single-row rounds at the device plane on
+    purpose.)"""
+    monkeypatch.setattr("repro.core.stack._SMALL_GATHER_ROWS", 0)
     stack = _stack(n_shards=1, pages_per_shard=8)
     rng = np.random.default_rng(13)
     # round 1: device round anchors + forwards (pool becomes resident)
@@ -233,10 +238,12 @@ def test_host_writes_interleave_with_device_rounds():
     assert stack.counters.device_fallbacks == 0
 
 
-def test_out_of_range_rows_bounce_round_to_host():
+def test_out_of_range_rows_bounce_round_to_host(monkeypatch):
     """Rows holding int64 tokens outside int32 stay host-truth; a device
     round that would overwrite or gather them bounces to the int64-exact
-    host path and counts the fallback — values survive exactly."""
+    host path and counts the fallback — values survive exactly. (Small-
+    gather shortcut pinned off: the bounce is the behavior under test.)"""
+    monkeypatch.setattr("repro.core.stack._SMALL_GATHER_ROWS", 0)
     stack = _stack(n_shards=1, pages_per_shard=6)
     huge = np.array([2 ** 40 + 5, -(2 ** 35), 2 ** 31, 7] * 8, np.int64)
     big = stack.socket("length-prefixed")
